@@ -1,0 +1,153 @@
+"""Shared benchmark plumbing: instances, method registry, agent cache.
+
+Scales: "smoke" (seconds, CI), "paper" (minutes, default for
+`python -m benchmarks.run`), "full" (set REPRO_BENCH_SCALE=full).
+RL agents are pretrained once per (index, scale) and cached on disk so the
+per-figure benchmarks measure *tuning*, not training (the paper separates
+these too -- Table 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core.ddpg import DDPGConfig
+from repro.core.litune import LITune, LITuneConfig
+from repro.core.maml import MetaConfig
+from repro.index import env as E
+from repro.index.workloads import sample_keys, wr_workload
+from repro.tuning.base import run_tuner
+from repro.tuning.baselines import make_baseline
+from repro.tuning.ddpg_vanilla import VanillaConfig, VanillaDDPGTuner
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "/tmp/repro_bench_cache")
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "paper")
+
+WORKLOADS = {"balanced": 1.0, "read_heavy": 1.0 / 3.0, "write_heavy": 3.0}
+DATASETS = ("osm", "books", "fb", "mix")
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchScale:
+    n_keys: int
+    n_queries: int
+    pretrain_outer: int
+    vanilla_episodes: int
+    budget_steps: int
+    extensive_steps: int
+    n_seeds: int
+
+
+SCALES = {
+    "smoke": BenchScale(2048, 2048, 2, 2, 5, 8, 1),
+    "paper": BenchScale(4096, 4096, 8, 10, 10, 30, 2),
+    "full": BenchScale(8192, 8192, 24, 30, 25, 50, 5),
+}
+
+
+def bench_scale() -> BenchScale:
+    return SCALES[SCALE]
+
+
+def make_instance(index_type: str, dataset: str, wr: float, seed: int = 0):
+    sc = bench_scale()
+    key = jax.random.PRNGKey(seed * 7919 + hash(dataset) % 1000)
+    data = sample_keys(key, sc.n_keys, dataset)
+    workload, _ = wr_workload(jax.random.fold_in(key, 1), data, wr,
+                              total=sc.n_queries, dist=dataset)
+    env_cfg = E.EnvConfig(index_type=index_type)
+    return env_cfg, data, workload
+
+
+# ------------------------------------------------------------------ agents
+def litune_config(index_type: str, safe_rl=True, use_o2=True) -> LITuneConfig:
+    return LITuneConfig(
+        index_type=index_type, episode_len=bench_scale().budget_steps,
+        lstm_hidden=64, mlp_hidden=128,
+        ddpg=DDPGConfig(batch_size=32, seq_len=4, burn_in=1),
+        meta=MetaConfig(meta_batch=2, inner_episodes=1, inner_updates=6),
+        safe_rl=safe_rl, use_o2=use_o2)
+
+
+def get_litune(index_type: str, seed: int = 0, safe_rl=True,
+               tag: str = "") -> LITune:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(
+        CACHE_DIR, f"litune_{index_type}_{SCALE}_s{seed}"
+        f"{'_unsafe' if not safe_rl else ''}{tag}.pkl")
+    if os.path.exists(path):
+        return LITune.load(path)
+    tuner = LITune(litune_config(index_type, safe_rl=safe_rl), seed=seed)
+    tuner.pretrain(n_outer=bench_scale().pretrain_outer, seed=seed)
+    tuner.save(path)
+    return tuner
+
+
+def get_vanilla(index_type: str, seed: int = 0) -> VanillaDDPGTuner:
+    # no disk cache (pickling is cheap to skip; pretrain is short)
+    cfg = VanillaConfig(index_type=index_type,
+                        episode_len=bench_scale().budget_steps,
+                        lstm_hidden=64, mlp_hidden=128,
+                        ddpg=DDPGConfig(use_lstm=False, batch_size=32,
+                                        seq_len=4, burn_in=1))
+    t = VanillaDDPGTuner(cfg, seed=seed)
+    t.pretrain(n_episodes=bench_scale().vanilla_episodes)
+    return t
+
+
+# ------------------------------------------------------------------ runs
+def run_method(method: str, index_type: str, dataset: str, wr: float,
+               budget: int, seed: int = 0) -> dict:
+    """Unified: returns {best, default, runtimes(best-so-far), failures}."""
+    env_cfg, data, workload = make_instance(index_type, dataset, wr, seed)
+    if method in ("random", "grid", "heuristic", "smbo"):
+        space = env_cfg.space
+        res = run_tuner(make_baseline(method, space, seed), env_cfg, data,
+                        workload, wr, budget_evals=budget)
+        return {"method": method, "best": res.best_runtime_ns,
+                "default": res.default_runtime_ns,
+                "best_so_far": list(res.best_so_far),
+                "failures": res.failures, "wall_s": res.wall_s}
+    if method == "default":
+        env_cfg2, data, workload = make_instance(index_type, dataset, wr,
+                                                 seed)
+        from repro.index.env import evaluate_params
+        import jax.numpy as jnp
+        mod = __import__(f"repro.index.{index_type}",
+                         fromlist=["DEFAULTS"])
+        draw = {k: jnp.float32(v) for k, v in mod.DEFAULTS.items()}
+        rt, _, viol = evaluate_params(env_cfg2, draw, data, workload, wr)
+        return {"method": "default", "best": float(rt), "default": float(rt),
+                "best_so_far": [float(rt)] * budget, "failures": 0,
+                "wall_s": 0.0}
+    if method == "ddpg":
+        t0 = time.time()
+        agent = get_vanilla(index_type, seed)
+        res = agent.tune(data, workload, wr, budget_steps=budget)
+        bsf = list(np.minimum.accumulate(res["runtimes"]))
+        bsf += [bsf[-1]] * (budget - len(bsf))
+        return {"method": "ddpg", "best": res["best_runtime_ns"],
+                "default": res["r0_ns"], "best_so_far": bsf,
+                "failures": res["violations"], "wall_s": time.time() - t0}
+    if method.startswith("litune"):
+        safe = "nosafe" not in method
+        t0 = time.time()
+        tuner = get_litune(index_type, seed, safe_rl=safe)
+        res = tuner.tune(data, workload, wr, budget_steps=budget)
+        bsf = list(np.minimum.accumulate(res["runtimes"]))
+        bsf += [bsf[-1]] * max(0, budget - len(bsf))
+        return {"method": method, "best": res["best_runtime_ns"],
+                "default": res["r0_ns"], "best_so_far": bsf,
+                "failures": res["violations"], "wall_s": time.time() - t0}
+    raise ValueError(method)
+
+
+METHODS = ("default", "random", "grid", "heuristic", "smbo", "ddpg", "litune")
+
+
+def csv_row(*fields) -> str:
+    return ",".join(str(f) for f in fields)

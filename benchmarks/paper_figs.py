@@ -1,0 +1,299 @@
+"""Benchmarks mirroring the paper's tables/figures (one function each).
+
+Each returns a list of CSV lines; benchmarks/run.py drives them.  Mapping:
+  fig1_surface        Fig 1(a)  2-parameter performance surface (ALEX)
+  fig1_speedup        Fig 1(b)  optimal-vs-default speedup across datasets
+  fig2_impact         Fig 2     per-parameter impact scores
+  fig5_efficiency     Fig 5     best-found vs tuning-step budget
+  fig6_7_extensive    Fig 6/7   extensive-tuning runtime + throughput
+  fig8_radar          Fig 8     5-attribute method comparison (CARMI+MIX)
+  fig9_10_stream      Fig 9/10  online tuning on data streams, O2 ablation
+  fig11_safety        Fig 11    dangerous-zone exploration + failures
+  fig12_stability     Fig 12    training stability +- Safe-RL
+  table3_costs        Table 3   training/tuning cost vs sampling ratio
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (DATASETS, WORKLOADS, bench_scale, csv_row,
+                               get_litune, litune_config, make_instance,
+                               run_method)
+from repro.core.spaces import alex_space
+from repro.index import env as E
+from repro.index.env import evaluate_params
+from repro.index.alex import DEFAULTS as ALEX_DEFAULTS
+
+
+# ------------------------------------------------------------ Fig 1(a)
+def fig1_surface() -> list[str]:
+    """Sweep (kmax_ood_keys_log2 x density_init) on ALEX+MIX, runtime ns."""
+    env_cfg, data, workload = make_instance("alex", "mix", 1.0)
+    rows = [csv_row("fig1_surface", "kmax_log2", "density", "runtime_ns")]
+    for kmax in (2, 6, 10, 14):
+        for dens in (0.5, 0.65, 0.8, 0.95):
+            p = {k: jnp.float32(v) for k, v in ALEX_DEFAULTS.items()}
+            p["kmax_ood_keys_log2"] = jnp.float32(kmax)
+            p["density_init"] = jnp.float32(dens)
+            rt, _, _ = evaluate_params(env_cfg, p, data, workload, 1.0)
+            rows.append(csv_row("fig1_surface", kmax, dens,
+                                f"{float(rt):.1f}"))
+    return rows
+
+
+# ------------------------------------------------------------ Fig 1(b)
+def fig1_speedup() -> list[str]:
+    sc = bench_scale()
+    rows = [csv_row("fig1_speedup", "index", "dataset", "speedup_x")]
+    for index in ("alex", "carmi"):
+        for ds in DATASETS:
+            r = run_method("litune", index, ds, 1.0, sc.extensive_steps)
+            rows.append(csv_row("fig1_speedup", index, ds,
+                                f"{r['default'] / r['best']:.2f}"))
+    return rows
+
+
+# ------------------------------------------------------------ Fig 2
+def fig2_impact() -> list[str]:
+    """Impact score: improvement from tuning ONE parameter (others default)
+    relative to full tuning.  Paper reports 10-25% with no dominant dim."""
+    env_cfg, data, workload = make_instance("alex", "mix", 1.0)
+    space = alex_space()
+    default = {k: jnp.float32(v) for k, v in ALEX_DEFAULTS.items()}
+    r_def, _, _ = evaluate_params(env_cfg, default, data, workload, 1.0)
+    r_def = float(r_def)
+
+    # full tuning reference: random search over all dims
+    rng = np.random.default_rng(0)
+    best_full = r_def
+    for _ in range(60):
+        raw = space.random_raw(rng)
+        rt, _, v = evaluate_params(
+            env_cfg, {k: jnp.float32(x) for k, x in raw.items()}, data,
+            workload, 1.0)
+        if float(v["c_m"]) + float(v["c_r"]) == 0:
+            best_full = min(best_full, float(rt))
+    full_gain = max(r_def - best_full, 1e-9)
+
+    rows = [csv_row("fig2_impact", "parameter", "impact_pct")]
+    for i, name in enumerate(space.names):
+        best_one = r_def
+        lo, hi = float(space.lows[i]), float(space.highs[i])
+        for val in np.linspace(lo, hi, 8):
+            p = dict(default)
+            p[name] = jnp.float32(round(val) if space.kinds[i] in
+                                  ("int", "choice", "bool") else val)
+            rt, _, v = evaluate_params(env_cfg, p, data, workload, 1.0)
+            if float(v["c_m"]) + float(v["c_r"]) == 0:
+                best_one = min(best_one, float(rt))
+        impact = 100.0 * (r_def - best_one) / full_gain
+        rows.append(csv_row("fig2_impact", name, f"{impact:.1f}"))
+    return rows
+
+
+# ------------------------------------------------------------ Fig 5
+def fig5_efficiency() -> list[str]:
+    sc = bench_scale()
+    budgets = sorted({2, 5, sc.budget_steps, sc.extensive_steps})
+    rows = [csv_row("fig5_efficiency", "method", "budget_steps",
+                    "runtime_ratio_vs_default")]
+    for method in ("random", "heuristic", "smbo", "ddpg", "litune"):
+        r = run_method(method, "alex", "mix", 1.0, max(budgets))
+        bsf = r["best_so_far"]
+        for b in budgets:
+            val = bsf[min(b, len(bsf)) - 1] / r["default"]
+            rows.append(csv_row("fig5_efficiency", method, b, f"{val:.4f}"))
+    return rows
+
+
+# ------------------------------------------------------------ Fig 6/7
+def fig6_7_extensive() -> list[str]:
+    sc = bench_scale()
+    rows = [csv_row("fig6_7", "index", "dataset", "workload", "method",
+                    "runtime_ns", "improvement_pct", "throughput_ops")]
+    for index in ("alex", "carmi"):
+        for ds in DATASETS:
+            for wname, wr in WORKLOADS.items():
+                for method in ("default", "smbo", "ddpg", "litune"):
+                    r = run_method(method, index, ds, wr,
+                                   sc.extensive_steps)
+                    imp = 100.0 * (1 - r["best"] / r["default"])
+                    thr = 1e9 / max(r["best"], 1e-9)
+                    rows.append(csv_row(
+                        "fig6_7", index, ds, wname, method,
+                        f"{r['best']:.1f}", f"{imp:.1f}", f"{thr:.0f}"))
+    return rows
+
+
+# ------------------------------------------------------------ Fig 8
+def fig8_radar() -> list[str]:
+    """CARMI+MIX balanced: adaptability/quality/stability/efficiency/prep,
+    normalized 0-9 (higher better)."""
+    sc = bench_scale()
+    methods = ("random", "grid", "heuristic", "smbo", "ddpg", "litune")
+    stats = {}
+    for m in methods:
+        runs = [run_method(m, "carmi", ds, 1.0, sc.budget_steps, seed=s)
+                for s in range(sc.n_seeds) for ds in ("mix", "osm")]
+        best = np.array([r["best"] for r in runs])
+        fails = np.array([r["failures"] for r in runs])
+        wall = np.array([r["wall_s"] for r in runs])
+        stats[m] = {
+            "adaptability": -np.std(best / best.mean()),
+            "quality": -best.mean(),
+            "stability": -fails.mean(),
+            "efficiency": -(best.mean() * np.maximum(wall.mean(), 1e-3)),
+            "prep": {"random": 0, "grid": 0, "heuristic": -1, "smbo": -1,
+                     "ddpg": -8, "litune": -5}[m],  # rel. prep cost (Table 3)
+        }
+    rows = [csv_row("fig8_radar", "method", "attribute", "score_0_9")]
+    for attr in ("adaptability", "quality", "stability", "efficiency",
+                 "prep"):
+        vals = np.array([stats[m][attr] for m in methods], np.float64)
+        lo, hi = vals.min(), vals.max()
+        norm = 9.0 * (vals - lo) / max(hi - lo, 1e-12)
+        for m, v in zip(methods, norm):
+            rows.append(csv_row("fig8_radar", m, attr, f"{v:.1f}"))
+    return rows
+
+
+# ------------------------------------------------------------ Fig 9/10
+def fig9_10_stream() -> list[str]:
+    from repro.index.workloads import StreamConfig, stream_windows
+    sc = bench_scale()
+    n_windows = {"smoke": 4, "paper": 8, "full": 30}[
+        __import__("benchmarks.common", fromlist=["SCALE"]).SCALE]
+    rows = [csv_row("fig9_10", "index", "variant", "window",
+                    "best_runtime_ns", "default_ns", "swapped")]
+    for index, ds in (("alex", "osm"), ("carmi", "mix")):
+        for variant, use_o2 in (("litune_o2", True), ("litune_no_o2", False)):
+            tuner = get_litune(index, seed=0)
+            tuner.cfg = litune_config(index, use_o2=use_o2)
+            scfg = StreamConfig(n_windows=n_windows,
+                                base_per_window=sc.n_keys // 2,
+                                updates_per_window=sc.n_queries // 2,
+                                dist=ds, drift_per_window=0.1)
+            res = tuner.stream(stream_windows(jax.random.PRNGKey(5), scfg),
+                               max_steps_per_window=5)
+            for r in res:
+                rows.append(csv_row(
+                    "fig9_10", index, variant, r["window"],
+                    f"{r['best_runtime_ns']:.1f}", f"{r['r0_ns']:.1f}",
+                    r.get("swapped", False)))
+    return rows
+
+
+# ------------------------------------------------------------ Fig 11
+def fig11_safety() -> list[str]:
+    """Exploration safety: dangerous-zone visits + cumulative failures over
+    tuning trials (ALEX + OSM + balanced, the paper's setting)."""
+    sc = bench_scale()
+    rows = [csv_row("fig11_safety", "method", "trials", "failures",
+                    "danger_zone_visits")]
+    env_cfg, data, workload = make_instance("alex", "osm", 1.0)
+    space = alex_space()
+
+    def danger(raw: dict) -> bool:
+        return (raw["kmax_ood_keys_log2"] >= 12 and
+                raw["ood_tolerance_factor"] >= 24)
+
+    # baselines: count visits by replaying their proposals
+    from repro.tuning.base import run_tuner
+    from repro.tuning.baselines import make_baseline
+
+    for method in ("random", "smbo"):
+        visits, failures, trials = 0, 0, 0
+        for seed in range(sc.n_seeds):
+            tuner = make_baseline(method, space, seed)
+            orig_propose = tuner.propose
+
+            def propose():
+                raw = orig_propose()
+                nonlocal visits
+                visits += int(danger(raw))
+                return raw
+            tuner.propose = propose
+            res = run_tuner(tuner, env_cfg, data, workload, 1.0,
+                            budget_evals=sc.extensive_steps)
+            failures += res.failures
+            trials += res.evals
+        rows.append(csv_row("fig11_safety", method, trials, failures, visits))
+
+    for variant, safe in (("litune", True), ("litune_nosafe", False)):
+        visits, failures, trials = 0, 0, 0
+        for seed in range(sc.n_seeds):
+            tuner = get_litune("alex", seed=seed, safe_rl=safe)
+            res = tuner.tune(data, workload, 1.0,
+                             budget_steps=sc.extensive_steps)
+            for a in res["actions"]:
+                raw = {k: float(v) for k, v in
+                       space.decode(jnp.asarray(a)).items()}
+                visits += int(danger(raw))
+            failures += int(res["violations"])
+            trials += res["steps"]
+        rows.append(csv_row("fig11_safety", variant, trials, failures,
+                            visits))
+    return rows
+
+
+# ------------------------------------------------------------ Fig 12
+def fig12_stability() -> list[str]:
+    """Training-reward trajectories with vs without Safe-RL (fresh agents,
+    same seeds).  Paper: no-safe shows late-training volatility."""
+    from repro.core.litune import LITune
+    rows = [csv_row("fig12_stability", "variant", "iter", "mean_return",
+                    "violations")]
+    outer = bench_scale().pretrain_outer
+    for variant, safe in (("safe_rl", True), ("no_safe_rl", False)):
+        tuner = LITune(litune_config("alex", safe_rl=safe), seed=123)
+        hist = tuner.pretrain(n_outer=outer, seed=123)
+        for rec in hist:
+            rows.append(csv_row("fig12_stability", variant, rec["iter"],
+                                f"{rec['mean_return']:.3f}",
+                                f"{rec['violations']:.0f}"))
+    return rows
+
+
+# ------------------------------------------------------------ Table 3
+def table3_costs() -> list[str]:
+    """Sampling-ratio ablation: reservoir size vs tuning quality/time.
+    LITune-X% = tuning on an X% reservoir of the (scaled) dataset."""
+    sc = bench_scale()
+    rows = [csv_row("table3", "variant", "reservoir_keys", "tune_wall_s",
+                    "best_runtime_ns", "default_ns")]
+    key = jax.random.PRNGKey(0)
+    from repro.index.workloads import sample_keys, wr_workload
+    full_n = sc.n_keys * 4
+    data_full = sample_keys(key, full_n, "osm")
+    tuner = get_litune("alex", seed=0)
+    for frac, name in ((0.001, "litune_0.1pct"), (0.01, "litune_1pct"),
+                       (0.1, "litune_10pct"), (1.0, "litune_full")):
+        n = max(int(full_n * frac), 256)
+        reservoir = data_full[jnp.linspace(0, full_n - 1, n).astype(int)]
+        workload, _ = wr_workload(jax.random.fold_in(key, n), reservoir, 1.0,
+                                  total=min(n, sc.n_queries), dist="osm")
+        t0 = time.time()
+        res = tuner.tune(reservoir, workload, 1.0,
+                         budget_steps=sc.budget_steps)
+        rows.append(csv_row("table3", name, n, f"{time.time() - t0:.1f}",
+                            f"{res['best_runtime_ns']:.1f}",
+                            f"{res['r0_ns']:.1f}"))
+    return rows
+
+
+ALL = {
+    "fig1_surface": fig1_surface,
+    "fig1_speedup": fig1_speedup,
+    "fig2_impact": fig2_impact,
+    "fig5_efficiency": fig5_efficiency,
+    "fig6_7_extensive": fig6_7_extensive,
+    "fig8_radar": fig8_radar,
+    "fig9_10_stream": fig9_10_stream,
+    "fig11_safety": fig11_safety,
+    "fig12_stability": fig12_stability,
+    "table3_costs": table3_costs,
+}

@@ -1,0 +1,57 @@
+"""Render roofline JSONL records into the EXPERIMENTS.md markdown tables."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path: str) -> list[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            out.append(json.loads(line))
+    return out
+
+
+def fmt_e(x):
+    return f"{x:.2e}"
+
+
+def table(records: list[dict], mesh: str) -> str:
+    rows = ["| arch | shape | status | mem/dev GiB | compute s | memory s | "
+            "collective s | dominant | useful (6ND/HLO) | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP (full attention"
+                        f" @500k) | - | - | - | - | - | - | - |")
+            continue
+        if r["status"] == "error":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - |"
+                        f" - | - | - | - |")
+            continue
+        rf = r["roofline"]
+        mem = r["analytic_memory"]["total"] / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {mem:.2f} | "
+            f"{fmt_e(rf['compute_s'])} | {fmt_e(rf['memory_s'])} | "
+            f"{fmt_e(rf['collective_s'])} | {rf['dominant']} | "
+            f"{rf['useful_ratio']:.2f} | {rf['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def summary_by_dominant(records: list[dict], mesh: str) -> str:
+    from collections import Counter
+    c = Counter(r["roofline"]["dominant"] for r in records
+                if r["mesh"] == mesh and r["status"] == "ok")
+    return ", ".join(f"{k}: {v}" for k, v in c.most_common())
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1])
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "16x16"
+    print(table(recs, mesh))
+    print()
+    print("dominant terms:", summary_by_dominant(recs, mesh))

@@ -1,0 +1,90 @@
+"""Roofline benchmark: wraps launch/dryrun.py records into CSV rows.
+
+NOTE: must run in a separate process from the other benchmarks when the
+512-device flag is needed; benchmarks/run.py shells out for that reason.
+This module also provides small-mesh (in-process, 1-device) micro-bench
+rows: wall-clock us/call of the jitted smoke-scale step functions, which is
+the only *measured* timing this CPU container can produce.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.configs import ARCH_NAMES, get_config, smoke
+from repro.models import model_zoo
+
+
+def micro_steps(n_timing: int = 5) -> list[str]:
+    rows = [csv_row("micro_step", "arch", "fn", "us_per_call")]
+    key = jax.random.PRNGKey(0)
+    for name in ARCH_NAMES:
+        cfg = smoke(get_config(name))
+        bundle = model_zoo.build(cfg, remat=False)
+        params = bundle.init(key)
+        B, S = 2, 64
+        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        labels = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        kwargs = {}
+        if cfg.frontend == "vision_stub":
+            kwargs["frontend_embeds"] = jnp.zeros(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.enc_dec:
+            kwargs["enc_embeds"] = jnp.zeros((B, cfg.enc_seq, cfg.d_model),
+                                             jnp.bfloat16)
+        fwd = jax.jit(lambda p, t, kw: bundle.loss_fn(p, t, labels, **kw))
+        fwd(params, tokens, kwargs).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(n_timing):
+            fwd(params, tokens, kwargs).block_until_ready()
+        us = (time.perf_counter() - t0) / n_timing * 1e6
+        rows.append(csv_row("micro_step", name, "loss", f"{us:.0f}"))
+    return rows
+
+
+def kernel_micro(n_timing: int = 3) -> list[str]:
+    """us/call of the Pallas kernels in interpret mode vs their jnp refs
+    (correctness-path timing only; TPU perf comes from the dry-run)."""
+    import numpy as np
+    from repro.kernels.flash_attention.kernel import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.mamba_scan.kernel import selective_scan
+    from repro.kernels.mamba_scan.ref import selective_scan_ref
+    from repro.kernels.index_probe.ops import batched_lookup
+
+    rows = [csv_row("kernel_micro", "kernel", "impl", "us_per_call")]
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 2, 256, 64))
+    jr = jax.jit(lambda q: attention_ref(q, q, q, causal=True))
+    jr(q).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n_timing):
+        jr(q).block_until_ready()
+    rows.append(csv_row("kernel_micro", "flash_attention", "jnp_ref",
+                        f"{(time.perf_counter()-t0)/n_timing*1e6:.0f}"))
+
+    keys = jnp.sort(jax.random.uniform(key, (8 * 256,)))
+    queries = jax.random.uniform(key, (128,))
+    fn = jax.jit(lambda k, qq: batched_lookup(k, qq, tile=256, qcap=64))
+    fn(keys, queries)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n_timing):
+        fn(keys, queries)[0].block_until_ready()
+    rows.append(csv_row("kernel_micro", "index_probe", "pallas_interpret",
+                        f"{(time.perf_counter()-t0)/n_timing*1e6:.0f}"))
+
+    u = jax.random.normal(key, (1, 128, 64))
+    dt = jax.nn.softplus(jax.random.normal(key, (1, 128, 64)))
+    bm = jax.random.normal(key, (1, 128, 8))
+    a = -jnp.exp(jax.random.normal(key, (64, 8)))
+    jr2 = jax.jit(lambda *xs: selective_scan_ref(*xs))
+    jr2(u, dt, bm, bm, a).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n_timing):
+        jr2(u, dt, bm, bm, a).block_until_ready()
+    rows.append(csv_row("kernel_micro", "mamba_scan", "jnp_ref",
+                        f"{(time.perf_counter()-t0)/n_timing*1e6:.0f}"))
+    return rows

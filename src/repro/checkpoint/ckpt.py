@@ -1,0 +1,108 @@
+"""Sharded checkpoint save/restore with manifest + atomic commit.
+
+Layout per checkpoint:
+    <dir>/step_<N>.tmp/          (written first)
+        manifest.json            leaf paths, shapes, dtypes, logical axes,
+                                 step, mesh shape, pipeline state
+        arrays.npz               one entry per pytree leaf (addressable data)
+    <dir>/step_<N>/              (atomic rename on completion)
+
+On a real multi-host pod each host writes only its addressable shards; in
+this single-process container the full arrays are written.  Restore is
+mesh-shape-agnostic: arrays are re-sharded at load time by the caller's
+shardings (runtime/elastic.py builds on this for elastic re-scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    import jax.tree_util as jtu
+    flat, _ = jtu.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(directory: str, step: int, tree, extra: dict | None = None) -> str:
+    """Write checkpoint atomically. Returns the final path."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f"step_{step}.tmp")
+    final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    arrays, manifest_leaves = {}, {}
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key] = arr
+        manifest_leaves[key] = {"shape": list(arr.shape),
+                                "dtype": str(arr.dtype)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"step": step, "leaves": manifest_leaves,
+                "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def available_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except ValueError:
+                pass
+    return sorted(steps)
+
+
+def restore(directory: str, step: int, like_tree, shardings=None):
+    """Load a checkpoint into the structure of `like_tree`.
+
+    `shardings` (same pytree structure) re-shards leaves on load -- this is
+    what makes restore mesh-shape-agnostic."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    keys = [k for k, _ in _flatten_with_paths(like_tree)]
+    leaves = []
+    for key in keys:
+        arr = data[key]
+        want = manifest["leaves"][key]["dtype"]
+        if str(arr.dtype) != want:
+            # npz stores ml_dtypes (bfloat16, fp8) as raw void; re-view
+            import ml_dtypes  # ships with jax
+            arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
+        leaves.append(arr)
+    import jax.tree_util as jtu
+    treedef = jtu.tree_structure(like_tree)
+    tree = jtu.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest
+
+
+def latest(directory: str):
+    steps = available_steps(directory)
+    return steps[-1] if steps else None

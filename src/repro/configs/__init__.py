@@ -1,0 +1,186 @@
+"""Architecture & shape registry.
+
+Each assigned architecture lives in its own module exporting ``CONFIG``.
+``get_config(name)`` returns the exact published configuration;
+``smoke(cfg)`` returns a reduced same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str = "attn"        # attn | attn_local | mamba
+    mlp: str = "dense"         # dense | moe | none
+    window: int = 0            # sliding window size (attn_local)
+    rope_theta: float = 500000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0          # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    moe_period: int = 0        # 0 = no MoE; 1 = every layer; 2 = alternate
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_impl: str = "gspmd"   # gspmd | shard_map (explicit all_to_all EP)
+    kv_cache_dtype: str = "bf16"  # bf16 | int8 (quantized serving cache)
+    # --- attention pattern ---
+    sliding_window: int = 0
+    global_period: int = 0     # gemma3: 6 -> layer i is global iff i%6==5
+    local_rope_theta: float = 10000.0
+    # --- ssm / hybrid ---
+    attn_period: int = 0       # 0: all attn; -1: none (pure SSM); jamba: 8
+    attn_offset: int = 0
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0           # 0 -> ceil(d_model / 16)
+    # --- encoder-decoder (whisper) ---
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500
+    # --- modality frontend stub ---
+    frontend: str = "none"     # none | vision_stub | audio_stub
+    n_frontend_tokens: int = 0
+    # --- numerics / misc ---
+    use_rope: bool = True
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm
+    mlp_variant: str = "swiglu"  # swiglu | gelu
+    tie_embeddings: bool = False
+    subquadratic: bool = False  # eligible for long_500k
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank or math.ceil(self.d_model / 16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def layer_kind(self, i: int) -> LayerKind:
+        if self.attn_period == -1:
+            mixer = "mamba"
+        elif self.attn_period > 0:
+            mixer = "attn" if i % self.attn_period == self.attn_offset else "mamba"
+        elif self.global_period > 0:
+            mixer = ("attn" if i % self.global_period == self.global_period - 1
+                     else "attn_local")
+        else:
+            mixer = "attn"
+        if self.d_ff == 0 and mixer == "mamba":
+            mlp = "none"
+        elif self.moe_period > 0 and i % self.moe_period == self.moe_offset:
+            mlp = "moe"
+        else:
+            mlp = "dense"
+        window = self.sliding_window if mixer == "attn_local" else 0
+        theta = self.local_rope_theta if mixer == "attn_local" else self.rope_theta
+        return LayerKind(mixer=mixer, mlp=mlp, window=window, rope_theta=theta)
+
+    def layer_kinds(self) -> list[LayerKind]:
+        return [self.layer_kind(i) for i in range(self.n_layers)]
+
+    def block_period(self) -> int:
+        """Smallest period p with kinds[i] == kinds[i % p] (scan grouping)."""
+        kinds = self.layer_kinds()
+        for p in range(1, self.n_layers + 1):
+            if all(kinds[i] == kinds[i % p] for i in range(self.n_layers)):
+                return p
+        return self.n_layers
+
+    def uses_cache(self) -> bool:
+        return True  # all assigned archs have a decoder
+
+
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_NAMES = [
+    "internvl2_76b", "gemma3_4b", "deepseek_67b", "llama3_8b", "minitron_4b",
+    "qwen3_moe_235b_a22b", "phi35_moe_42b_a66b", "falcon_mamba_7b",
+    "whisper_small", "jamba_v01_52b",
+]
+
+# The paper's own tuning targets (learned-index environments).
+TUNE_CONFIG_NAMES = ["litune_alex", "litune_carmi"]
+
+
+def get_config(name: str) -> ArchConfig:
+    name = name.replace("-", "_").replace(".", "")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, and why not when skipped."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("pure full-attention arch: 500k dense KV cache per "
+                       "layer is not sub-quadratic; skipped per assignment")
+    return True, ""
+
+
+def smoke(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family config: small dims, few layers/experts."""
+    period = cfg.block_period()
+    n_layers = max(2 * period, period)  # >= 2 blocks when pattern allows
+    if cfg.n_layers < n_layers:
+        n_layers = cfg.n_layers
+    heads = min(cfg.n_heads, 4)
+    kv = min(cfg.n_kv_heads, max(1, heads // 2)) if cfg.n_kv_heads else 0
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "_smoke",
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=256,
+        n_experts=min(cfg.n_experts, 4),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        moe_d_ff=0 if cfg.moe_d_ff == 0 else 64,
+        sliding_window=min(cfg.sliding_window, 8) if cfg.sliding_window else 0,
+        ssm_state=min(cfg.ssm_state, 8),
+        dt_rank=8 if cfg.attn_period != 0 else 0,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        enc_seq=16 if cfg.enc_dec else cfg.enc_seq,
+        n_frontend_tokens=min(cfg.n_frontend_tokens, 4),
+    )

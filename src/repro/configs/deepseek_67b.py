@@ -1,0 +1,10 @@
+"""DeepSeek-67B dense (llama-arch GQA). [arXiv:2401.02954; hf]"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek_67b", family="dense",
+    n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab_size=102400, head_dim=128,
+    rope_theta=10000.0, tie_embeddings=False,
+    source="arXiv:2401.02954",
+)

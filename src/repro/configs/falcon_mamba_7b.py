@@ -1,0 +1,13 @@
+"""Falcon-Mamba-7B: attention-free mamba1, ssm_state=16.
+[arXiv:2410.05355; unverified]"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="falcon_mamba_7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    attn_period=-1, ssm_state=16, ssm_conv=4, ssm_expand=2,
+    use_rope=False, tie_embeddings=False,
+    subquadratic=True,
+    source="arXiv:2410.05355",
+)

@@ -1,0 +1,13 @@
+"""Gemma-3 4B: 5:1 local:global attention, sliding window 1024,
+256k vocab, 128k context. [hf:google/gemma-3-1b-pt; unverified]"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3_4b", family="dense",
+    n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4,
+    d_ff=10240, vocab_size=262144, head_dim=256,
+    sliding_window=1024, global_period=6, local_rope_theta=10000.0,
+    rope_theta=1000000.0, tie_embeddings=True,
+    subquadratic=True,  # 5/6 of layers cache only the 1024-window
+    source="hf:google/gemma-3-1b-pt",
+)

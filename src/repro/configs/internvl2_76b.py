@@ -1,0 +1,12 @@
+"""InternVL2-76B backbone (InternViT frontend stubbed).
+[arXiv:2404.16821; unverified]"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2_76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab_size=128256, head_dim=128,
+    frontend="vision_stub", n_frontend_tokens=256,
+    rope_theta=1000000.0, tie_embeddings=False,
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,16 @@
+"""Jamba-v0.1 52B: Mamba+attention 1:7 interleave, MoE 16e top-2
+on alternate layers. [arXiv:2403.19887; hf]"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba_v01_52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=65536, head_dim=128,
+    n_experts=16, experts_per_token=2, moe_d_ff=14336,
+    moe_period=2, moe_offset=1,
+    attn_period=8, attn_offset=4,  # 1 attn : 7 mamba per period-8 block
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+    use_rope=False,  # jamba uses no positional encoding
+    tie_embeddings=False, subquadratic=True,
+    source="arXiv:2403.19887",
+)

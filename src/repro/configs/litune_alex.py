@@ -1,0 +1,9 @@
+"""The paper's own tuning target: ALEX-family learned index (Table 2).
+
+Not an LM architecture: this config selects the learned-index environment
+for the LITune launchers (`repro.launch.tune --index alex`).
+"""
+from repro.core.litune import LITuneConfig
+
+CONFIG = LITuneConfig(index_type="alex")
+PARAM_DIMS = 14  # 5 continuous, 3 boolean, 4 integer, 2 discrete-choice

@@ -1,0 +1,5 @@
+"""The paper's own tuning target: CARMI-family learned index (Table 2)."""
+from repro.core.litune import LITuneConfig
+
+CONFIG = LITuneConfig(index_type="carmi")
+PARAM_DIMS = 13  # 10 continuous, 2 integer, 1 hybrid continuous/discrete

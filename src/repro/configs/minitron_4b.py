@@ -1,0 +1,10 @@
+"""Minitron-4B (pruned Nemotron). [arXiv:2407.14679; hf]"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minitron_4b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=9216, vocab_size=256000, head_dim=128,
+    rope_theta=10000.0, tie_embeddings=False,
+    source="arXiv:2407.14679",
+)

@@ -1,0 +1,12 @@
+"""Phi-3.5-MoE 42B-A6.6B: 16 experts top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi35_moe_42b_a66b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=6400, vocab_size=32064, head_dim=128,
+    n_experts=16, experts_per_token=2, moe_d_ff=6400, moe_period=1,
+    rope_theta=10000.0, tie_embeddings=False,
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)

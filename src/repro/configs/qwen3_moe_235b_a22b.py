@@ -1,0 +1,12 @@
+"""Qwen3-MoE 235B-A22B: 128 experts top-8, GQA kv=4.
+[hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3_moe_235b_a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4,
+    d_ff=1536, vocab_size=151936, head_dim=128,
+    n_experts=128, experts_per_token=8, moe_d_ff=1536, moe_period=1,
+    rope_theta=1000000.0, tie_embeddings=False,
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

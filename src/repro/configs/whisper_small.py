@@ -1,0 +1,14 @@
+"""Whisper-small: 12L enc + 12L dec, conv frontend stubbed.
+[arXiv:2212.04356; unverified]"""
+from repro.configs import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper_small", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab_size=51865, head_dim=64,
+    enc_dec=True, n_enc_layers=12, enc_seq=1500,
+    frontend="audio_stub",
+    norm_type="layernorm", mlp_variant="gelu", use_rope=False,
+    tie_embeddings=True,
+    source="arXiv:2212.04356",
+)

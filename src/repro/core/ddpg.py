@@ -1,0 +1,169 @@
+"""DDPG with LSTM context (the LITune backbone) + target networks.
+
+Sequence updates R2D2-style: hidden states are stored at write time, the
+first `burn_in` steps of each sampled sequence only warm the LSTM, and
+target-network hiddens reuse the online chain (standard stored-state
+approximation).  The same learner also runs context-free (use_lstm=False
+zeroes the hidden contribution) for the vanilla-DDPG baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import networks as nets
+from repro.core.networks import NetConfig
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    gamma: float = 0.95
+    tau: float = 0.01
+    actor_lr: float = 3e-4
+    critic_lr: float = 1e-3
+    noise_scale: float = 0.15
+    seq_len: int = 8
+    burn_in: int = 2
+    batch_size: int = 64
+    use_lstm: bool = True
+    # Lagrangian safety head (core/lagrangian.py drives these)
+    use_cost_critic: bool = False
+    lambda_lr: float = 1e-2
+    cost_limit: float = 1.0
+
+
+def init_state(key, net_cfg: NetConfig, ddpg_cfg: DDPGConfig):
+    n_critics = 2 if ddpg_cfg.use_cost_critic else 1
+    params = nets.init_actor_critic(key, net_cfg, n_critics=n_critics)
+    return {
+        "params": params,
+        "targets": jax.tree.map(lambda x: x, params),
+        "opt_actor": init_opt_state(params["actor"]),
+        "opt_critic": init_opt_state(params["critic0"]),
+        "opt_cost": (init_opt_state(params["critic1"])
+                     if ddpg_cfg.use_cost_critic else None),
+        "lmbda": jnp.float32(0.0),
+        "updates": jnp.int32(0),
+    }
+
+
+@partial(jax.jit, static_argnames=("net_cfg", "deterministic"))
+def act(params, obs, hidden, key, net_cfg: NetConfig,
+        noise_scale: float = 0.0, deterministic: bool = False):
+    a, hc = nets.actor_apply(params["actor"], obs, hidden, net_cfg)
+    if not deterministic:
+        a = jnp.clip(a + noise_scale * jax.random.normal(key, a.shape),
+                     -1.0, 1.0)
+    return a, hc
+
+
+def _unroll_critic(p, obs_seq, act_seq, h0, net_cfg):
+    """obs/act [B,L,...]; returns q [B,L] and hidden sequence."""
+    def step(hc, xs):
+        o, a = xs
+        q, hc2 = nets.critic_apply(p, o, a, hc, net_cfg)
+        return hc2, (q, hc2[0], hc2[1])
+    xs = (obs_seq.swapaxes(0, 1), act_seq.swapaxes(0, 1))
+    _, (q, hs, cs) = jax.lax.scan(step, h0, xs)
+    return q.swapaxes(0, 1), (hs.swapaxes(0, 1), cs.swapaxes(0, 1))
+
+
+def _unroll_actor(p, obs_seq, h0, net_cfg):
+    def step(hc, o):
+        a, hc2 = nets.actor_apply(p, o, hc, net_cfg)
+        return hc2, a
+    _, a = jax.lax.scan(step, h0, obs_seq.swapaxes(0, 1))
+    return a.swapaxes(0, 1)
+
+
+@partial(jax.jit, static_argnames=("net_cfg", "cfg"))
+def update(state, batch, net_cfg: NetConfig, cfg: DDPGConfig):
+    """One DDPG update on a batch of sequences. Returns (state, metrics)."""
+    p, tp = state["params"], state["targets"]
+    L, b = cfg.seq_len, cfg.burn_in
+    zeros = lambda key: (batch[key] * 0.0) if not cfg.use_lstm else batch[key]
+    h_q0 = (zeros("h_q"), zeros("c_q"))
+    h_a0 = (zeros("h_a"), zeros("c_a"))
+    mask = jnp.arange(L) >= b  # burn-in excluded from losses
+
+    # ---- critic ----
+    def critic_loss(cp):
+        q, (hs, cs) = _unroll_critic(cp, batch["obs"], batch["action"],
+                                     h_q0, net_cfg)
+        # target actions from target actor over next_obs
+        a_next = _unroll_actor(tp["actor"], batch["next_obs"], h_a0, net_cfg)
+        q_next, _ = _unroll_critic(tp["critic0"], batch["next_obs"], a_next,
+                                   (hs[:, 0] * 0 + h_q0[0], h_q0[1]), net_cfg)
+        y = batch["reward"] + cfg.gamma * (1.0 - batch["done"]) \
+            * jax.lax.stop_gradient(q_next)
+        err = (q - jax.lax.stop_gradient(y)) * mask
+        return jnp.sum(err ** 2) / jnp.maximum(jnp.sum(mask), 1.0) / q.shape[0]
+
+    c_loss, c_grads = jax.value_and_grad(critic_loss)(p["critic0"])
+    new_c, opt_c, _ = adamw_update(
+        p["critic0"], c_grads, state["opt_critic"],
+        AdamWConfig(lr=cfg.critic_lr, weight_decay=0.0))
+
+    # ---- optional cost critic (Lagrangian CMDP baseline) ----
+    new_cost, opt_cost, cost_loss = p.get("critic1"), state["opt_cost"], 0.0
+    if cfg.use_cost_critic:
+        def cost_loss_fn(cp):
+            qc, _ = _unroll_critic(cp, batch["obs"], batch["action"], h_q0,
+                                   net_cfg)
+            a_next = _unroll_actor(tp["actor"], batch["next_obs"], h_a0,
+                                   net_cfg)
+            qc_next, _ = _unroll_critic(tp["critic1"], batch["next_obs"],
+                                        a_next, h_q0, net_cfg)
+            y = batch["cost"] + cfg.gamma * (1.0 - batch["done"]) \
+                * jax.lax.stop_gradient(qc_next)
+            err = (qc - jax.lax.stop_gradient(y)) * mask
+            return jnp.sum(err ** 2) / jnp.maximum(jnp.sum(mask), 1.0) \
+                / qc.shape[0]
+        cost_loss, cost_grads = jax.value_and_grad(cost_loss_fn)(p["critic1"])
+        new_cost, opt_cost, _ = adamw_update(
+            p["critic1"], cost_grads, state["opt_cost"],
+            AdamWConfig(lr=cfg.critic_lr, weight_decay=0.0))
+
+    # ---- actor ----
+    def actor_loss(ap):
+        a = _unroll_actor(ap, batch["obs"], h_a0, net_cfg)
+        q, _ = _unroll_critic(new_c, batch["obs"], a, h_q0, net_cfg)
+        loss = -(q * mask).sum() / jnp.maximum(mask.sum(), 1.0) / q.shape[0]
+        if cfg.use_cost_critic:
+            qc, _ = _unroll_critic(new_cost, batch["obs"], a, h_q0, net_cfg)
+            loss = loss + state["lmbda"] * (qc * mask).sum() \
+                / jnp.maximum(mask.sum(), 1.0) / qc.shape[0]
+        return loss
+
+    a_loss, a_grads = jax.value_and_grad(actor_loss)(p["actor"])
+    new_a, opt_a, _ = adamw_update(
+        p["actor"], a_grads, state["opt_actor"],
+        AdamWConfig(lr=cfg.actor_lr, weight_decay=0.0))
+
+    # ---- lagrange multiplier (dual ascent) ----
+    ep_cost = jnp.mean(jnp.sum(batch["cost"], axis=1))
+    lmbda = jnp.maximum(
+        state["lmbda"] + cfg.lambda_lr * (ep_cost - cfg.cost_limit), 0.0) \
+        if cfg.use_cost_critic else state["lmbda"]
+
+    new_params = dict(p)
+    new_params["actor"] = new_a
+    new_params["critic0"] = new_c
+    if cfg.use_cost_critic:
+        new_params["critic1"] = new_cost
+    soft = lambda t, n: jax.tree.map(
+        lambda a_, b_: (1 - cfg.tau) * a_ + cfg.tau * b_, t, n)
+    new_state = dict(state)
+    new_state.update({
+        "params": new_params,
+        "targets": soft(tp, new_params),
+        "opt_actor": opt_a, "opt_critic": opt_c, "opt_cost": opt_cost,
+        "lmbda": lmbda,
+        "updates": state["updates"] + 1,
+    })
+    return new_state, {"critic_loss": c_loss, "actor_loss": a_loss,
+                       "cost_critic_loss": cost_loss, "lambda": lmbda}

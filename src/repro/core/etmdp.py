@@ -1,0 +1,88 @@
+"""ET-MDP: Early-Terminated MDP wrapper (paper §4.2, Def. 4.1/4.2).
+
+The CMDP (S, A, H, r, c, C, T) is transformed into an unconstrained MDP with
+an absorbing state s_e: when the running cost b_t = sum(c^m_tau + c^r_tau)
+exceeds the budget C, the episode transitions to s_e with termination reward
+r_e and stays there.  Solved by the DDPG+LSTM backbone (the LSTM is the
+context model that generalizes safety across tasks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ddpg, networks as nets
+from repro.index import env as E
+
+
+@dataclasses.dataclass(frozen=True)
+class ETMDPConfig:
+    cost_budget: float = 1.0        # C: tolerated failures per episode
+    termination_reward: float = -1.0  # r_e (small, per the paper)
+    enabled: bool = True            # False -> plain (unsafe) episodes
+
+
+def rollout_episode(key, agent_state, net_cfg, env_cfg: E.EnvConfig,
+                    et_cfg: ETMDPConfig, data_keys, workload, wr_ratio,
+                    noise_scale: float = 0.1, replay=None,
+                    deterministic: bool = False):
+    """Run one tuning episode under the ET-MDP.
+
+    Returns a summary dict (episode return, best runtime, violations,
+    terminated-early flag, params history).  Transitions are pushed into
+    `replay` when provided.
+    """
+    env_state, obs = E.reset(env_cfg, data_keys, workload, wr_ratio)
+    hidden_a = nets.zero_hidden(net_cfg)
+    hidden_q = nets.zero_hidden(net_cfg)
+    params = agent_state["params"]
+
+    total_r, best_rt, violations = 0.0, float(env_state["r_best"]), 0.0
+    terminated = False
+    runtimes, actions = [], []
+    b_t = 0.0
+    for t in range(env_cfg.episode_len):
+        key, k_act = jax.random.split(key)
+        action, new_hidden_a = ddpg.act(params, obs, hidden_a, k_act, net_cfg,
+                                        noise_scale=noise_scale,
+                                        deterministic=deterministic)
+        # critic hidden advances on (obs, action) for stored-state replay
+        _, new_hidden_q = nets.critic_apply(params["critic0"], obs, action,
+                                            hidden_q, net_cfg)
+        env_state, next_obs, r, done, info = E.step(env_cfg, env_state, action)
+        cost = float(info["cost"])
+        b_t += cost
+        violations += cost
+        early = et_cfg.enabled and b_t > et_cfg.cost_budget
+        r_val = float(r) if not early else et_cfg.termination_reward
+        next_obs_eff = jnp.zeros_like(next_obs) if early else next_obs
+        done_flag = bool(done) or early
+
+        if replay is not None:
+            replay.add(np.asarray(obs), np.asarray(action), r_val,
+                       np.asarray(next_obs_eff), float(done_flag), cost,
+                       (np.asarray(hidden_a[0]), np.asarray(hidden_a[1])),
+                       (np.asarray(hidden_q[0]), np.asarray(hidden_q[1])))
+        total_r += r_val
+        best_rt = min(best_rt, float(info["runtime_ns"]))
+        runtimes.append(float(info["runtime_ns"]))
+        actions.append(np.asarray(action))
+        obs, hidden_a, hidden_q = next_obs_eff, new_hidden_a, new_hidden_q
+        if early:
+            terminated = True
+            break
+        if done_flag:
+            break
+    return {
+        "episode_return": total_r,
+        "best_runtime_ns": best_rt,
+        "r0_ns": float(env_state["r0"]),
+        "violations": violations,
+        "terminated_early": terminated,
+        "runtimes": runtimes,
+        "actions": actions,
+        "steps": len(runtimes),
+    }

@@ -1,0 +1,22 @@
+"""Lagrangian CMDP solver (paper §4.2 Eq. 1) — comparison baseline.
+
+pi* = argmax_pi min_{lambda>=0} E[ sum r_t - lambda * sum c_t ] + lambda*C
+
+Implemented inside the DDPG learner as a second (cost) critic plus dual
+ascent on lambda (DDPGConfig.use_cost_critic=True).  The paper notes
+(after [5]) that Lagrangian methods can violate constraints *during*
+training, which motivates the ET-MDP + context-model design; the benchmark
+fig12_stability contrasts the two.
+"""
+from __future__ import annotations
+
+from repro.core.ddpg import DDPGConfig
+
+
+def lagrangian_config(base: DDPGConfig | None = None,
+                      cost_limit: float = 1.0,
+                      lambda_lr: float = 1e-2) -> DDPGConfig:
+    import dataclasses
+    base = base or DDPGConfig()
+    return dataclasses.replace(base, use_cost_critic=True,
+                               cost_limit=cost_limit, lambda_lr=lambda_lr)

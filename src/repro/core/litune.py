@@ -1,0 +1,132 @@
+"""LITune — end-to-end automatic tuner for learned indexes (top-level API).
+
+Training Stage (paper Part A): `LITune.pretrain` runs the Meta-RL pipeline
+over synthetic tuning instances.
+Online Tuning Stage (Part B/C): `LITune.tune` answers a tuning request on a
+concrete (data, workload) with the ET-MDP-safe agent; `LITune.stream` runs
+continuous tuning over data-shift windows through the O2 system.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ddpg
+from repro.core.ddpg import DDPGConfig
+from repro.core.etmdp import ETMDPConfig, rollout_episode
+from repro.core.maml import MetaConfig, meta_train
+from repro.core.networks import NetConfig
+from repro.core.o2 import O2Config, O2System
+from repro.index import env as E
+
+
+@dataclasses.dataclass(frozen=True)
+class LITuneConfig:
+    index_type: str = "alex"
+    episode_len: int = 25
+    lstm_hidden: int = 128
+    mlp_hidden: int = 256
+    ddpg: DDPGConfig = DDPGConfig()
+    etmdp: ETMDPConfig = ETMDPConfig()
+    meta: MetaConfig = MetaConfig()
+    o2: O2Config = O2Config()
+    safe_rl: bool = True      # False -> LITune w/o Safe-RL (ablation)
+    use_o2: bool = True       # False -> frozen pretrained model (ablation)
+
+    def env_cfg(self) -> E.EnvConfig:
+        return E.EnvConfig(index_type=self.index_type,
+                           episode_len=self.episode_len)
+
+    def net_cfg(self) -> NetConfig:
+        return NetConfig(obs_dim=E.obs_dim(),
+                         action_dim=self.env_cfg().space.dim,
+                         lstm_hidden=self.lstm_hidden,
+                         mlp_hidden=self.mlp_hidden)
+
+    def et_cfg(self) -> ETMDPConfig:
+        return self.etmdp if self.safe_rl else \
+            dataclasses.replace(self.etmdp, enabled=False)
+
+
+class LITune:
+    def __init__(self, cfg: LITuneConfig = LITuneConfig(), seed: int = 0):
+        self.cfg = cfg
+        self.key = jax.random.PRNGKey(seed)
+        self.key, k = jax.random.split(self.key)
+        self.state = ddpg.init_state(k, cfg.net_cfg(), cfg.ddpg)
+        self.history: list = []
+        self._o2: O2System | None = None
+
+    # ---------------- Training Stage ----------------
+    def pretrain(self, n_outer: int = 20, seed: int = 0, callback=None):
+        self.key, k = jax.random.split(self.key)
+        self.state, hist = meta_train(
+            k, self.cfg.net_cfg(), self.cfg.ddpg, self.cfg.env_cfg(),
+            self.cfg.et_cfg(), self.cfg.meta, n_outer=n_outer, seed=seed,
+            callback=callback)
+        self.history.extend(hist)
+        return hist
+
+    # ---------------- Online Tuning Stage ----------------
+    def tune(self, data_keys, workload, wr_ratio: float,
+             budget_steps: int | None = None, deterministic: bool = False):
+        """One tuning request: returns best params found + episode summary."""
+        env_cfg = self.cfg.env_cfg()
+        if budget_steps is not None:
+            env_cfg = dataclasses.replace(env_cfg, episode_len=budget_steps)
+        self.key, k = jax.random.split(self.key)
+        summary = rollout_episode(
+            k, self.state, self.cfg.net_cfg(), env_cfg, self.cfg.et_cfg(),
+            data_keys, workload, wr_ratio,
+            noise_scale=0.0 if deterministic else 0.05,
+            deterministic=deterministic)
+        best_t = int(np.argmin(summary["runtimes"]))
+        space = env_cfg.space
+        best_raw = {k_: float(v) for k_, v in
+                    space.decode(jnp.asarray(summary["actions"][best_t])).items()}
+        summary["best_params"] = best_raw
+        return summary
+
+    def stream(self, windows, max_steps_per_window: int = 5):
+        """Continuous tuning over an iterable of
+        (idx, data_keys, workload, wr_ratio) windows via the O2 system."""
+        if self._o2 is None or not self.cfg.use_o2:
+            self._o2 = O2System(self.state, self.cfg.net_cfg(), self.cfg.ddpg,
+                                self.cfg.env_cfg(), self.cfg.et_cfg(),
+                                self.cfg.o2)
+        results = []
+        for w, data, workload, wr in windows:
+            self.key, k = jax.random.split(self.key)
+            if self.cfg.use_o2:
+                res = self._o2.tune_window(k, data, workload, wr,
+                                           max_steps=max_steps_per_window)
+            else:  # ablation: frozen pretrained model, no O2
+                env_cfg = dataclasses.replace(
+                    self.cfg.env_cfg(), episode_len=max_steps_per_window)
+                res = rollout_episode(k, self.state, self.cfg.net_cfg(),
+                                      env_cfg, self.cfg.et_cfg(), data,
+                                      workload, wr, noise_scale=0.02)
+            res["window"] = w
+            results.append(res)
+        if self.cfg.use_o2 and self._o2 is not None:
+            self.state = self._o2.online  # keep the improved model
+        return results
+
+    # ---------------- persistence ----------------
+    def save(self, path: str):
+        blob = {"cfg": self.cfg,
+                "state": jax.tree.map(np.asarray, self.state)}
+        with open(path, "wb") as f:
+            pickle.dump(blob, f)
+
+    @classmethod
+    def load(cls, path: str) -> "LITune":
+        with open(path, "rb") as f:
+            blob = pickle.load(f)
+        self = cls(blob["cfg"])
+        self.state = jax.tree.map(jnp.asarray, blob["state"])
+        return self

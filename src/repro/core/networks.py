@@ -1,0 +1,115 @@
+"""Actor / critic networks: LSTM context module + MLP heads (pure JAX).
+
+The paper's backbone is "DDPG enhanced with LSTM" (§4.2): the LSTM maintains
+context from past exploration so the policy can recognize (and avoid)
+dangerous regions -- the context model of the ET-MDP solver.  Same ParamSpec
+machinery as the LM substrate, so these networks shard/lower on the mesh with
+the identical pipeline (the `litune` dry-run cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import (ParamSpec, abstract_params, fan_in_init,
+                                 init_params, zeros_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    obs_dim: int
+    action_dim: int
+    lstm_hidden: int = 128
+    mlp_hidden: int = 256
+    n_mlp_layers: int = 2
+
+
+# ------------------------------------------------------------------ pieces
+def _linear_specs(d_in, d_out):
+    return {"w": ParamSpec((d_in, d_out), jnp.float32, ("generic", "generic"),
+                           fan_in_init()),
+            "b": ParamSpec((d_out,), jnp.float32, ("generic",), zeros_init())}
+
+
+def _linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _lstm_specs(d_in, hidden):
+    return {
+        "wi": ParamSpec((d_in, 4 * hidden), jnp.float32,
+                        ("generic", "generic"), fan_in_init()),
+        "wh": ParamSpec((hidden, 4 * hidden), jnp.float32,
+                        ("generic", "generic"), fan_in_init()),
+        "b": ParamSpec((4 * hidden,), jnp.float32, ("generic",), zeros_init()),
+    }
+
+
+def lstm_step(p, hc, x):
+    """x [..., d_in]; hc = (h, c) each [..., hidden]."""
+    h, c = hc
+    gates = x @ p["wi"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c)
+
+
+def _mlp_specs(cfg: NetConfig, d_in, d_out):
+    specs = {}
+    d = d_in
+    for i in range(cfg.n_mlp_layers):
+        specs[f"l{i}"] = _linear_specs(d, cfg.mlp_hidden)
+        d = cfg.mlp_hidden
+    specs["out"] = _linear_specs(d, d_out)
+    return specs
+
+
+def _mlp(p, x, cfg: NetConfig):
+    for i in range(cfg.n_mlp_layers):
+        x = jax.nn.relu(_linear(p[f"l{i}"], x))
+    return _linear(p["out"], x)
+
+
+def zero_hidden(cfg: NetConfig, batch_shape=()):
+    shape = tuple(batch_shape) + (cfg.lstm_hidden,)
+    return (jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32))
+
+
+# ------------------------------------------------------------------ actor
+def actor_specs(cfg: NetConfig):
+    return {"lstm": _lstm_specs(cfg.obs_dim, cfg.lstm_hidden),
+            "mlp": _mlp_specs(cfg, cfg.lstm_hidden + cfg.obs_dim,
+                              cfg.action_dim)}
+
+
+def actor_apply(p, obs, hidden, cfg: NetConfig):
+    """obs [..., obs_dim]; hidden (h,c). Returns (action [-1,1], hidden')."""
+    hc = lstm_step(p["lstm"], hidden, obs)
+    feat = jnp.concatenate([hc[0], obs], axis=-1)
+    return jnp.tanh(_mlp(p["mlp"], feat, cfg)), hc
+
+
+# ------------------------------------------------------------------ critic
+def critic_specs(cfg: NetConfig):
+    d_in = cfg.obs_dim + cfg.action_dim
+    return {"lstm": _lstm_specs(d_in, cfg.lstm_hidden),
+            "mlp": _mlp_specs(cfg, cfg.lstm_hidden + d_in, 1)}
+
+
+def critic_apply(p, obs, action, hidden, cfg: NetConfig):
+    x = jnp.concatenate([obs, action], axis=-1)
+    hc = lstm_step(p["lstm"], hidden, x)
+    feat = jnp.concatenate([hc[0], x], axis=-1)
+    return _mlp(p["mlp"], feat, cfg)[..., 0], hc
+
+
+def init_actor_critic(key, cfg: NetConfig, n_critics: int = 1):
+    ka, kc = jax.random.split(key)
+    params = {"actor": init_params(actor_specs(cfg), ka)}
+    for i in range(n_critics):
+        params[f"critic{i}"] = init_params(
+            critic_specs(cfg), jax.random.fold_in(kc, i))
+    return params

@@ -1,0 +1,122 @@
+"""O2 system — integrated Online tuning + Offline training (paper §3.4.2).
+
+Two models:
+  * ONLINE: serves recommendations immediately (frozen between swaps);
+  * OFFLINE: continually fine-tunes on fresh transitions collected online.
+
+A divergence monitor (KS statistic over key-distribution quantiles + W/R
+drift) decides when data has shifted; at assessment points, if divergence
+exceeds the threshold and the offline model beats the online one on the
+recent window, the online model is swapped (Example 3.2's
+stable-vs-dynamic-phase behaviour)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ddpg
+from repro.core.ddpg import DDPGConfig
+from repro.core.etmdp import ETMDPConfig, rollout_episode
+from repro.core.networks import NetConfig
+from repro.core.replay import SequenceReplay
+from repro.index import env as E
+
+
+@dataclasses.dataclass(frozen=True)
+class O2Config:
+    divergence_threshold: float = 0.15   # KS distance on key quantiles
+    wr_shift_threshold: float = 0.5      # relative W/R change
+    assess_every: int = 1                # windows between assessments
+    offline_updates_per_window: int = 16
+    eval_episodes: int = 1
+    n_quantiles: int = 32
+
+
+def _quantiles(keys: np.ndarray, n: int) -> np.ndarray:
+    return np.quantile(np.asarray(keys), np.linspace(0.0, 1.0, n))
+
+
+def ks_distance(q_ref: np.ndarray, q_new: np.ndarray) -> float:
+    """KS statistic between two distributions given matched quantile grids."""
+    grid = np.union1d(q_ref, q_new)
+    cdf = lambda q: np.searchsorted(q, grid, side="right") / len(q)
+    return float(np.max(np.abs(cdf(q_ref) - cdf(q_new))))
+
+
+class O2System:
+    def __init__(self, pretrained_state, net_cfg: NetConfig,
+                 ddpg_cfg: DDPGConfig, env_cfg: E.EnvConfig,
+                 et_cfg: ETMDPConfig, o2_cfg: O2Config = O2Config(),
+                 seed: int = 0):
+        copy = lambda s: jax.tree.map(lambda x: x, s)
+        self.online = copy(pretrained_state)
+        self.offline = copy(pretrained_state)
+        self.net_cfg, self.ddpg_cfg = net_cfg, ddpg_cfg
+        self.env_cfg, self.et_cfg, self.cfg = env_cfg, et_cfg, o2_cfg
+        self.replay = SequenceReplay(8192, E.obs_dim(), env_cfg.space.dim,
+                                     net_cfg.lstm_hidden,
+                                     seq_len=ddpg_cfg.seq_len, seed=seed)
+        self.ref_quantiles: np.ndarray | None = None
+        self.ref_wr: float | None = None
+        self.windows_seen = 0
+        self.swaps = 0
+        self.divergences: list[float] = []
+
+    # ---------- divergence detection ----------
+    def observe_window(self, data_keys, wr_ratio: float) -> dict:
+        q = _quantiles(np.asarray(data_keys), self.cfg.n_quantiles)
+        if self.ref_quantiles is None:
+            self.ref_quantiles, self.ref_wr = q, wr_ratio
+            return {"diverged": False, "ks": 0.0, "wr_shift": 0.0}
+        ks = ks_distance(self.ref_quantiles, q)
+        wr_shift = abs(wr_ratio - self.ref_wr) / max(abs(self.ref_wr), 1e-9)
+        self.divergences.append(ks)
+        diverged = (ks > self.cfg.divergence_threshold
+                    or wr_shift > self.cfg.wr_shift_threshold)
+        return {"diverged": diverged, "ks": ks, "wr_shift": wr_shift}
+
+    # ---------- the O2 loop on one window ----------
+    def tune_window(self, key, data_keys, workload, wr_ratio: float,
+                    max_steps: int | None = None) -> dict:
+        """Online-tune the current window; offline model keeps learning;
+        swap if diverged and offline wins."""
+        div = self.observe_window(data_keys, wr_ratio)
+        self.windows_seen += 1
+        env_cfg = self.env_cfg
+        if max_steps is not None:
+            env_cfg = dataclasses.replace(env_cfg, episode_len=max_steps)
+
+        key, k_on = jax.random.split(key)
+        online_summary = rollout_episode(
+            k_on, self.online, self.net_cfg, env_cfg, self.et_cfg,
+            data_keys, workload, wr_ratio, noise_scale=0.02,
+            replay=self.replay, deterministic=False)
+
+        # offline model: continual fine-tuning on accumulated transitions
+        for _ in range(self.cfg.offline_updates_per_window):
+            batch = self.replay.sample_sequences(self.ddpg_cfg.batch_size)
+            if batch is None:
+                break
+            batch = jax.tree.map(jnp.asarray, batch)
+            self.offline, _ = ddpg.update(self.offline, batch, self.net_cfg,
+                                          self.ddpg_cfg)
+
+        swapped = False
+        if div["diverged"] and \
+                self.windows_seen % self.cfg.assess_every == 0:
+            key, k_off = jax.random.split(key)
+            off_summary = rollout_episode(
+                k_off, self.offline, self.net_cfg, env_cfg, self.et_cfg,
+                data_keys, workload, wr_ratio, noise_scale=0.0,
+                deterministic=True)
+            if off_summary["best_runtime_ns"] < online_summary["best_runtime_ns"]:
+                self.online = jax.tree.map(lambda x: x, self.offline)
+                self.swaps += 1
+                swapped = True
+                q = _quantiles(np.asarray(data_keys), self.cfg.n_quantiles)
+                self.ref_quantiles, self.ref_wr = q, wr_ratio
+
+        return {**online_summary, "divergence": div, "swapped": swapped}

@@ -1,0 +1,164 @@
+"""Mesh-parallel meta-training — the paper's §6 future work, implemented.
+
+LITune's offline stage is embarrassingly parallel over tuning instances:
+every environment step is a pure jittable function (index/env.py), so a
+meta-batch of B instances vmaps into one program and shards over the mesh
+data axes.  One `parallel_rollout` step on a 2×16×16 pod advances 512+
+environments at once; the DDPG update itself is replicated (tiny nets) with
+batch-sharded sequences.
+
+This module also supplies the *paper-technique dry-run cells*
+(`launch/dryrun.py --arch litune_alex --shape meta_train`): the same
+lower+compile+roofline treatment the LM cells get, proving the tuner's
+training loop is pod-scale runnable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ddpg, networks as nets
+from repro.core.ddpg import DDPGConfig
+from repro.core.networks import NetConfig
+from repro.index import env as E
+from repro.index.features import STATE_DIM
+
+
+def batched_reset(cfg: E.EnvConfig, data_keys, workloads, wr_ratios):
+    """Vectorized reset over B instances (leading axis on all args)."""
+    def one(data, reads, inserts, wr):
+        return E.reset(cfg, data, {"reads": reads, "inserts": inserts}, wr)
+    return jax.vmap(one)(data_keys, workloads["reads"], workloads["inserts"],
+                         wr_ratios)
+
+
+@partial(jax.jit, static_argnames=("env_cfg", "net_cfg", "ddpg_cfg",
+                                   "n_steps"))
+def parallel_rollout(agent_params, env_states, obs, key,
+                     env_cfg: E.EnvConfig, net_cfg: NetConfig,
+                     ddpg_cfg: DDPGConfig, n_steps: int = 8):
+    """Roll B environments n_steps forward under the (shared) policy.
+
+    Returns (env_states', trajectories) where trajectories hold
+    [n_steps, B, ...] transitions ready for sequence replay / updates.
+    The B axis shards over the mesh data axes under pjit.
+    """
+    b = obs.shape[0]
+    hidden_a = nets.zero_hidden(net_cfg, (b,))
+    hidden_q = nets.zero_hidden(net_cfg, (b,))
+    step_fn = E.step.__wrapped__  # un-jitted core; vmapped below
+
+    def body(carry, k):
+        env_states, obs, h_a, h_q = carry
+        act, h_a2 = nets.actor_apply(agent_params["actor"], obs, h_a,
+                                     net_cfg)
+        noise = ddpg_cfg.noise_scale * jax.random.normal(k, act.shape)
+        act = jnp.clip(act + noise, -1.0, 1.0)
+        _, h_q2 = nets.critic_apply(agent_params["critic0"], obs, act, h_q,
+                                    net_cfg)
+        env_states2, obs2, rew, done, info = jax.vmap(
+            lambda s, a: step_fn(env_cfg, s, a))(env_states, act)
+        tr = {"obs": obs, "action": act, "reward": rew, "next_obs": obs2,
+              "done": done.astype(jnp.float32), "cost": info["cost"],
+              "h_a": h_a[0], "c_a": h_a[1], "h_q": h_q[0], "c_q": h_q[1],
+              "runtime_ns": info["runtime_ns"]}
+        return (env_states2, obs2, h_a2, h_q2), tr
+
+    keys = jax.random.split(key, n_steps)
+    (env_states, obs, _, _), traj = jax.lax.scan(
+        body, (env_states, obs, hidden_a, hidden_q), keys)
+    return env_states, obs, traj
+
+
+def traj_to_sequences(traj, seq_len: int):
+    """[T, B, ...] trajectories -> sequence batch for ddpg.update."""
+    t = traj["reward"].shape[0]
+    n = (t // seq_len) * seq_len
+    # fold (time-chunks, B) into the batch dim
+    out = {}
+    for k in ("obs", "action", "reward", "next_obs", "done", "cost"):
+        x = traj[k][:n]
+        x = x.reshape(n // seq_len, seq_len, x.shape[1], *x.shape[2:])
+        x = jnp.moveaxis(x, 2, 1)  # [chunks, B, L, ...]
+        out[k] = x.reshape(-1, seq_len, *x.shape[3:])
+    for k in ("h_a", "c_a", "h_q", "c_q"):
+        x = traj[k][:n].reshape(n // seq_len, seq_len, traj[k].shape[1], -1)
+        out[k] = x[:, 0].reshape(-1, x.shape[-1])
+    return out
+
+
+def meta_train_parallel(key, net_cfg: NetConfig, ddpg_cfg: DDPGConfig,
+                        env_cfg: E.EnvConfig, meta_batch: int = 8,
+                        n_outer: int = 4, rollout_steps: int = 8,
+                        updates_per_outer: int = 4, seed: int = 0):
+    """Data-parallel variant of core/maml.meta_train: all instances advance
+    in one vmapped program per outer iteration (single- or multi-host)."""
+    import numpy as np
+    from repro.core.maml import sample_task
+    from repro.index.workloads import WorkloadConfig, make_workload, sample_keys
+    rng = np.random.default_rng(seed)
+    state = ddpg.init_state(key, net_cfg, ddpg_cfg)
+    history = []
+    for it in range(n_outer):
+        tasks = [sample_task(rng) for _ in range(meta_batch)]
+        # batched envs need uniform array shapes: fixed 50/50 read/insert
+        # split; task diversity comes from distribution + drift (the
+        # sequential maml path keeps the full W/R variation)
+        envs = []
+        for t in tasks:
+            kk = jax.random.PRNGKey(t.seed)
+            d = sample_keys(kk, t.n_keys, t.dist, shift=t.drift)
+            w = make_workload(jax.random.fold_in(kk, 1), d,
+                              WorkloadConfig(n_reads=t.n_queries // 2,
+                                             n_inserts=t.n_queries // 2,
+                                             insert_drift=t.drift), t.dist)
+            envs.append((d, w))
+        data = jnp.stack([d for d, _ in envs])
+        workloads = {
+            "reads": jnp.stack([w["reads"] for _, w in envs]),
+            "inserts": jnp.stack([w["inserts"] for _, w in envs]),
+        }
+        wr = jnp.ones((meta_batch,), jnp.float32)
+        env_states, obs = batched_reset(env_cfg, data, workloads, wr)
+        key, k = jax.random.split(key)
+        env_states, obs, traj = parallel_rollout(
+            state["params"], env_states, obs, k, env_cfg, net_cfg, ddpg_cfg,
+            n_steps=rollout_steps)
+        batch = traj_to_sequences(traj, ddpg_cfg.seq_len)
+        for _ in range(updates_per_outer):
+            state, metrics = ddpg.update(state, batch, net_cfg, ddpg_cfg)
+        history.append({
+            "iter": it,
+            "mean_runtime": float(jnp.mean(traj["runtime_ns"])),
+            "best_runtime": float(jnp.min(traj["runtime_ns"])),
+            "violations": float(jnp.sum(traj["cost"])),
+            "critic_loss": float(metrics["critic_loss"]),
+        })
+    return state, history
+
+
+# ------------------------------------------------------------------
+# Dry-run support: the paper-technique cell.
+def litune_cell_inputs(env_cfg: E.EnvConfig, net_cfg: NetConfig,
+                       meta_batch: int, n_keys: int = 4096,
+                       n_queries: int = 4096):
+    """Abstract (ShapeDtypeStruct, logical-axes) inputs for lowering
+    `parallel_rollout` on a production mesh: B tuning instances shard over
+    the data axes, agent parameters replicate."""
+    f32 = jnp.float32
+    sds = {
+        "data_keys": jax.ShapeDtypeStruct((meta_batch, n_keys), f32),
+        "reads": jax.ShapeDtypeStruct((meta_batch, n_queries // 2), f32),
+        "inserts": jax.ShapeDtypeStruct((meta_batch, n_queries // 2), f32),
+        "wr": jax.ShapeDtypeStruct((meta_batch,), f32),
+        "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
+    }
+    axes = {
+        "data_keys": ("batch", None), "reads": ("batch", None),
+        "inserts": ("batch", None), "wr": ("batch",),
+        "key": (None,),
+    }
+    return sds, axes

@@ -1,0 +1,98 @@
+"""Sequence replay buffer for the LSTM-context DDPG (R2D2-style stored
+hidden states).  Numpy ring buffer on host; batches ship to device per
+update.  Sequences never cross episode boundaries."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SequenceReplay:
+    def __init__(self, capacity: int, obs_dim: int, action_dim: int,
+                 lstm_hidden: int, seq_len: int = 8, seed: int = 0):
+        self.capacity = capacity
+        self.seq_len = seq_len
+        self.rng = np.random.default_rng(seed)
+        self.size = 0
+        self.ptr = 0
+        f32 = np.float32
+        self.obs = np.zeros((capacity, obs_dim), f32)
+        self.action = np.zeros((capacity, action_dim), f32)
+        self.reward = np.zeros((capacity,), f32)
+        self.next_obs = np.zeros((capacity, obs_dim), f32)
+        self.done = np.zeros((capacity,), f32)
+        self.cost = np.zeros((capacity,), f32)
+        self.h_a = np.zeros((capacity, lstm_hidden), f32)
+        self.c_a = np.zeros((capacity, lstm_hidden), f32)
+        self.h_q = np.zeros((capacity, lstm_hidden), f32)
+        self.c_q = np.zeros((capacity, lstm_hidden), f32)
+        self.step_left = np.zeros((capacity,), np.int32)  # steps to ep end
+
+    def add(self, obs, action, reward, next_obs, done, cost,
+            actor_hidden, critic_hidden):
+        i = self.ptr
+        self.obs[i] = obs
+        self.action[i] = action
+        self.reward[i] = reward
+        self.next_obs[i] = next_obs
+        self.done[i] = done
+        self.cost[i] = cost
+        self.h_a[i], self.c_a[i] = actor_hidden
+        self.h_q[i], self.c_q[i] = critic_hidden
+        self.step_left[i] = 0
+        # back-fill steps-to-end for the finished episode
+        if done:
+            j = i
+            count = 0
+            while True:
+                self.step_left[j] = count
+                count += 1
+                j = (j - 1) % self.capacity
+                if count >= self.size + 1 or self.done[j] or count > 10_000:
+                    break
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def _valid_starts(self):
+        idx = np.arange(self.size)
+        # a window [i, i+L) is valid if no done before its last element and
+        # the whole window has been written
+        ok = np.ones(self.size, bool)
+        for off in range(self.seq_len - 1):
+            j = (idx + off) % self.capacity
+            ok &= (j < self.size)
+            if off < self.seq_len - 1:
+                ok &= (self.done[j] == 0) | (off == self.seq_len - 1)
+        # exclude windows that wrap over the write pointer
+        if self.size == self.capacity:
+            dist = (self.ptr - idx) % self.capacity
+            ok &= dist >= self.seq_len
+        return idx[ok]
+
+    def sample_sequences(self, batch: int):
+        starts = self._valid_starts()
+        if len(starts) == 0:
+            return None
+        sel = self.rng.choice(starts, size=batch, replace=True)
+        L = self.seq_len
+        gather = lambda arr: np.stack(
+            [arr[(s + np.arange(L)) % self.capacity] for s in sel])
+        return {
+            "obs": gather(self.obs), "action": gather(self.action),
+            "reward": gather(self.reward), "next_obs": gather(self.next_obs),
+            "done": gather(self.done), "cost": gather(self.cost),
+            "h_a": self.h_a[sel], "c_a": self.c_a[sel],
+            "h_q": self.h_q[sel], "c_q": self.c_q[sel],
+        }
+
+    def sample_steps(self, batch: int):
+        """Plain transition batch (for the vanilla DDPG baseline)."""
+        if self.size == 0:
+            return None
+        sel = self.rng.integers(0, self.size, size=batch)
+        return {
+            "obs": self.obs[sel], "action": self.action[sel],
+            "reward": self.reward[sel], "next_obs": self.next_obs[sel],
+            "done": self.done[sel], "cost": self.cost[sel],
+            "h_a": self.h_a[sel], "c_a": self.c_a[sel],
+            "h_q": self.h_q[sel], "c_q": self.c_q[sel],
+        }

@@ -1,0 +1,36 @@
+"""The paper's tuning-oriented reward (§4.1), verbatim.
+
+Delta_{t->0}   = (-R_t + R_0) / R_0
+Delta_{t->t-1} = (-R_t + R_{t-1}) / R_{t-1}
+
+r = ((1+D_t0)^2 - 1)^omega * (1+D_tt1)^kappa      if D_t0 > 0
+  = -((1-D_t0)^2 - 1)^omega * (1-D_tt1)^kappa     if D_t0 <= 0
+
+with omega odd (default 1) and kappa even (default 2).  R is end-to-end
+runtime (lower is better), optionally a user mix of latency/throughput.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def deltas(r_t, r_0, r_prev):
+    d_t0 = (-r_t + r_0) / jnp.maximum(r_0, 1e-9)
+    d_tt1 = (-r_t + r_prev) / jnp.maximum(r_prev, 1e-9)
+    return d_t0, d_tt1
+
+
+def reward(r_t, r_0, r_prev, omega: int = 1, kappa: int = 2):
+    assert omega % 2 == 1 and kappa % 2 == 0, "omega odd, kappa even (paper)"
+    d_t0, d_tt1 = deltas(r_t, r_0, r_prev)
+    pos = ((1.0 + d_t0) ** 2 - 1.0) ** omega * (1.0 + d_tt1) ** kappa
+    neg = -(((1.0 - d_t0) ** 2 - 1.0) ** omega) * (1.0 - d_tt1) ** kappa
+    return jnp.where(d_t0 > 0, pos, neg)
+
+
+def performance_metric(latency_ns, throughput_ops=None, w_latency: float = 1.0):
+    """User-steerable R (paper: e.g. R = 0.8*latency + 0.2/throughput)."""
+    r = w_latency * latency_ns
+    if throughput_ops is not None:
+        r = r + (1.0 - w_latency) / jnp.maximum(throughput_ops, 1e-9)
+    return r

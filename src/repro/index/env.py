@@ -1,0 +1,126 @@
+"""The learned-index tuning environment (the paper's RL environment).
+
+One step = (decode action -> index params) -> rebuild index on the reservoir
+sample -> execute the query workload -> metrics/state/reward.  This mirrors
+LITune's working process (§3.5): the index is the environment, parameters are
+actions, structural+operational metrics are states, reward follows §4.1.
+
+The env is a pure function of its state dict -> jit / vmap / scan friendly,
+which is what lets meta-training shard thousands of environments across the
+mesh `data` axis (DESIGN.md §2).
+
+Constraint costs (ET-MDP, §4.2): c_m = 1 on memory-budget violation,
+c_r = 1 on runtime-budget violation; the ET-MDP wrapper (core/etmdp.py)
+terminates when the cumulative cost exceeds C.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import reward as rw
+from repro.core.spaces import ParamSpace, alex_space, carmi_space
+from repro.index import alex, carmi
+from repro.index import cost as C
+from repro.index.features import STATE_DIM, state_vector, workload_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    index_type: str = "alex"          # alex | carmi
+    episode_len: int = 25
+    mem_budget: float = C.MEM_BUDGET_BYTES
+    runtime_budget: float = C.RUNTIME_BUDGET_NS
+    omega: int = 1
+    kappa: int = 2
+
+    @property
+    def space(self) -> ParamSpace:
+        return alex_space() if self.index_type == "alex" else carmi_space()
+
+
+def _backend(index_type: str):
+    mod = alex if index_type == "alex" else carmi
+    return mod
+
+
+def evaluate_params(cfg: EnvConfig, params_raw: dict, data_keys, workload,
+                    wr_ratio):
+    """Build + run one workload under `params_raw`.
+
+    Returns (runtime_ns, state_pieces, violations) -- the core experiment
+    primitive shared by the RL env and every baseline tuner.
+    """
+    mod = _backend(cfg.index_type)
+    if cfg.index_type == "alex":
+        idx = mod.build(data_keys, params_raw)
+        read_ns, read_m = mod.run_reads(idx, workload["reads"])
+        idx, ins_ns, ins_m = mod.run_inserts(idx, workload["inserts"],
+                                             params_raw)
+    else:
+        idx = mod.build(data_keys, params_raw)
+        read_ns, read_m = mod.run_reads(idx, workload["reads"], params_raw)
+        idx, ins_ns, ins_m = mod.run_inserts(idx, workload["inserts"],
+                                             params_raw)
+    n_ops = workload["reads"].shape[0] + workload["inserts"].shape[0]
+    runtime = (read_ns + ins_ns) / n_ops  # avg ns per operation (paper metric)
+    mem = mod.memory_bytes(idx, params_raw) if cfg.index_type == "alex" \
+        else mod.memory_bytes(idx)
+    c_m = (mem > cfg.mem_budget).astype(jnp.float32)
+    c_r = ((read_ns + ins_ns) > cfg.runtime_budget).astype(jnp.float32)
+    return runtime, (idx, read_m, ins_m), {"c_m": c_m, "c_r": c_r,
+                                           "memory_bytes": mem}
+
+
+def reset(cfg: EnvConfig, data_keys, workload, wr_ratio,
+          default_raw: dict | None = None):
+    """Initial env state: evaluate the DEFAULT parameters to set R_0."""
+    mod = _backend(cfg.index_type)
+    default_raw = default_raw or {
+        k: jnp.float32(v) for k, v in mod.DEFAULTS.items()}
+    r0, (idx, read_m, ins_m), viol = evaluate_params(
+        cfg, default_raw, data_keys, workload, wr_ratio)
+    ws = workload_stats(data_keys, wr_ratio)
+    obs = state_vector(idx, read_m, ins_m, r0, r0, r0, ws)
+    env_state = {
+        "data_keys": data_keys,
+        "reads": workload["reads"],
+        "inserts": workload["inserts"],
+        "wr_ratio": jnp.asarray(wr_ratio, jnp.float32),
+        "r0": r0, "r_prev": r0, "r_best": r0,
+        "t": jnp.int32(0),
+        "cum_cost": jnp.float32(0.0),
+    }
+    return env_state, obs
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def step(cfg: EnvConfig, env_state: dict, action: jax.Array):
+    """One tuning step. action in [-1,1]^dim."""
+    space = cfg.space
+    params_raw = space.decode(action)
+    workload = {"reads": env_state["reads"], "inserts": env_state["inserts"]}
+    runtime, (idx, read_m, ins_m), viol = evaluate_params(
+        cfg, params_raw, env_state["data_keys"], workload,
+        env_state["wr_ratio"])
+    r = rw.reward(runtime, env_state["r0"], env_state["r_prev"],
+                  cfg.omega, cfg.kappa)
+    ws = workload_stats(env_state["data_keys"], env_state["wr_ratio"])
+    obs = state_vector(idx, read_m, ins_m, runtime, env_state["r_prev"],
+                       env_state["r0"], ws)
+    cost = viol["c_m"] + viol["c_r"]
+    new_state = dict(env_state)
+    new_state["r_prev"] = runtime
+    new_state["r_best"] = jnp.minimum(env_state["r_best"], runtime)
+    new_state["t"] = env_state["t"] + 1
+    new_state["cum_cost"] = env_state["cum_cost"] + cost
+    done = new_state["t"] >= cfg.episode_len
+    info = {"runtime_ns": runtime, "cost": cost, **viol}
+    return new_state, obs, r, done, info
+
+
+def obs_dim() -> int:
+    return STATE_DIM

@@ -1,0 +1,67 @@
+"""Universal state features (paper §4.1): structural + operational metrics
+shared across index types, so one agent architecture tunes both ALEX and
+CARMI.  26-dim float32 vector, roughly normalized to O(1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+STATE_DIM = 26
+
+
+def _log1p(x):
+    return jnp.log1p(jnp.maximum(x, 0.0))
+
+
+def state_vector(idx: dict, read_m: dict, ins_m: dict, runtime_ns,
+                 r_prev_ns, r0_ns, workload_stats: dict) -> jax.Array:
+    """Assemble the state. All inputs are scalars/metrics from one step."""
+    cnt = idx["cnt"]
+    slots = jnp.maximum(idx["slots"], 1.0)
+    active = cnt > 0
+    occ = jnp.where(active, cnt / slots, 0.0)
+    n_active = jnp.sum(active).astype(jnp.float32)
+    c = idx["counters"]
+
+    feats = jnp.stack([
+        # ---- structural ----
+        _log1p(n_active) / 7.0,
+        _log1p(jnp.sum(slots)) / 16.0,                   # memory footprint
+        jnp.sum(occ) / jnp.maximum(n_active, 1.0),       # avg occupancy
+        jnp.max(occ),                                    # max occupancy
+        _log1p(jnp.max(cnt)) / 14.0,                     # biggest node
+        _log1p(jnp.max(idx["err"])) / 10.0,              # worst model error
+        _log1p(jnp.sum(idx["err"] * active)
+               / jnp.maximum(n_active, 1.0)) / 8.0,      # avg model error
+        _log1p(idx["ood_buffer"]) / 12.0,
+        _log1p(c["n_expands"]) / 8.0,
+        _log1p(c["n_splits"]) / 8.0,
+        _log1p(c["n_retrains"]) / 5.0,
+        _log1p(c["mega_leaf"]) / 8.0,
+        # ---- operational ----
+        _log1p(read_m["avg_search_dist"]) / 8.0,
+        _log1p(read_m["p99_search_dist"]) / 10.0,
+        _log1p(read_m["avg_root_err"]) / 6.0,
+        _log1p(read_m["read_ns_avg"]) / 10.0,
+        _log1p(ins_m["insert_ns_avg"]) / 10.0,
+        _log1p(ins_m["avg_displacement"]) / 6.0,
+        ins_m["ood_frac"],
+        ins_m["retrained"],
+        # ---- runtime trajectory ----
+        _log1p(runtime_ns * 1e-6) / 10.0,
+        _log1p(r_prev_ns * 1e-6) / 10.0,
+        _log1p(r0_ns * 1e-6) / 10.0,
+        # ---- workload ----
+        workload_stats["wr_ratio"] / 4.0,
+        workload_stats["key_mean"],
+        workload_stats["key_std"],
+    ]).astype(jnp.float32)
+    return feats
+
+
+def workload_stats(data_keys: jax.Array, wr_ratio) -> dict:
+    return {
+        "wr_ratio": jnp.asarray(wr_ratio, jnp.float32),
+        "key_mean": jnp.mean(data_keys).astype(jnp.float32),
+        "key_std": jnp.std(data_keys).astype(jnp.float32),
+    }

@@ -1,0 +1,111 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Grid (B*H, n_q_blocks, n_kv_blocks) with the kv axis minor-most: TPU grids
+execute sequentially over the last axis, so the online-softmax running state
+(m, l, acc) lives in VMEM scratch and is carried across kv blocks; the
+output tile is written once on the final kv block.  Block sizes default to
+(128, 128) -- MXU-aligned -- and the whole working set
+(q_blk + k_blk + v_blk + acc ~ 4*128*head_dim*4B) stays far under the ~16MB
+VMEM budget for every assigned head_dim (64..256).
+
+This kernel is what removes the [B,H,S,S] f32 probability traffic that
+dominates the memory roofline term of the jnp baseline (EXPERIMENTS.md
+§Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                  # [bq, d]
+    k = k_ref[0]                                  # [bk, d]
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [bq, bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_new = acc_prev * alpha[:, None] + pv
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        out = acc_new / jnp.maximum(l_new[:, None], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: float | None = None, interpret: bool = True):
+    """q/k/v [B, H, S, D] (same S for q and kv) -> [B, H, S, D]."""
+    b, h, s, d = q.shape
+    sk = k.shape[2]
+    scale = scale or 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, sk)
+    assert s % block_q == 0 and sk % block_k == 0
+    n_q, n_kv = s // block_q, sk // block_k
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv=n_kv)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

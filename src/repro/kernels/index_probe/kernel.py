@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: batched learned-index probe (the paper's hot loop).
+
+Hardware adaptation (DESIGN.md §2): instead of ALEX's pointer-chasing
+exponential search (a scalar-CPU pattern), keys live in sorted VMEM tiles
+and each grid step answers a *vector* of queries against one tile with a
+branchless bisection: log2(tile) masked-compare steps on the VPU.  The
+model-routing stage (query -> tile) happens outside as a capacity-grouped
+dispatch, mirroring the MoE token dispatch.
+
+Grid: (n_tiles,).  BlockSpec tiles: keys [tile_size] and the per-tile query
+group [qcap] are VMEM-resident; tile_size/qcap are chosen so both fit VMEM
+lanes (multiples of 128).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(keys_ref, q_ref, valid_ref, out_ref, *, tile: int):
+    keys = keys_ref[0]                         # [tile] f32, sorted
+    q = q_ref[0]                               # [qcap] f32
+    valid = valid_ref[0]                       # [qcap] int32 (0/1)
+
+    # branchless bisection: after log2(tile) steps, lo = #(keys <= q)
+    lo = jnp.zeros(q.shape, jnp.int32)
+    width = tile
+    steps = int(math.log2(tile))
+    for _ in range(steps):                     # unrolled: static trip count
+        width //= 2
+        mid = lo + width
+        # keys[mid-1] <= q ? advance : stay   (mid in [1, tile])
+        km = keys[jnp.clip(mid - 1, 0, tile - 1)]
+        lo = jnp.where(km <= q, mid, lo)
+    # one final correction step for width 1
+    km = keys[jnp.clip(lo, 0, tile - 1)]
+    lo = jnp.where(km <= q, lo + 1, lo)
+    lo = jnp.minimum(lo, tile)
+    out_ref[0, :] = jnp.where(valid > 0, lo, -1).astype(jnp.int32)
+
+
+def probe_pallas(key_tiles: jax.Array, queries: jax.Array,
+                 valid: jax.Array, interpret: bool = True) -> jax.Array:
+    """key_tiles [n_tiles, tile]; queries/valid [n_tiles, qcap]."""
+    n_tiles, tile = key_tiles.shape
+    qcap = queries.shape[1]
+    assert tile & (tile - 1) == 0, "tile must be a power of two"
+    kern = functools.partial(_probe_kernel, tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            pl.BlockSpec((1, qcap), lambda i: (i, 0)),
+            pl.BlockSpec((1, qcap), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qcap), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, qcap), jnp.int32),
+        interpret=interpret,
+    )(key_tiles, queries, valid.astype(jnp.int32))

@@ -1,0 +1,71 @@
+"""Jitted public API for the learned-index probe kernel, including the
+model-routing dispatch (query -> tile grouping) that precedes the kernel.
+
+`batched_lookup` is the end-to-end op: (sorted keys, queries) -> global
+predecessor ranks, using a linear root model + capacity-grouped tile
+dispatch + the Pallas in-VMEM bisection kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.index_probe.kernel import probe_pallas
+from repro.kernels.index_probe.ref import probe_ref
+
+
+@partial(jax.jit, static_argnames=("tile", "qcap", "use_pallas", "interpret"))
+def batched_lookup(keys: jax.Array, queries: jax.Array, tile: int = 512,
+                   qcap: int = 0, use_pallas: bool = True,
+                   interpret: bool = True):
+    """keys [n] sorted (n % tile == 0); queries [m].
+
+    Returns (ranks [m] int32, dropped [m] bool).  `dropped` marks queries
+    beyond a tile's query capacity (retried by the caller -- same contract
+    as MoE capacity dispatch).
+    """
+    n = keys.shape[0]
+    m = queries.shape[0]
+    assert n % tile == 0
+    n_tiles = n // tile
+    qcap = qcap or max(2 * m // n_tiles, 8)
+    key_tiles = keys.reshape(n_tiles, tile)
+
+    # root routing: tile of the predecessor via boundary keys
+    boundaries = key_tiles[:, 0]
+    tile_of = jnp.clip(
+        jnp.searchsorted(boundaries, queries, side="right") - 1, 0,
+        n_tiles - 1).astype(jnp.int32)
+
+    # capacity-grouped dispatch (sort-free: scatter with per-tile cursor)
+    order = jnp.argsort(tile_of)
+    t_sorted = tile_of[order]
+    starts = jnp.searchsorted(t_sorted, jnp.arange(n_tiles))
+    pos_in_tile = jnp.arange(m) - starts[t_sorted]
+    keep = pos_in_tile < qcap
+    safe_pos = jnp.where(keep, pos_in_tile, qcap - 1)
+
+    q_grouped = jnp.full((n_tiles, qcap), -jnp.inf, queries.dtype)
+    v_grouped = jnp.zeros((n_tiles, qcap), jnp.int32)
+    q_grouped = q_grouped.at[t_sorted, safe_pos].set(
+        jnp.where(keep, queries[order], -jnp.inf), mode="drop")
+    v_grouped = v_grouped.at[t_sorted, safe_pos].max(
+        keep.astype(jnp.int32), mode="drop")
+
+    if use_pallas:
+        pos = probe_pallas(key_tiles.astype(jnp.float32),
+                           q_grouped.astype(jnp.float32), v_grouped,
+                           interpret=interpret)
+    else:
+        pos = probe_ref(key_tiles.astype(jnp.float32),
+                        q_grouped.astype(jnp.float32), v_grouped > 0)
+
+    # gather back to query order: global rank = tile_start + local rank
+    local = pos[t_sorted, safe_pos]
+    global_rank = t_sorted * tile + local
+    ranks = jnp.zeros((m,), jnp.int32).at[order].set(
+        jnp.where(keep, global_rank, -1))
+    dropped = jnp.zeros((m,), bool).at[order].set(~keep)
+    return ranks, dropped

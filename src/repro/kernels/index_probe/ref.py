@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the batched learned-index probe.
+
+Semantics: keys are sorted and partitioned into tiles of `tile` keys.
+Queries arrive pre-grouped per tile (capacity-padded, like MoE dispatch):
+`queries [n_tiles, qcap]` with `valid [n_tiles, qcap]`.  For each valid
+query the result is its predecessor rank *within the tile* (the final
+binary-search step of a learned-index lookup after the model has routed the
+query to a tile), i.e. the count of keys in the tile that are <= q.
+Invalid slots return -1.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def probe_ref(key_tiles: jnp.ndarray, queries: jnp.ndarray,
+              valid: jnp.ndarray) -> jnp.ndarray:
+    """key_tiles [n_tiles, tile] sorted per tile; queries [n_tiles, qcap];
+    valid [n_tiles, qcap] bool -> positions [n_tiles, qcap] int32."""
+    le = key_tiles[:, None, :] <= queries[:, :, None]   # [T, Q, tile]
+    pos = jnp.sum(le, axis=-1).astype(jnp.int32)        # predecessor count
+    return jnp.where(valid, pos, -1)

@@ -1,0 +1,19 @@
+"""Jitted wrapper for the selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import selective_scan
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "chunk",
+                                   "di_block"))
+def scan(u, dt, b_mat, c_mat, a, *, use_pallas: bool = True,
+         interpret: bool = True, chunk: int = 256, di_block: int = 256):
+    if use_pallas:
+        return selective_scan(u, dt, b_mat, c_mat, a, chunk=chunk,
+                              di_block=di_block, interpret=interpret)
+    return selective_scan_ref(u, dt, b_mat, c_mat, a)

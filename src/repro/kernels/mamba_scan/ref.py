@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the selective-scan (mamba1) recurrence:
+
+    h_t = h_{t-1} * exp(dt_t * A) + (dt_t * u_t) B_t
+    y_t = <h_t, C_t>
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(u, dt, b_mat, c_mat, a):
+    """u,dt [B,S,Di]; b_mat,c_mat [B,S,N]; a [Di,N] -> y [B,S,Di] f32."""
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        da = jnp.exp(dt_t[..., None] * a)                 # [B,Di,N]
+        h = h * da + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    bsz, s, di = u.shape
+    h0 = jnp.zeros((bsz, di, a.shape[1]), jnp.float32)
+    xs = (u.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          b_mat.swapaxes(0, 1).astype(jnp.float32),
+          c_mat.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1)

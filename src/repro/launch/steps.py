@@ -1,0 +1,232 @@
+"""Jittable step functions (train / prefill / decode) + their sharding trees.
+
+Shared between the real trainer/server and the multi-pod dry-run so the
+artifact that gets rooflined is the artifact that runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.models import model_zoo
+from repro.models.model_zoo import ModelBundle
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, opt_state_specs
+from repro.models.module import abstract_params, axes_tree, is_spec
+from repro.runtime import mesh_utils
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one (arch x shape) cell on a mesh."""
+    bundle: ModelBundle
+    shape: ShapeConfig
+    step_fn: Any                 # jittable callable
+    in_sds: tuple                # ShapeDtypeStructs (with shardings attached)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    rules: dict
+    mesh: Any = None
+    microbatches: int = 1
+
+
+def _shardings_for(tree_sds, tree_axes, mesh, rules):
+    return jax.tree.map(
+        lambda sds, axes: mesh_utils.logical_to_sharding(
+            axes, sds.shape, mesh, rules),
+        tree_sds, tree_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _attach(tree_sds, tree_shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, tree_shardings)
+
+
+def make_train_step(bundle: ModelBundle, opt_cfg: AdamWConfig,
+                    microbatches: int = 1):
+    """Train step with optional gradient accumulation: the batch splits
+    into `microbatches` chunks scanned sequentially, dividing activation /
+    remat-residual memory by the same factor (the standard fit lever for
+    residual-stack-dominated cells -- §Perf)."""
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            from repro.models.module import trip_scope
+            resh = lambda t: t.reshape(
+                (microbatches, t.shape[0] // microbatches) + t.shape[1:])
+            mb = jax.tree.map(resh, batch)
+
+            def acc(carry, mbatch):
+                loss_a, grads_a = carry
+                l, g = jax.value_and_grad(bundle.loss_fn)(params, **mbatch)
+                return (loss_a + l / microbatches,
+                        jax.tree.map(lambda a, b: a + b / microbatches,
+                                     grads_a, g)), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            with trip_scope(microbatches, "microbatch"):
+                (loss, grads), _ = jax.lax.scan(
+                    acc, (jnp.float32(0.0), zero), mb)
+        else:
+            loss, grads = jax.value_and_grad(bundle.loss_fn)(params, **batch)
+        params, opt_state, metrics = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        return params, opt_state, loss, metrics
+    return train_step
+
+
+def plan_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+              opt_cfg: AdamWConfig | None = None,
+              rules_override: dict | None = None,
+              remat: bool = True, fsdp: bool | None = None,
+              microbatches: int = 1) -> CellPlan:
+    """Build the jittable step + fully-sharded abstract inputs for a cell.
+
+    fsdp=None (auto): train cells shard parameters/optimizer state over the
+    data axes as well (ZeRO-3 style; GSPMD inserts per-layer all-gathers
+    inside the scan) -- the production default at 100B+ scale, and the only
+    way e.g. qwen3-235B fits 16GB/chip (EXPERIMENTS.md §Dry-run)."""
+    bundle = model_zoo.build(cfg, remat=remat)
+    tp = mesh_utils.axis_size(mesh, mesh_utils.MODEL_AXIS)
+    rules = dict(rules_override or {})
+    if fsdp is None:
+        fsdp = shape.kind == "train"
+    elif fsdp == "auto_size":
+        # FSDP only when TP-only params+optimizer (~18 B/param: bf16 p +
+        # f32 m,v + f32 grads) would not fit; for small models FSDP's
+        # data-axis weight sharding makes GSPMD batch-replicate the mlp
+        # wgrad dots (measured +46% memory term on gemma3 -- §Perf)
+        fsdp = (shape.kind == "train"
+                and bundle.n_params() * 18 / max(tp, 1) > 8 * 2**30)
+    if fsdp and shape.kind == "train":
+        rules.setdefault("embed", mesh_utils.DATA_AXES)
+    if shape.kind == "decode":
+        rules = {**model_zoo.decode_rules(cfg, tp), **rules}
+
+    p_sds = abstract_params(bundle.specs)
+    p_axes = axes_tree(bundle.specs)
+    p_shard = _shardings_for(p_sds, p_axes, mesh, rules)
+    in_sds_tree, in_axes = bundle.input_specs(shape)
+    in_shard = _shardings_for(in_sds_tree, in_axes, mesh, rules)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        o_specs = opt_state_specs(bundle.specs)
+        o_sds = abstract_params(o_specs)
+        o_axes = axes_tree(o_specs)
+        o_shard = _shardings_for(o_sds, o_axes, mesh, rules)
+        step = make_train_step(bundle, opt_cfg, microbatches=microbatches)
+        in_sds = (_attach(p_sds, p_shard), _attach(o_sds, o_shard),
+                  _attach(in_sds_tree, in_shard))
+        return CellPlan(
+            bundle=bundle, shape=shape, step_fn=step, in_sds=in_sds,
+            in_shardings=(p_shard, o_shard, in_shard),
+            out_shardings=(p_shard, o_shard, repl,
+                           {"grad_norm": repl, "lr": repl}),
+            donate_argnums=(0, 1), rules=rules, mesh=mesh,
+            microbatches=microbatches)
+
+    if shape.kind == "prefill":
+        def step(params, batch):
+            return bundle.prefill_fn(params, **batch)
+        # cache output shardings: derive from cache axes under decode rules
+        d_rules = {**model_zoo.decode_rules(cfg, tp), **(rules_override or {})}
+        from repro.models import encdec, transformer
+        if cfg.enc_dec:
+            c_sds, c_axes = encdec.encdec_cache_specs(
+                cfg, shape.global_batch, shape.seq_len)
+        else:
+            c_sds, c_axes = transformer.cache_specs(
+                cfg, shape.global_batch, shape.seq_len)
+        c_shard = _shardings_for(c_sds, c_axes, mesh, d_rules)
+        logits_shard = NamedSharding(mesh, mesh_utils.logical_to_spec(
+            ("batch", None), (shape.global_batch, cfg.vocab_size), mesh, rules))
+        in_sds = (_attach(p_sds, p_shard), _attach(in_sds_tree, in_shard))
+        return CellPlan(
+            bundle=bundle, shape=shape, step_fn=step, in_sds=in_sds,
+            in_shardings=(p_shard, in_shard),
+            out_shardings=(logits_shard, c_shard),
+            donate_argnums=(), rules=rules, mesh=mesh)
+
+    # decode
+    def step(params, batch):
+        return bundle.decode_fn(params, batch["token"], batch["cache"],
+                                batch["pos"])
+    logits_shard = NamedSharding(mesh, mesh_utils.logical_to_spec(
+        ("batch", None), (shape.global_batch, cfg.vocab_size), mesh, rules))
+    cache_shard = in_shard["cache"]
+    in_sds = (_attach(p_sds, p_shard), _attach(in_sds_tree, in_shard))
+    return CellPlan(
+        bundle=bundle, shape=shape, step_fn=step, in_sds=in_sds,
+        in_shardings=(p_shard, in_shard),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(1,), rules=rules, mesh=mesh)
+
+
+def analytic_memory(plan: CellPlan) -> dict:
+    """Sharding-exact per-device bytes for params/opt/cache/inputs plus an
+    activation estimate.  This is the TPU-relevant memory model; CPU-backend
+    memory_analysis() over-reports (no donation aliasing on host)."""
+    def tree_bytes(sds_tree, shard_tree):
+        total = 0
+        for sds, sh in zip(jax.tree.leaves(sds_tree),
+                           jax.tree.leaves(
+                               shard_tree,
+                               is_leaf=lambda x: hasattr(x, "spec"))):
+            n = 1
+            for ax in sh.spec:
+                if ax is None:
+                    continue
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    n *= plan.mesh.shape.get(a, 1)
+            total += sds.size * sds.dtype.itemsize // max(n, 1)
+        return total
+
+    cfg, shape = plan.bundle.cfg, plan.shape
+    out = {}
+    if shape.kind == "train":
+        p_sds, o_sds, b_sds = plan.in_sds
+        out["params"] = tree_bytes(p_sds, plan.in_shardings[0])
+        out["opt_state"] = tree_bytes(o_sds, plan.in_shardings[1])
+        out["grads"] = out["params"] * 2  # f32 grads of bf16 params
+        dp = mesh_utils.axis_size(plan.mesh, mesh_utils.DATA_AXES)
+        b_loc = shape.global_batch // dp // max(plan.microbatches, 1)
+        # remat residual stack: per-block carry + one block's live set
+        out["residuals"] = (cfg.n_layers // max(cfg.block_period(), 1)
+                           * b_loc * shape.seq_len * cfg.d_model * 2)
+        tp = mesh_utils.axis_size(plan.mesh, mesh_utils.MODEL_AXIS)
+        h_loc = max(cfg.n_heads // tp, 1) if cfg.n_heads else 1
+        qc = min(shape.seq_len, 2048)
+        out["attn_transient"] = 3 * b_loc * h_loc * qc * \
+            min(shape.seq_len, 2048) * 4
+    else:
+        p_sds, b_sds = plan.in_sds
+        out["params"] = tree_bytes(p_sds, plan.in_shardings[0])
+        if shape.kind == "decode":
+            out["cache"] = tree_bytes(b_sds["cache"],
+                                      plan.in_shardings[1]["cache"])
+    out["inputs"] = tree_bytes(
+        plan.in_sds[-1], plan.in_shardings[-1])
+    out["total"] = sum(v for k, v in out.items())
+    return out
+
+
+def lower_cell(plan: CellPlan):
+    jitted = jax.jit(plan.step_fn,
+                     in_shardings=plan.in_shardings,
+                     out_shardings=plan.out_shardings,
+                     donate_argnums=plan.donate_argnums)
+    # the ambient mesh makes with_sharding_constraint (mesh_utils.constrain)
+    # active during tracing -- without it every internal sharding annotation
+    # silently no-ops and GSPMD propagation is unconstrained.
+    with plan.mesh:
+        return jitted.lower(*plan.in_sds)

@@ -1,0 +1,237 @@
+"""End-to-end training driver: pjit train step + deterministic pipeline +
+checkpoint manager + fault tolerance + optional int8 cross-pod gradient
+compression and microbatch accumulation.
+
+CPU demo (the (b) deliverable, ~100M params for a few hundred steps):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3_8b \
+        --scale 100m --steps 200 --batch 8 --seq 512
+Production meshes reuse exactly this driver with --mesh 16x16 / 2x16x16
+under the dry-run device flag.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config, smoke
+from repro.data.pipeline import DataPipeline, PipelineConfig
+from repro.models import model_zoo
+from repro.models.module import abstract_params, axes_tree
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.optim import grad_compress as gc
+from repro.optim.schedules import warmup_cosine
+from repro.runtime import mesh_utils
+from repro.runtime.fault import FailureInjector
+
+
+def scale_config(cfg, scale: str):
+    """Reduced-size variants of an arch for CPU-scale end-to-end runs."""
+    if scale == "full":
+        return cfg
+    sizes = {
+        "100m": dict(n_layers=6, d_model=512, n_heads=8, n_kv_heads=4,
+                     head_dim=64, d_ff=2048, vocab_size=32768),
+        "10m": dict(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2,
+                    head_dim=64, d_ff=1024, vocab_size=8192),
+        "tiny": dict(n_layers=2, d_model=64, n_heads=2, n_kv_heads=1,
+                     head_dim=32, d_ff=128, vocab_size=512),
+    }[scale]
+    if cfg.n_experts:
+        sizes.update(n_experts=min(cfg.n_experts, 8),
+                     moe_d_ff=sizes["d_ff"] // 2)
+    if cfg.d_ff == 0:
+        sizes.update(d_ff=0)  # pure SSM
+    if cfg.enc_dec:
+        sizes.update(n_enc_layers=sizes["n_layers"], enc_seq=64)
+    if cfg.n_frontend_tokens:
+        sizes.update(n_frontend_tokens=16)
+    return dataclasses.replace(cfg, **sizes, name=f"{cfg.name}_{scale}")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    arch: str = "llama3_8b"
+    scale: str = "100m"
+    steps: int = 200
+    global_batch: int = 8
+    seq_len: int = 512
+    lr: float = 3e-4
+    warmup: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    save_every: int = 50
+    microbatch: int = 0          # 0 = no accumulation
+    grad_compress: bool = False
+    seed: int = 0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, tc: TrainerConfig, mesh=None,
+                 injector: FailureInjector | None = None):
+        self.tc = tc
+        self.mesh = mesh
+        self.injector = injector
+        cfg = scale_config(get_config(tc.arch), tc.scale)
+        self.cfg = cfg
+        self.bundle = model_zoo.build(cfg, remat=True)
+        self.opt_cfg = AdamWConfig(
+            lr=warmup_cosine(tc.lr, tc.warmup, tc.steps))
+        self.manager = CheckpointManager(tc.ckpt_dir,
+                                         save_every=tc.save_every)
+        n_shards = 1
+        if mesh is not None:
+            n_shards = mesh_utils.axis_size(mesh, mesh_utils.DATA_AXES)
+        self.pipe_cfg = PipelineConfig(
+            vocab_size=cfg.vocab_size, seq_len=tc.seq_len,
+            global_batch=tc.global_batch, seed=tc.seed)
+        self.losses: list[float] = []
+        self._build_state()
+        self._build_step()
+
+    # ------------------------------------------------------------------
+    def _build_state(self):
+        key = jax.random.PRNGKey(self.tc.seed)
+        restored, manifest = self.manager.restore_latest(
+            self._abstract_state())
+        if restored is not None:
+            self.state = restored
+            self.step = int(manifest["extra"]["next_step"])
+            self.pipe = DataPipeline.from_state(
+                self.pipe_cfg, manifest["extra"]["pipeline"])
+        else:
+            params = self.bundle.init(key)
+            state = {"params": params, "opt": init_opt_state(params)}
+            if self.tc.grad_compress:
+                state["err"] = gc.init_error_state(params)
+            self.state = state
+            self.step = 0
+            self.pipe = DataPipeline(self.pipe_cfg)
+
+    def _abstract_state(self):
+        params = abstract_params(self.bundle.specs)
+        state = {"params": params,
+                 "opt": {"m": params, "v": params,
+                         "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+        state["opt"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), state["opt"])
+        state["opt"]["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+        if self.tc.grad_compress:
+            state["err"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+        return state
+
+    # ------------------------------------------------------------------
+    def _build_step(self):
+        bundle, tc = self.bundle, self.tc
+        mesh = self.mesh
+        compress = tc.grad_compress and mesh is not None \
+            and "pod" in getattr(mesh, "shape", {})
+
+        def loss_fn(params, **batch):
+            return bundle.loss_fn(params, **batch)
+
+        if compress:
+            sample = {"tokens": jnp.zeros((2, 2), jnp.int32),
+                      "labels": jnp.zeros((2, 2), jnp.int32)}
+            grad_fn = gc.make_pod_grad_fn(
+                loss_fn, mesh,
+                abstract_params(self.bundle.specs), sample)
+
+        def train_step(state, batch):
+            if compress:
+                loss, grads, err = grad_fn(state["params"], state["err"],
+                                           batch)
+            elif tc.microbatch and tc.microbatch < tc.global_batch:
+                nmb = tc.global_batch // tc.microbatch
+                resh = lambda t: t.reshape(nmb, tc.microbatch, *t.shape[1:])
+                mb = jax.tree.map(resh, batch)
+
+                def acc_body(carry, mbatch):
+                    l, g = jax.value_and_grad(loss_fn)(state["params"],
+                                                       **mbatch)
+                    return (carry[0] + l / nmb,
+                            jax.tree.map(lambda a, b: a + b / nmb,
+                                         carry[1], g)), None
+
+                zero_g = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32),
+                    state["params"])
+                from repro.models.module import trip_scope
+                with trip_scope(nmb, "microbatch"):
+                    (loss, grads), _ = jax.lax.scan(
+                        acc_body, (jnp.float32(0.0), zero_g), mb)
+                err = None
+            else:
+                loss, grads = jax.value_and_grad(loss_fn)(state["params"],
+                                                          **batch)
+                err = None
+            params, opt, metrics = adamw_update(
+                state["params"], grads, state["opt"], self.opt_cfg)
+            new_state = {"params": params, "opt": opt}
+            if compress:
+                new_state["err"] = err
+            elif "err" in state:
+                new_state["err"] = state["err"]
+            return new_state, loss, metrics
+
+        self.train_step = jax.jit(train_step, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def run_until(self, target_step: int):
+        while self.step < target_step:
+            if self.injector is not None:
+                self.injector.check(self.step)
+            batch = next(self.pipe)
+            t0 = time.time()
+            self.state, loss, metrics = self.train_step(self.state, batch)
+            loss = float(loss)
+            self.losses.append(loss)
+            self.step += 1
+            if self.step % self.tc.log_every == 0:
+                print(f"step {self.step:5d} loss {loss:8.4f} "
+                      f"gnorm {float(metrics['grad_norm']):7.3f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"{time.time() - t0:5.2f}s/step", flush=True)
+            self.manager.maybe_save(
+                self.step, self.state,
+                extra={"next_step": self.step,
+                       "pipeline": self.pipe.state_dict()})
+        return self
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="llama3_8b")
+    ap.add_argument("--scale", default="100m",
+                    choices=["tiny", "10m", "100m", "full"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-compress", action="store_true")
+    args = ap.parse_args()
+    tc = TrainerConfig(arch=args.arch, scale=args.scale, steps=args.steps,
+                       global_batch=args.batch, seq_len=args.seq, lr=args.lr,
+                       ckpt_dir=args.ckpt_dir, save_every=args.save_every,
+                       microbatch=args.microbatch,
+                       grad_compress=args.grad_compress)
+    trainer = Trainer(tc)
+    t0 = time.time()
+    trainer.run_until(tc.steps)
+    first = np.mean(trainer.losses[:10])
+    last = np.mean(trainer.losses[-10:])
+    print(f"done: {tc.steps} steps in {time.time()-t0:.0f}s; "
+          f"loss {first:.3f} -> {last:.3f}")
+
+
+if __name__ == "__main__":
+    main()

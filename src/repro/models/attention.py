@@ -1,0 +1,348 @@
+"""GQA attention: train/prefill (flash-style chunked softmax, compact HLO)
+and decode (grouped-query against a sequence-sharded KV cache).
+
+Sharding strategy (see DESIGN.md §5):
+  * train/prefill: q projected column-parallel over `model` (flat head dim);
+    kv projections replicated when n_kv_heads % tp != 0 (true for every
+    assigned arch at tp=16), kv repeated to H heads *after* projection so the
+    repeat is a local slice per shard.  wo is row-parallel -> one all-reduce.
+  * decode: KV cache [B, S, K, Dh] sharded over `cache_seq` on `model`
+    (flash-decode pattern; GSPMD inserts the partial-softmax all-reduces).
+    Queries stay grouped [B, 1, K, R, Dh] with no head sharding.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, LayerKind
+from repro.models.layers import PARAM_DTYPE, apply_norm, apply_rope, norm_specs, rope_angles
+from repro.models.module import ParamSpec, trip_scope
+from repro.runtime.mesh_utils import constrain
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attn_specs(cfg: ArchConfig, cross: bool = False) -> dict:
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    specs = {
+        "norm": norm_specs(cfg),
+        "wq": ParamSpec((d, h, dh), PARAM_DTYPE, ("embed", "q_heads", "head_dim")),
+        "wk": ParamSpec((d, k, dh), PARAM_DTYPE, ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, k, dh), PARAM_DTYPE, ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, dh, d), PARAM_DTYPE, ("q_heads", "head_dim", "embed")),
+    }
+    if cross:
+        specs["norm_kv"] = norm_specs(cfg)
+    return specs
+
+
+# ------------------------------------------------------------------
+# Flash-style attention over full sequences (train / prefill).
+# Streaming softmax over kv chunks inside a scan over q chunks keeps the
+# HLO compact and the live set ~[B, Hloc, q_chunk, kv_chunk].
+# ------------------------------------------------------------------
+def _chunk_sizes(sq: int, sk: int) -> tuple[int, int]:
+    q_chunk = min(sq, 2048)
+    kv_chunk = min(sk, 2048)
+    while sq % q_chunk:
+        q_chunk //= 2
+    while sk % kv_chunk:
+        kv_chunk //= 2
+    return max(q_chunk, 1), max(kv_chunk, 1)
+
+
+def flash_attention_jnp(q, k, v, *, causal: bool, window: int = 0,
+                        q_offset: int = 0, kv_len=None, scale=None):
+    """q [B,Sq,H,Dh], k/v [B,Sk,H,Dh] (kv already repeated to H heads).
+
+    window > 0 limits attention to the last `window` keys (sliding window).
+    kv_len (optional scalar) masks out cache positions >= kv_len.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = scale or 1.0 / math.sqrt(dh)
+    # the whole streaming-softmax region is VMEM-resident in the Pallas
+    # flash kernel (kernels/flash_attention); the scope tag lets the
+    # roofline analyzer report kernel-projected memory traffic.
+    flash_scope = jax.named_scope("flash_fusible")
+    flash_scope.__enter__()
+    qc, kc = _chunk_sizes(sq, sk)
+    nq, nk = sq // qc, sk // kc
+
+    # keep batch/head sharding pinned through the reshapes and the scans --
+    # without these, GSPMD may replicate the batch axis inside the while
+    # bodies when FSDP also uses the data axis for weights (measured: 16x
+    # attention flops/bytes on qwen3 train).
+    blk_axes = ("batch", None, None, "q_heads", None)
+    q = constrain(q.reshape(b, nq, qc, h, dh), blk_axes)
+    k = constrain(k.reshape(b, nk, kc, h, dh), blk_axes)
+    v = constrain(v.reshape(b, nk, kc, h, dh), blk_axes)
+
+    q_pos_base = jnp.arange(qc)
+    k_pos_base = jnp.arange(kc)
+
+    def q_body(_, qi):
+        (q_blk, q_idx) = qi  # [b, qc, h, dh], scalar block index
+        q_pos = q_pos_base + q_idx * qc + q_offset
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            (k_blk, v_blk, k_idx) = ki
+            k_blk = constrain(k_blk, ("batch", None, "q_heads", None))
+            v_blk = constrain(v_blk, ("batch", None, "q_heads", None))
+            k_pos = k_pos_base + k_idx * kc
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = constrain(s, ("batch", "q_heads", None, None))
+            mask = jnp.ones((qc, kc), jnp.bool_)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            if kv_len is not None:
+                mask &= (k_pos < kv_len)[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = constrain(acc * alpha[..., None] + pv,
+                                ("batch", "q_heads", None, None))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        a0 = jnp.zeros((b, h, qc, dh), jnp.float32)
+        if nk == 1:
+            (m, l, acc), _ = kv_body((m0, l0, a0),
+                                     (k[:, 0], v[:, 0], jnp.int32(0)))
+        else:
+            with trip_scope(nk, "attn_kv"):
+                (m, l, acc), _ = jax.lax.scan(
+                    kv_body, (m0, l0, a0),
+                    (k.swapaxes(0, 1), v.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.swapaxes(1, 2)  # [b, qc, h, dh]
+
+    if nq == 1:
+        _, out = q_body(None, (q[:, 0], jnp.int32(0)))
+        out = out[:, None]
+    else:
+        with trip_scope(nq, "attn_q"):
+            _, out = jax.lax.scan(q_body, None,
+                                  (q.swapaxes(0, 1), jnp.arange(nq)))
+        out = out.swapaxes(0, 1)  # [b, nq, qc, h, dh]
+    flash_scope.__exit__(None, None, None)
+    return out.reshape(b, sq, h, dh).astype(v.dtype)
+
+
+def _flash_remat(q, k, v, *, causal, window):
+    """Flash attention with recompute-in-backward (jax.checkpoint): only
+    q/k/v and the output are saved; the O(S^2) probabilities are
+    rematerialized during the backward pass, exactly like a fused flash
+    backward kernel.  Removes the dominant activation-memory term
+    (~2GB/layer f32 probs at 4k) from every train cell."""
+    fn = jax.checkpoint(
+        lambda q_, k_, v_: flash_attention_jnp(q_, k_, v_, causal=causal,
+                                               window=window))
+    return fn(q, k, v)
+
+
+def apply_attention(p: dict, x: jax.Array, cfg: ArchConfig, kind: LayerKind,
+                    positions: jax.Array, causal: bool = True) -> jax.Array:
+    """Full-sequence self-attention (train / prefill path)."""
+    h_heads, k_heads = cfg.n_heads, cfg.n_kv_heads
+    hx = apply_norm(p["norm"], x, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", hx, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", hx, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", hx, p["wv"])
+    if cfg.use_rope:
+        sin, cos = rope_angles(positions, cfg.resolved_head_dim, kind.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    rep = h_heads // k_heads
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    q = constrain(q, ("batch", None, "q_heads", None))
+    k = constrain(k, ("batch", None, "q_heads", None))
+    v = constrain(v, ("batch", None, "q_heads", None))
+    out = _flash_remat(q, k, v, causal=causal, window=kind.window)
+    out = constrain(out, ("batch", None, "q_heads", None))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def prefill_attention(p: dict, x: jax.Array, cfg: ArchConfig, kind: LayerKind,
+                      positions: jax.Array, max_len: int = 0):
+    """Full-sequence attention that also emits the decode cache.
+
+    The cache stores *rotated* keys (decode rotates at insert time too).
+    Sliding-window layers keep only the last `window` positions, laid out in
+    ring order (slot = absolute_pos % window) to match `decode_attention`.
+    """
+    h_heads, k_heads = cfg.n_heads, cfg.n_kv_heads
+    s = x.shape[1]
+    hx = apply_norm(p["norm"], x, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", hx, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", hx, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", hx, p["wv"])
+    if cfg.use_rope:
+        sin, cos = rope_angles(positions, cfg.resolved_head_dim, kind.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+
+    max_len = max(max_len, s)
+    kt = k.transpose(0, 2, 1, 3)                 # [B, K, S, Dh]
+    vt = v.transpose(0, 2, 1, 3)
+    int8_cache = cfg.kv_cache_dtype == "int8"
+    if int8_cache:
+        kt, k_sc = _quant_kv(kt)
+        vt, v_sc = _quant_kv(vt)
+    if kind.window and min(kind.window, max_len) <= s:
+        w = min(kind.window, max_len)
+        slots = (s - w + jnp.arange(w)) % w      # ring layout
+        store = lambda t: jnp.zeros(
+            t.shape[:2] + (w,) + t.shape[3:], t.dtype
+            ).at[:, :, slots].set(t[:, :, s - w:])
+    else:
+        size = min(kind.window, max_len) if kind.window else max_len
+        store = lambda t: jnp.pad(
+            t, [(0, 0), (0, 0), (0, size - t.shape[2]), (0, 0)])
+    cache = {"k": store(kt), "v": store(vt)}
+    if int8_cache:
+        cache["k_scale"] = store(k_sc)
+        cache["v_scale"] = store(v_sc)
+
+    rep = h_heads // k_heads
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    q = constrain(q, ("batch", None, "q_heads", None))
+    k = constrain(k, ("batch", None, "q_heads", None))
+    v = constrain(v, ("batch", None, "q_heads", None))
+    out = flash_attention_jnp(q, k, v, causal=True, window=kind.window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+def apply_cross_attention(p: dict, x: jax.Array, cfg: ArchConfig,
+                          enc_kv: tuple[jax.Array, jax.Array]) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder k/v [B,Se,H,Dh]."""
+    hx = apply_norm(p["norm"], x, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", hx, p["wq"])
+    k, v = enc_kv
+    rep = cfg.n_heads // cfg.n_kv_heads
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    out = flash_attention_jnp(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_kv(p: dict, enc_out: jax.Array, cfg: ArchConfig):
+    """Precompute cross-attention k/v from encoder output (kept per layer)."""
+    h = apply_norm(p["norm_kv"], enc_out, cfg)
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    return k, v
+
+
+# ------------------------------------------------------------------
+# Decode path: one new token against a KV cache.
+# ------------------------------------------------------------------
+def init_kv_cache(cfg: ArchConfig, kind: LayerKind, batch: int, seq: int):
+    """Abstract/zero cache shapes for one attention layer.
+
+    Spec values are (shape, axes) or (shape, axes, dtype).  With
+    kv_cache_dtype="int8" the cache stores symmetric per-(batch, head,
+    position) quantized keys/values plus bf16 scales: 2x less HBM read per
+    decode step on the memory-bound serving cells (§Perf cell C)."""
+    eff = min(seq, kind.window) if kind.window else seq
+    # [B, K, S, Dh]: per-head-contiguous layout; the decode dot contracts Dh
+    # (scores) and S (values) with no transposes on either backend.
+    shape = (batch, cfg.n_kv_heads, eff, cfg.resolved_head_dim)
+    axes = ("cache_batch", "kv_heads", "cache_seq", "head_dim")
+    if cfg.kv_cache_dtype == "int8":
+        import jax.numpy as _jnp
+        s_shape = shape[:-1] + (1,)
+        s_axes = axes[:-1] + (None,)
+        return {"k": (shape, axes, _jnp.int8),
+                "v": (shape, axes, _jnp.int8),
+                "k_scale": (s_shape, s_axes, _jnp.bfloat16),
+                "v_scale": (s_shape, s_axes, _jnp.bfloat16)}
+    return {"k": (shape, axes), "v": (shape, axes)}
+
+
+def _quant_kv(x: jax.Array):
+    """x [..., Dh] -> (int8 values, bf16 scale [..., 1])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def decode_attention(p: dict, x: jax.Array, cfg: ArchConfig, kind: LayerKind,
+                     cache: dict, pos: jax.Array) -> tuple[jax.Array, dict]:
+    """x [B,1,D]; cache {k,v: [B,S,K,Dh]}; pos scalar int32 (tokens so far).
+
+    Sliding-window layers use the cache as a ring buffer of size `window`.
+    """
+    b = x.shape[0]
+    k_heads, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    rep = cfg.n_heads // k_heads
+    hx = apply_norm(p["norm"], x, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", hx, p["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", hx, p["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", hx, p["wv"])
+    if cfg.use_rope:
+        sin, cos = rope_angles(pos[None], dh, kind.rope_theta)
+        q = apply_rope(q, sin[None], cos[None])
+        k_new = apply_rope(k_new, sin[None], cos[None])
+
+    s_cache = cache["k"].shape[2]
+    if kind.window:  # ring buffer
+        slot = pos % s_cache
+        valid = jnp.arange(s_cache) < jnp.minimum(pos + 1, s_cache)
+    else:
+        slot = pos
+        valid = jnp.arange(s_cache) <= pos
+    int8_cache = cache["k"].dtype == jnp.int8
+    kt_new = k_new.transpose(0, 2, 1, 3)
+    vt_new = v_new.transpose(0, 2, 1, 3)
+    new_cache = {}
+    if int8_cache:
+        kt_new, ks_new = _quant_kv(kt_new)
+        vt_new, vs_new = _quant_kv(vt_new)
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ks_new, slot, axis=2)
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vs_new, slot, axis=2)
+    k_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], kt_new.astype(cache["k"].dtype), slot, axis=2)
+    v_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vt_new.astype(cache["v"].dtype), slot, axis=2)
+
+    # grouped-query attention over the cache, no head repeat materialized.
+    # int8 path: the per-position scale factors out of the Dh contraction
+    # (scores) and folds into the probabilities (values), so the dequantized
+    # cache is never materialized.
+    qg = q.reshape(b, k_heads, rep, dh)
+    s = jnp.einsum("bkrd,bksd->bkrs", qg, k_c.astype(qg.dtype),
+                   preferred_element_type=jnp.float32) / math.sqrt(dh)
+    if int8_cache:
+        s = s * new_cache["k_scale"][..., 0].astype(jnp.float32)[:, :, None, :]
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    if int8_cache:
+        w = w * new_cache["v_scale"][..., 0].astype(jnp.float32)[:, :, None, :]
+    o = jnp.einsum("bkrs,bksd->bkrd", w.astype(jnp.bfloat16),
+                   v_c.astype(jnp.bfloat16))
+    o = o.reshape(b, 1, cfg.n_heads, dh)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    new_cache["k"] = k_c
+    new_cache["v"] = v_c
+    return out, new_cache

@@ -1,0 +1,184 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/audio frontend is a STUB per the assignment: `input_specs()`
+provides precomputed frame embeddings [B, enc_seq, D].  Positions are
+sinusoidal (no shape-dependent parameters).  Norm = LayerNorm, MLP = GELU,
+no RoPE — all selected via the arch config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, LayerKind
+from repro.models import attention as attn
+from repro.models.layers import (apply_mlp, apply_norm, embed_specs,
+                                 embed_tokens, mlp_specs, norm_specs, unembed)
+from repro.models.module import stack_specs, trip_scope
+from repro.runtime.mesh_utils import constrain
+
+_KIND = LayerKind()  # plain full attention
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[:, None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_layer_specs(cfg: ArchConfig) -> dict:
+    return {"attn": attn.attn_specs(cfg),
+            "mlp": {"norm": norm_specs(cfg), **mlp_specs(cfg)}}
+
+
+def _dec_layer_specs(cfg: ArchConfig) -> dict:
+    return {"self": attn.attn_specs(cfg),
+            "cross": attn.attn_specs(cfg, cross=True),
+            "mlp": {"norm": norm_specs(cfg), **mlp_specs(cfg)}}
+
+
+def encdec_specs(cfg: ArchConfig) -> dict:
+    return {
+        "embed": embed_specs(cfg),
+        "enc": {"block": stack_specs(_enc_layer_specs(cfg), cfg.n_enc_layers),
+                "final_norm": norm_specs(cfg)},
+        "dec": {"block": stack_specs(_dec_layer_specs(cfg), cfg.n_layers)},
+        "final_norm": norm_specs(cfg),
+    }
+
+
+# ------------------------------------------------------------------ encoder
+def encode(params: dict, enc_embeds: jax.Array, cfg: ArchConfig,
+           remat: bool = True) -> jax.Array:
+    b, s, d = enc_embeds.shape
+    x = enc_embeds + _sinusoid(jnp.arange(s), d)[None].astype(enc_embeds.dtype)
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        x = x + attn.apply_attention(lp["attn"], x, cfg, _KIND, positions,
+                                     causal=False)
+        h = apply_norm(lp["mlp"]["norm"], x, cfg)
+        return x + apply_mlp(lp["mlp"], h, cfg), None
+
+    body_fn = jax.remat(body) if remat else body
+    with trip_scope(cfg.n_enc_layers, "enc_layers"):
+        x, _ = jax.lax.scan(body_fn, x, params["enc"]["block"])
+    return apply_norm(params["enc"]["final_norm"], x, cfg)
+
+
+def _stacked_cross_kv(params: dict, enc_out: jax.Array, cfg: ArchConfig):
+    def body(_, lp):
+        k, v = attn.cross_kv(lp["cross"], enc_out, cfg)
+        return None, {"k": k, "v": v}
+    with trip_scope(cfg.n_layers, "cross_kv"):
+        _, kv = jax.lax.scan(body, None, params["dec"]["block"])
+    return kv  # leaves stacked [L, B, Se, K, Dh]
+
+
+# ------------------------------------------------------------------ decoder
+def _dec_layer_train(lp, x, cfg, positions, enc_out):
+    x = x + attn.apply_attention(lp["self"], x, cfg, _KIND, positions,
+                                 causal=True)
+    kv = attn.cross_kv(lp["cross"], enc_out, cfg)
+    x = x + attn.apply_cross_attention(lp["cross"], x, cfg, kv)
+    h = apply_norm(lp["mlp"]["norm"], x, cfg)
+    return x + apply_mlp(lp["mlp"], h, cfg)
+
+
+def encdec_apply(params: dict, tokens: jax.Array, enc_embeds: jax.Array,
+                 cfg: ArchConfig, remat: bool = True):
+    """Training forward. Returns (logits [B,S,V] f32, aux=0)."""
+    enc_out = encode(params, enc_embeds, cfg, remat=remat)
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens)
+    x = x + _sinusoid(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(s)
+
+    def body(x, lp):
+        return _dec_layer_train(lp, x, cfg, positions, enc_out), None
+
+    body_fn = jax.remat(body) if remat else body
+    with trip_scope(cfg.n_layers, "dec_layers"):
+        x, _ = jax.lax.scan(body_fn, x, params["dec"]["block"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    return unembed(params["embed"], x, cfg), jnp.float32(0.0)
+
+
+def encdec_loss(params, tokens, labels, cfg, enc_embeds, remat: bool = True):
+    from repro.models.layers import softmax_cross_entropy
+    logits, aux = encdec_apply(params, tokens, enc_embeds, cfg, remat=remat)
+    return softmax_cross_entropy(logits, labels) + aux
+
+
+# ------------------------------------------------------------------ serving
+def encdec_prefill(params: dict, tokens: jax.Array, enc_embeds: jax.Array,
+                   cfg: ArchConfig, max_len: int = 0):
+    """Prefill decoder self-cache + precompute cross kv.
+
+    Returns (last logits [B,V], cache={"self": {...}, "cross": {...}, }).
+    """
+    enc_out = encode(params, enc_embeds, cfg, remat=False)
+    cross = _stacked_cross_kv(params, enc_out, cfg)
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens)
+    x = x + _sinusoid(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(s)
+
+    def body(x, xs):
+        lp, ckv = xs
+        y, cache = attn.prefill_attention(lp["self"], x, cfg, _KIND, positions,
+                                          max_len=max_len)
+        x = x + y
+        x = x + attn.apply_cross_attention(lp["cross"], x, cfg,
+                                           (ckv["k"], ckv["v"]))
+        h = apply_norm(lp["mlp"]["norm"], x, cfg)
+        return x + apply_mlp(lp["mlp"], h, cfg), cache
+
+    with trip_scope(cfg.n_layers, "dec_layers"):
+        x, self_cache = jax.lax.scan(body, x, (params["dec"]["block"], cross))
+    x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+    logits = unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"self": self_cache, "cross": cross}
+
+
+def encdec_decode_step(params: dict, token: jax.Array, cache: dict,
+                       pos: jax.Array, cfg: ArchConfig):
+    x = embed_tokens(params["embed"], token[:, None])
+    x = x + _sinusoid(pos[None], cfg.d_model)[None].astype(x.dtype)
+
+    def body(x, xs):
+        lp, self_c, ckv = xs
+        y, new_c = attn.decode_attention(lp["self"], x, cfg, _KIND, self_c, pos)
+        x = x + y
+        x = x + attn.apply_cross_attention(lp["cross"], x, cfg,
+                                           (ckv["k"], ckv["v"]))
+        h = apply_norm(lp["mlp"]["norm"], x, cfg)
+        return x + apply_mlp(lp["mlp"], h, cfg), new_c
+
+    with trip_scope(cfg.n_layers, "dec_layers"):
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec"]["block"], cache["self"], cache["cross"]))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def encdec_cache_specs(cfg: ArchConfig, batch: int, seq: int,
+                       dtype=jnp.bfloat16):
+    """ShapeDtypeStruct + logical-axes trees for the whisper decode cache."""
+    k, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = cfg.n_layers
+    self_shape = (L, batch, k, seq, dh)
+    cross_shape = (L, batch, cfg.enc_seq, k, dh)
+    self_axes = ("layers", "cache_batch", "kv_heads", "cache_seq", "head_dim")
+    cross_axes = ("layers", "cache_batch", None, "kv_heads", "head_dim")
+    sds = {"self": {"k": jax.ShapeDtypeStruct(self_shape, dtype),
+                    "v": jax.ShapeDtypeStruct(self_shape, dtype)},
+           "cross": {"k": jax.ShapeDtypeStruct(cross_shape, dtype),
+                     "v": jax.ShapeDtypeStruct(cross_shape, dtype)}}
+    axes = {"self": {"k": self_axes, "v": self_axes},
+            "cross": {"k": cross_axes, "v": cross_axes}}
+    return sds, axes

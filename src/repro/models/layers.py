@@ -1,0 +1,118 @@
+"""Shared layers: norms, RoPE, MLPs, embedding/unembedding.
+
+All functions are pure; parameters are dicts of arrays built from the
+ParamSpec trees in this module's ``*_specs`` helpers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.module import ParamSpec, fan_in_init, normal_init, ones_init, zeros_init
+from repro.runtime.mesh_utils import constrain
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ----------------------------------------------------------- norms
+def norm_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    if cfg.norm_type == "layernorm":
+        return {"scale": ParamSpec((d,), jnp.float32, ("embed",), ones_init()),
+                "bias": ParamSpec((d,), jnp.float32, ("embed",), zeros_init())}
+    return {"scale": ParamSpec((d,), jnp.float32, ("embed",), ones_init())}
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------- rope
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """positions [...]-shaped int array -> (sin, cos) of [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., S, H, Dh]; sin/cos [..., S, Dh//2] broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]  # add head axis
+    c = cos[..., None, :]
+    x32_1, x32_2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x32_1 * c - x32_2 * s, x32_2 * c + x32_1 * s], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------- MLP
+def mlp_specs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_variant == "gelu":
+        return {
+            "wi": ParamSpec((d, f), PARAM_DTYPE, ("embed", "mlp")),
+            "bi": ParamSpec((f,), jnp.float32, ("mlp",), zeros_init()),
+            "wo": ParamSpec((f, d), PARAM_DTYPE, ("mlp", "embed")),
+            "bo": ParamSpec((d,), jnp.float32, ("embed",), zeros_init()),
+        }
+    return {
+        "wg": ParamSpec((d, f), PARAM_DTYPE, ("embed", "mlp")),
+        "wu": ParamSpec((d, f), PARAM_DTYPE, ("embed", "mlp")),
+        "wd": ParamSpec((f, d), PARAM_DTYPE, ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.mlp_variant == "gelu":
+        h = jnp.einsum("...d,df->...f", x, p["wi"]) + p["bi"].astype(x.dtype)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        return jnp.einsum("...f,fd->...d", h, p["wo"]) + p["bo"].astype(x.dtype)
+    g = jnp.einsum("...d,df->...f", x, p["wg"])
+    u = jnp.einsum("...d,df->...f", x, p["wu"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, (None,) * (h.ndim - 1) + ("mlp",))
+    return jnp.einsum("...f,fd->...d", h, p["wd"])
+
+
+# ----------------------------------------------------------- embedding
+def embed_specs(cfg: ArchConfig) -> dict:
+    specs = {"embedding": ParamSpec((cfg.vocab_size, cfg.d_model), PARAM_DTYPE,
+                                    ("vocab", "embed"), normal_init(0.02))}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size), PARAM_DTYPE,
+                                     ("embed", "vocab"), fan_in_init())
+    return specs
+
+
+def embed_tokens(p: dict, tokens: jax.Array) -> jax.Array:
+    x = p["embedding"][tokens]
+    return constrain(x, ("batch",) + (None,) * (x.ndim - 1))
+
+
+def unembed(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["embedding"],
+                            preferred_element_type=jnp.float32)
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["lm_head"],
+                            preferred_element_type=jnp.float32)
+    return logits
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits [..., V] f32, labels [...] int -> mean nll."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,168 @@
+"""Mamba-1 selective-SSM block (falcon-mamba / jamba mixer).
+
+Training/prefill uses a chunked sequential scan: outer `lax.scan` over
+sequence chunks (rematerialized) with an inner exact recurrence, so the
+saved residuals are only the chunk-boundary states [B, Di, N] instead of
+[B, S, Di, N].  Decode is a single O(1) state update.
+
+The depthwise causal conv (kernel 4) is expressed as a sum of shifted
+arrays (no conv op -> simpler HLO for the roofline parser).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import PARAM_DTYPE, apply_norm, norm_specs
+from repro.models.module import ParamSpec, const_init, ones_init, trip_scope, zeros_init
+from repro.runtime.mesh_utils import constrain
+
+
+def mamba_specs(cfg: ArchConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    r, kc = cfg.resolved_dt_rank, cfg.ssm_conv
+
+    def a_log_init(key, shape, dtype):
+        # S4D-real init: A = -(1..N) per channel; honors stacked shapes
+        a = jnp.broadcast_to(jnp.arange(1, shape[-1] + 1, dtype=jnp.float32),
+                             shape)
+        return jnp.log(a).astype(dtype)
+
+    return {
+        "norm": norm_specs(cfg),
+        "in_proj": ParamSpec((d, 2 * di), PARAM_DTYPE, ("embed", "d_inner")),
+        "conv_w": ParamSpec((kc, di), jnp.float32, ("conv", "d_inner"),
+                            const_init(1.0 / kc)),
+        "conv_b": ParamSpec((di,), jnp.float32, ("d_inner",), zeros_init()),
+        "x_proj": ParamSpec((di, r + 2 * n), PARAM_DTYPE, ("d_inner", "generic")),
+        "dt_proj": ParamSpec((r, di), PARAM_DTYPE, ("dt_rank", "d_inner")),
+        "dt_bias": ParamSpec((di,), jnp.float32, ("d_inner",), const_init(-4.6)),
+        "a_log": ParamSpec((di, n), jnp.float32, ("d_inner", "state"), a_log_init),
+        "d_skip": ParamSpec((di,), jnp.float32, ("d_inner",), ones_init()),
+        "out_proj": ParamSpec((di, d), PARAM_DTYPE, ("d_inner", "embed")),
+    }
+
+
+def _causal_conv(xs: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """xs [B,S,Di]; w [K,Di]; optional state [B,K-1,Di] of trailing inputs.
+
+    Returns (conv_out [B,S,Di] f32, new_state [B,K-1,Di]).
+    """
+    kc = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xs.shape[0], kc - 1, xs.shape[2]), xs.dtype)
+    ext = jnp.concatenate([state.astype(xs.dtype), xs], axis=1)  # [B,S+K-1,Di]
+    out = jnp.zeros(xs.shape, jnp.float32)
+    for i in range(kc):  # kernel taps as shifted adds (K=4)
+        out = out + ext[:, i:i + xs.shape[1]].astype(jnp.float32) * w[i]
+    new_state = ext[:, ext.shape[1] - (kc - 1):]
+    return out + b, new_state
+
+
+def _ssm_coeffs(p: dict, cfg: ArchConfig, u: jax.Array):
+    """u [B,S,Di] (post-conv, post-silu) -> per-step (dA, dBu, C)."""
+    r, n = cfg.resolved_dt_rank, cfg.ssm_state
+    xdb = jnp.einsum("bsd,de->bse", u.astype(PARAM_DTYPE), p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", xdb[..., :r], p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"])                                     # [B,S,Di]
+    b_mat = xdb[..., r:r + n].astype(jnp.float32)           # [B,S,N]
+    c_mat = xdb[..., r + n:].astype(jnp.float32)            # [B,S,N]
+    a = -jnp.exp(p["a_log"])                                # [Di,N]
+    return dt, b_mat, c_mat, a
+
+
+def _scan_chunk(h0, u_c, dt_c, b_c, c_c, a):
+    """Exact recurrence over one chunk; inputs [B,c,...]; h0 [B,Di,N]."""
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp  # [B,Di],[B,Di],[B,N],[B,N]
+        da = jnp.exp(dt_t[..., None] * a)                  # [B,Di,N]
+        dbu = (dt_t * u_t)[..., None] * b_t[:, None, :]    # [B,Di,N]
+        h = h * da + dbu
+        y = jnp.einsum("bdn,bn->bd", h, c_t)               # [B,Di]
+        return h, y
+
+    xs = (u_c.swapaxes(0, 1), dt_c.swapaxes(0, 1),
+          b_c.swapaxes(0, 1), c_c.swapaxes(0, 1))
+    with trip_scope(u_c.shape[1], "ssm_inner"):
+        h, ys = jax.lax.scan(step, h0, xs)
+    return h, ys.swapaxes(0, 1)  # [B,c,Di]
+
+
+def _mamba_fwd(p: dict, x: jax.Array, cfg: ArchConfig, chunk: int = 256):
+    """Full-sequence mamba block. Returns (out, (final_h, conv_state))."""
+    b, s, _ = x.shape
+    di = cfg.d_inner
+    hx = apply_norm(p["norm"], x, cfg)
+    xz = jnp.einsum("bsd,de->bse", hx, p["in_proj"])
+    xs_in, z = xz[..., :di], xz[..., di:]
+    xs_in = constrain(xs_in, ("batch", None, "d_inner"))
+    conv, conv_state = _causal_conv(xs_in, p["conv_w"], p["conv_b"])
+    u = jax.nn.silu(conv)                                   # [B,S,Di] f32
+    dt, b_mat, c_mat, a = _ssm_coeffs(p, cfg, u)
+
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    nchunk = s // c
+
+    def outer(h, sl):
+        u_c, dt_c, b_c, c_c = sl
+        h, y = _scan_chunk(h, u_c, dt_c, b_c, c_c, a)
+        return h, y
+
+    h0 = jnp.zeros((b, di, cfg.ssm_state), jnp.float32)
+    if nchunk == 1:
+        h_fin, y = outer(h0, (u, dt, b_mat, c_mat))
+    else:
+        resh = lambda t: t.reshape(b, nchunk, c, *t.shape[2:]).swapaxes(0, 1)
+        with trip_scope(nchunk, "ssm_chunks"):
+            h_fin, y = jax.lax.scan(
+                jax.remat(outer), h0, (resh(u), resh(dt), resh(b_mat), resh(c_mat)))
+        y = y.swapaxes(0, 1).reshape(b, s, di)
+    y = y + u * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = constrain(y.astype(x.dtype), ("batch", None, "d_inner"))
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"]), (h_fin, conv_state)
+
+
+def apply_mamba(p: dict, x: jax.Array, cfg: ArchConfig,
+                chunk: int = 256) -> jax.Array:
+    return _mamba_fwd(p, x, cfg, chunk)[0]
+
+
+def prefill_mamba(p: dict, x: jax.Array, cfg: ArchConfig, chunk: int = 256):
+    out, (h_fin, conv_state) = _mamba_fwd(p, x, cfg, chunk)
+    cache = {"conv": conv_state.astype(jnp.bfloat16), "ssm": h_fin}
+    return out, cache
+
+
+# ------------------------------------------------------------------
+def init_ssm_cache(cfg: ArchConfig, batch: int):
+    di, n, kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": ((batch, kc - 1, di), ("cache_batch", "conv", "d_inner")),
+        "ssm": ((batch, di, n), ("cache_batch", "d_inner", "state")),
+    }
+
+
+def decode_mamba(p: dict, x: jax.Array, cfg: ArchConfig, cache: dict):
+    """One-step mamba update. x [B,1,D]; cache {conv:[B,K-1,Di], ssm:[B,Di,N]}."""
+    di = cfg.d_inner
+    hx = apply_norm(p["norm"], x, cfg)
+    xz = jnp.einsum("bsd,de->bse", hx, p["in_proj"])
+    xs_in, z = xz[..., :di], xz[..., di:]
+    conv, conv_state = _causal_conv(xs_in, p["conv_w"], p["conv_b"],
+                                    state=cache["conv"])
+    u = jax.nn.silu(conv)                                   # [B,1,Di]
+    dt, b_mat, c_mat, a = _ssm_coeffs(p, cfg, u)
+    da = jnp.exp(dt[:, 0, :, None] * a)                     # [B,Di,N]
+    dbu = (dt[:, 0] * u[:, 0])[..., None] * b_mat[:, 0][:, None, :]
+    h = cache["ssm"] * da + dbu
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0])[:, None]   # [B,1,Di]
+    y = y + u * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["out_proj"])
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}

@@ -1,0 +1,167 @@
+"""Unified model bundle: one object per architecture exposing specs, apply
+functions, abstract input specs per assigned shape, and analytic FLOPs.
+
+This is the single entry point used by smoke tests, the trainer, the server
+and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.models import encdec, transformer
+from repro.models.module import (abstract_params, axes_tree, init_params,
+                                 is_spec, param_count)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ArchConfig
+    specs: dict
+    loss_fn: Callable        # (params, **inputs) -> scalar
+    apply_fn: Callable       # (params, **inputs) -> (logits, aux)
+    prefill_fn: Callable     # (params, **inputs) -> (logits, cache)
+    decode_fn: Callable      # (params, token, cache, pos) -> (logits, cache)
+
+    # ---------------- parameters ----------------
+    def init(self, key):
+        return init_params(self.specs, key)
+
+    def abstract(self):
+        return abstract_params(self.specs)
+
+    def axes(self):
+        return axes_tree(self.specs)
+
+    def n_params(self) -> int:
+        return param_count(self.specs)
+
+    def n_active_params(self) -> int:
+        """Active-per-token params (MoE counts only k/E of expert weights)."""
+        cfg = self.cfg
+        total = self.n_params()
+        if not cfg.n_experts:
+            return total
+        moe_leaf = sum(
+            math.prod(leaf.shape)
+            for leaf in jax.tree.leaves(self.specs, is_leaf=is_spec)
+            if "expert" in leaf.axes)
+        frac = cfg.experts_per_token / max(cfg.n_experts, 1)
+        return int(total - moe_leaf + moe_leaf * frac)
+
+    def n_embed_params(self) -> int:
+        cfg = self.cfg
+        n = cfg.vocab_size * cfg.d_model
+        return n if cfg.tie_embeddings else 2 * n
+
+    # ---------------- analytic model flops ----------------
+    def model_flops(self, shape: ShapeConfig) -> float:
+        """MODEL_FLOPS per §Roofline: 6·N·D (train) / 2·N·B (per decode step),
+        N = active non-embedding params + the LM-head matmul, attention
+        quadratic excluded (the HLO/MODEL ratio then surfaces it)."""
+        cfg = self.cfg
+        n_act = self.n_active_params() - self.n_embed_params()
+        n_head = cfg.d_model * cfg.vocab_size  # lm head matmul
+        tokens = shape.global_batch * shape.seq_len
+        if shape.kind == "train":
+            return 6.0 * (n_act + n_head) * tokens
+        if shape.kind == "prefill":
+            return 2.0 * (n_act) * tokens + 2.0 * n_head * shape.global_batch
+        return 2.0 * (n_act + n_head) * shape.global_batch  # per decode step
+
+    # ---------------- abstract inputs ----------------
+    def input_specs(self, shape: ShapeConfig) -> tuple[dict, dict]:
+        """Returns (ShapeDtypeStruct tree, logical-axes tree) of step inputs."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sds: dict[str, Any] = {}
+        axes: dict[str, Any] = {}
+        tok_axes = ("batch", None)
+
+        def add(name, shp, ax, dtype=i32):
+            sds[name] = jax.ShapeDtypeStruct(shp, dtype)
+            axes[name] = ax
+
+        if shape.kind in ("train", "prefill"):
+            add("tokens", (b, s), tok_axes)
+            if shape.kind == "train":
+                add("labels", (b, s), tok_axes)
+            if cfg.frontend == "vision_stub":
+                add("frontend_embeds", (b, cfg.n_frontend_tokens, cfg.d_model),
+                    ("batch", None, None), jnp.bfloat16)
+            if cfg.enc_dec:
+                add("enc_embeds", (b, cfg.enc_seq, cfg.d_model),
+                    ("batch", None, None), jnp.bfloat16)
+        else:  # decode
+            add("token", (b,), ("batch",))
+            add("pos", (), ())
+            if cfg.enc_dec:
+                c_sds, c_axes = encdec.encdec_cache_specs(cfg, b, s)
+            else:
+                c_sds, c_axes = transformer.cache_specs(cfg, b, s)
+            sds["cache"] = c_sds
+            axes["cache"] = c_axes
+        return sds, axes
+
+    def zero_inputs(self, shape: ShapeConfig) -> dict:
+        sds, _ = self.input_specs(shape)
+        return jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype), sds)
+
+
+# ---------------------------------------------------------------- builders
+def build(cfg: ArchConfig, remat: bool = True) -> ModelBundle:
+    if cfg.enc_dec:
+        specs = encdec.encdec_specs(cfg)
+
+        def loss_fn(params, tokens, labels, enc_embeds):
+            return encdec.encdec_loss(params, tokens, labels, cfg, enc_embeds,
+                                      remat=remat)
+
+        def apply_fn(params, tokens, enc_embeds):
+            return encdec.encdec_apply(params, tokens, enc_embeds, cfg,
+                                       remat=remat)
+
+        def prefill_fn(params, tokens, enc_embeds, max_len=0):
+            return encdec.encdec_prefill(params, tokens, enc_embeds, cfg,
+                                         max_len=max_len)
+
+        def decode_fn(params, token, cache, pos):
+            return encdec.encdec_decode_step(params, token, cache, pos, cfg)
+    else:
+        specs = transformer.lm_specs(cfg)
+        fe = cfg.frontend == "vision_stub"
+
+        def loss_fn(params, tokens, labels, frontend_embeds=None):
+            return transformer.lm_loss(params, tokens, labels, cfg,
+                                       frontend_embeds if fe else None,
+                                       remat=remat)
+
+        def apply_fn(params, tokens, frontend_embeds=None):
+            return transformer.lm_apply(params, tokens, cfg,
+                                        frontend_embeds if fe else None,
+                                        remat=remat)
+
+        def prefill_fn(params, tokens, frontend_embeds=None, max_len=0):
+            return transformer.lm_prefill(params, tokens, cfg,
+                                          frontend_embeds if fe else None,
+                                          max_len=max_len)
+
+        def decode_fn(params, token, cache, pos):
+            return transformer.lm_decode_step(params, token, cache, pos, cfg)
+
+    return ModelBundle(cfg=cfg, specs=specs, loss_fn=loss_fn,
+                       apply_fn=apply_fn, prefill_fn=prefill_fn,
+                       decode_fn=decode_fn)
+
+
+def decode_rules(cfg: ArchConfig, tp: int) -> dict:
+    """Sharding-rule overrides for the decode path (see DESIGN.md §5)."""
+    if cfg.n_kv_heads and cfg.n_kv_heads % max(tp, 1) == 0:
+        return {}  # kv heads shard normally
+    return {"cache_seq": "model", "kv_heads": None}

@@ -1,0 +1,110 @@
+"""Minimal functional module system (no flax dependency).
+
+A model definition is a pytree of `ParamSpec`s.  From it we derive:
+  * real parameters           (init_params)     -- for smoke tests / training
+  * abstract parameters       (abstract_params) -- ShapeDtypeStructs, dry-run
+  * logical-axis annotations  (axes_tree)       -- for sharding rules
+
+Apply functions are plain jax-traceable functions over the params pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, tuple, jnp.dtype], jax.Array]
+
+
+def normal_init(stddev: float) -> Initializer:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+    return init
+
+
+def fan_in_init(axis: int = -2) -> Initializer:
+    """Lecun-normal-style init with fan-in = prod of contracted dims."""
+    def init(key, shape, dtype):
+        # By convention the *last* axis is the output feature axis; everything
+        # else is fan-in.  Works for [D,F], [D,H,Dh] (out = H*Dh), [E,D,F].
+        fan_in = max(1, int(jnp.prod(jnp.array(shape[:-1]))) if len(shape) == 1
+                     else math.prod(shape[:-1]))
+        std = 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    return init
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def const_init(value: float) -> Initializer:
+    return lambda key, shape, dtype: jnp.full(shape, value, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    dtype: jnp.dtype
+    axes: tuple  # logical axis names, len == len(shape)
+    init: Initializer = dataclasses.field(default=fan_in_init(), repr=False)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.init(k, s.shape, s.dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(specs):
+    return jax.tree.map(lambda s: s.abstract(), specs, is_leaf=is_spec)
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacked leading dim (for scan-over-layers weight stacking)."""
+    def stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, s.dtype, (axis_name,) + s.axes, s.init)
+    return jax.tree.map(stack, spec_tree, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+def trip_scope(n: int, tag: str = "scan"):
+    """named_scope whose name encodes a loop trip count.
+
+    runtime/hlo_analysis.py recovers while-loop trip counts from these scope
+    names in HLO op metadata ("<tag>_trip<n>"), which lets the roofline
+    analysis scale scan bodies correctly even though XLA's cost_analysis
+    counts a while body only once.
+    """
+    return jax.named_scope(f"{tag}_trip{n}")

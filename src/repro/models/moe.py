@@ -1,0 +1,113 @@
+"""Top-k MoE with sort-based, capacity-bounded dispatch.
+
+Tokens are routed *per group* (group = one sequence) so the argsort never
+crosses the data-parallel axis; the only cross-axis communication is the
+token buffer resharding from (batch->data) to (expert->model), which GSPMD
+lowers to all-to-all-like collectives.  No [T, E, C] one-hot is ever
+materialized (buffer is [G, E, C, D] with C = S*k*cf/E).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.layers import PARAM_DTYPE, norm_specs
+from repro.models.module import ParamSpec, normal_init
+from repro.runtime.mesh_utils import constrain
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    return {
+        "norm": norm_specs(cfg),
+        "router": ParamSpec((d, e), jnp.float32, ("embed", None),
+                            normal_init(0.02)),
+        "wg": ParamSpec((e, d, f), PARAM_DTYPE, ("expert", "embed", "expert_mlp")),
+        "wu": ParamSpec((e, d, f), PARAM_DTYPE, ("expert", "embed", "expert_mlp")),
+        "wd": ParamSpec((e, f, d), PARAM_DTYPE, ("expert", "expert_mlp", "embed")),
+    }
+
+
+def expert_capacity(cfg: ArchConfig, tokens_per_group: int) -> int:
+    k, e, cf = cfg.experts_per_token, cfg.n_experts, cfg.capacity_factor
+    cap = math.ceil(tokens_per_group * k * cf / e)
+    return max(4, -(-cap // 4) * 4)  # round up to a multiple of 4
+
+
+def apply_moe(p: dict, x_normed: jax.Array, cfg: ArchConfig):
+    """x_normed [B,S,D] (already normed by caller's block logic is NOT assumed
+    -- this takes the *raw* residual stream and applies its own norm).
+
+    Returns (out [B,S,D], aux_loss scalar f32).
+    """
+    from repro.models.layers import apply_norm  # local import, no cycle
+    b, s, d = x_normed.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    x = apply_norm(p["norm"], x_normed, cfg)
+    cap = expert_capacity(cfg, s)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # [B,S,E]
+    gate, eidx = jax.lax.top_k(probs, k)                     # [B,S,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style).
+    me = jnp.mean(probs, axis=(0, 1))                        # [E]
+    ce = jnp.mean(
+        (jax.nn.one_hot(eidx, e).sum(axis=2)), axis=(0, 1)) / k
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    # ---- per-group (per-sequence) sort-based dispatch ----
+    # (index tensors are pinned batch-sharded: gathers/scatters align their
+    # output sharding with the index operands, so unsharded indices would
+    # replicate the whole combine path over the data axis)
+    row = ("batch", None)
+    flat_e = constrain(eidx.reshape(b, s * k), row)          # [B, N]
+    order = constrain(jnp.argsort(flat_e, axis=-1), row)     # [B, N]
+    se = constrain(jnp.take_along_axis(flat_e, order, axis=-1), row)
+    tok = constrain(order // k, row)                         # source token
+    # position within each expert's run
+    starts = jax.vmap(lambda r_: jnp.searchsorted(r_, jnp.arange(e)))(se)
+    pos = jnp.arange(s * k)[None, :] - jnp.take_along_axis(starts, se, axis=-1)
+    pos = constrain(pos, row)
+    keep = pos < cap
+
+    gates_sorted = jnp.take_along_axis(gate.reshape(b, s * k), order, axis=-1)
+    safe_pos = jnp.where(keep, pos, cap - 1)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], se.shape)
+
+    # Dispatch is formulated as a small *index* scatter followed by a *data*
+    # gather: scattering the [B,N,D] hidden states into an expert-sharded
+    # buffer makes GSPMD all-gather the activations over the model axis
+    # (measured: 1.6e3 s collective term on qwen3 train); scattering only
+    # int32 token ids [B,E,C] is 1000x smaller, and the data gather from the
+    # (model-replicated) activations is then local per expert shard.
+    slot_tok = jnp.full((b, e, cap), s, jnp.int32)           # s = "empty"
+    slot_tok = slot_tok.at[bidx, se, safe_pos].min(
+        jnp.where(keep, tok, s).astype(jnp.int32), mode="drop")
+    slot_tok = constrain(slot_tok, ("batch", "expert", None))
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    buf = x_pad[jnp.arange(b)[:, None, None], slot_tok]      # [B,E,C,D]
+    buf = constrain(buf, ("batch", "expert", None, None))
+
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"])
+    g = constrain(g, ("batch", "expert", None, None))
+    u = jnp.einsum("becd,edf->becf", buf, p["wu"])
+    u = constrain(u, ("batch", "expert", None, None))
+    hmid = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    yexp = jnp.einsum("becf,efd->becd", hmid, p["wd"])
+    yexp = constrain(yexp, ("batch", "expert", None, None))
+
+    # combine: slot n of group b reads yexp[b, se[n], pos[n]] -- a gather
+    # along the expert-sharded dim, which GSPMD lowers to masked local
+    # gather + psum over `model`; keep the result batch-sharded.
+    slot_y = yexp[bidx, se, safe_pos]                        # [B, N, D]
+    slot_y = constrain(slot_y, ("batch", None, None))
+    slot_y = slot_y * (gates_sorted * keep)[..., None].astype(slot_y.dtype)
+    out = jnp.zeros((b, s, d), slot_y.dtype)
+    out = out.at[bidx, tok].add(slot_y)
+    out = constrain(out, ("batch", None, None))
+    return out, aux

@@ -1,0 +1,317 @@
+"""Decoder-only LM assembled from pattern-periodic layer blocks.
+
+Layers are grouped by the smallest period P of the layer-kind pattern
+(P=1 dense/MoE/SSM, P=6 gemma3 5:1 local:global, P=8 jamba 1:7 attn:mamba).
+Weights for each in-block position are stacked over the n_blocks axis and the
+whole block is scanned (jax.lax.scan) -> compact HLO at any depth; leftover
+layers (34 = 5*6 + 4) run unrolled as the "tail".
+
+Decode threads a cache pytree with the same block/tail structure through the
+scan (cache slices as xs, updated slices as ys).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, LayerKind
+from repro.models import attention as attn
+from repro.models import mamba as ssm
+from repro.models.layers import (apply_mlp, apply_norm, embed_specs,
+                                 embed_tokens, mlp_specs, norm_specs, unembed)
+from repro.models.module import abstract_params, stack_specs, trip_scope
+from repro.models.moe import apply_moe, moe_specs
+from repro.runtime import mesh_utils
+from repro.runtime.mesh_utils import constrain
+
+
+def _moe(p, x, cfg):
+    """MoE implementation dispatch: explicit-all_to_all shard_map EP when
+    requested and a model-parallel mesh is ambient; GSPMD otherwise."""
+    if cfg.moe_impl == "shard_map":
+        mesh = mesh_utils._current_mesh()
+        if mesh is not None and mesh_utils.axis_size(
+                mesh, mesh_utils.MODEL_AXIS) > 1:
+            dp = mesh_utils.axis_size(mesh, mesh_utils.DATA_AXES)
+            if x.shape[0] % dp == 0:  # batch must split over the data axes
+                from repro.models.moe_shard_map import apply_moe_shard_map
+                return apply_moe_shard_map(p, x, cfg, mesh)
+    return apply_moe(p, x, cfg)
+
+
+# ------------------------------------------------------------------ specs
+def layer_specs(cfg: ArchConfig, kind: LayerKind) -> dict:
+    d: dict[str, Any] = {}
+    if kind.mixer == "mamba":
+        d["mixer"] = ssm.mamba_specs(cfg)
+    else:
+        d["mixer"] = attn.attn_specs(cfg)
+    if kind.mlp == "dense":
+        d["mlp"] = {"norm": norm_specs(cfg), **mlp_specs(cfg)}
+    elif kind.mlp == "moe":
+        d["mlp"] = moe_specs(cfg)
+    return d
+
+
+def stack_structure(cfg: ArchConfig) -> tuple[int, int, int]:
+    """(period, n_blocks, n_tail)."""
+    period = cfg.block_period()
+    n_blocks = cfg.n_layers // period
+    return period, n_blocks, cfg.n_layers - n_blocks * period
+
+
+def lm_specs(cfg: ArchConfig) -> dict:
+    period, n_blocks, n_tail = stack_structure(cfg)
+    kinds = cfg.layer_kinds()
+    block = {f"sub{j}": stack_specs(layer_specs(cfg, kinds[j]), n_blocks)
+             for j in range(period)}
+    tail = {f"tail{t}": layer_specs(cfg, kinds[n_blocks * period + t])
+            for t in range(n_tail)}
+    return {
+        "embed": embed_specs(cfg),
+        "block": block,
+        "tail": tail,
+        "final_norm": norm_specs(cfg),
+    }
+
+
+# ------------------------------------------------------------------ cache
+def layer_cache_spec(cfg: ArchConfig, kind: LayerKind, batch: int, seq: int):
+    if kind.mixer == "mamba":
+        return ssm.init_ssm_cache(cfg, batch)
+    return attn.init_kv_cache(cfg, kind, batch, seq)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq: int,
+                dtype=jnp.bfloat16) -> tuple[dict, dict]:
+    """Returns (ShapeDtypeStruct pytree, logical-axes pytree) for the cache."""
+    period, n_blocks, n_tail = stack_structure(cfg)
+    kinds = cfg.layer_kinds()
+
+    def leaf(shape, axes, stacked):
+        if stacked:
+            shape, axes = (n_blocks,) + shape, ("layers",) + axes
+        return jax.ShapeDtypeStruct(shape, dtype), axes
+
+    def cache_for(kind, stacked):
+        spec = layer_cache_spec(cfg, kind, batch, seq)
+        sds, axes = {}, {}
+        for name, entry in spec.items():
+            shape, ax = entry[0], entry[1]
+            dt = entry[2] if len(entry) > 2 else (
+                jnp.float32 if (kind.mixer == "mamba" and name == "ssm")
+                else dtype)
+            s, a = leaf(shape, ax, stacked)
+            sds[name] = jax.ShapeDtypeStruct(s.shape, dt)
+            axes[name] = a
+        return sds, axes
+
+    sds_tree: dict = {"block": {}, "tail": {}}
+    axes_tree: dict = {"block": {}, "tail": {}}
+    for j in range(period):
+        sds_tree["block"][f"sub{j}"], axes_tree["block"][f"sub{j}"] = \
+            cache_for(kinds[j], stacked=True)
+    for t in range(n_tail):
+        kind = kinds[n_blocks * period + t]
+        sds_tree["tail"][f"tail{t}"], axes_tree["tail"][f"tail{t}"] = \
+            cache_for(kind, stacked=False)
+    return sds_tree, axes_tree
+
+
+def zero_cache(cfg: ArchConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    sds, _ = cache_specs(cfg, batch, seq, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+
+# ------------------------------------------------------------------ layer fns
+def apply_layer_train(p: dict, kind: LayerKind, x: jax.Array, cfg: ArchConfig,
+                      positions: jax.Array):
+    aux = jnp.float32(0.0)
+    if kind.mixer == "mamba":
+        x = x + ssm.apply_mamba(p["mixer"], x, cfg)
+    else:
+        x = x + attn.apply_attention(p["mixer"], x, cfg, kind, positions)
+    x = constrain(x, ("batch", "seq", None))
+    if kind.mlp == "dense":
+        h = apply_norm(p["mlp"]["norm"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    elif kind.mlp == "moe":
+        y, aux = _moe(p["mlp"], x, cfg)
+        x = x + y
+    x = constrain(x, ("batch", "seq", None))
+    return x, aux
+
+
+def apply_layer_prefill(p: dict, kind: LayerKind, x: jax.Array,
+                        cfg: ArchConfig, positions: jax.Array,
+                        max_len: int = 0):
+    """Like train, but also emits the layer's decode cache."""
+    if kind.mixer == "mamba":
+        y, cache = ssm.prefill_mamba(p["mixer"], x, cfg)
+        x = x + y
+    else:
+        y, cache = attn.prefill_attention(p["mixer"], x, cfg, kind, positions,
+                                          max_len=max_len)
+        x = x + y
+    if kind.mlp == "dense":
+        h = apply_norm(p["mlp"]["norm"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    elif kind.mlp == "moe":
+        y, _ = _moe(p["mlp"], x, cfg)
+        x = x + y
+    return x, cache
+
+
+def apply_layer_decode(p: dict, kind: LayerKind, x: jax.Array,
+                       cfg: ArchConfig, cache: dict, pos: jax.Array):
+    if kind.mixer == "mamba":
+        y, new_cache = ssm.decode_mamba(p["mixer"], x, cfg, cache)
+    else:
+        y, new_cache = attn.decode_attention(p["mixer"], x, cfg, kind, cache, pos)
+    x = x + y
+    if kind.mlp == "dense":
+        h = apply_norm(p["mlp"]["norm"], x, cfg)
+        x = x + apply_mlp(p["mlp"], h, cfg)
+    elif kind.mlp == "moe":
+        y, _ = _moe(p["mlp"], x, cfg)
+        x = x + y
+    return x, new_cache
+
+
+# ------------------------------------------------------------------ stacks
+def apply_stack_train(params: dict, x: jax.Array, cfg: ArchConfig,
+                      positions: jax.Array, remat: bool = True):
+    period, n_blocks, n_tail = stack_structure(cfg)
+    kinds = cfg.layer_kinds()
+
+    def block_body(carry, block_params):
+        x, aux = carry
+        for j in range(period):
+            x, a = apply_layer_train(block_params[f"sub{j}"], kinds[j], x,
+                                     cfg, positions)
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.remat(block_body) if remat else block_body
+    if n_blocks == 1:
+        (x, aux), _ = body((x, jnp.float32(0.0)),
+                           jax.tree.map(lambda t: t[0], params["block"]))
+    else:
+        with trip_scope(n_blocks, "layers"):
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                       params["block"])
+    for t in range(n_tail):
+        x, a = apply_layer_train(params["tail"][f"tail{t}"],
+                                 kinds[n_blocks * period + t], x, cfg, positions)
+        aux = aux + a
+    return x, aux
+
+
+def apply_stack_prefill(params: dict, x: jax.Array, cfg: ArchConfig,
+                        positions: jax.Array, max_len: int = 0):
+    period, n_blocks, n_tail = stack_structure(cfg)
+    kinds = cfg.layer_kinds()
+
+    def block_body(x, block_params):
+        caches = {}
+        for j in range(period):
+            x, caches[f"sub{j}"] = apply_layer_prefill(
+                block_params[f"sub{j}"], kinds[j], x, cfg, positions,
+                max_len=max_len)
+        return x, caches
+
+    if n_blocks == 1:
+        x, caches = block_body(x, jax.tree.map(lambda t: t[0], params["block"]))
+        cache_block = jax.tree.map(lambda t: t[None], caches)
+    else:
+        with trip_scope(n_blocks, "layers"):
+            x, cache_block = jax.lax.scan(jax.remat(block_body), x,
+                                          params["block"])
+    cache_tail = {}
+    for t in range(n_tail):
+        x, cache_tail[f"tail{t}"] = apply_layer_prefill(
+            params["tail"][f"tail{t}"], kinds[n_blocks * period + t], x, cfg,
+            positions, max_len=max_len)
+    return x, {"block": cache_block, "tail": cache_tail}
+
+
+def apply_stack_decode(params: dict, x: jax.Array, cfg: ArchConfig,
+                       cache: dict, pos: jax.Array):
+    period, n_blocks, n_tail = stack_structure(cfg)
+    kinds = cfg.layer_kinds()
+
+    def block_body(x, xs):
+        block_params, block_cache = xs
+        new_cache = {}
+        for j in range(period):
+            x, new_cache[f"sub{j}"] = apply_layer_decode(
+                block_params[f"sub{j}"], kinds[j], x, cfg,
+                block_cache[f"sub{j}"], pos)
+        return x, new_cache
+
+    if n_blocks == 1:
+        x, caches = block_body(x, jax.tree.map(lambda t: t[0],
+                                               (params["block"], cache["block"])))
+        new_block = jax.tree.map(lambda t: t[None], caches)
+    else:
+        with trip_scope(n_blocks, "layers"):
+            x, new_block = jax.lax.scan(block_body, x,
+                                        (params["block"], cache["block"]))
+    new_tail = {}
+    for t in range(n_tail):
+        x, new_tail[f"tail{t}"] = apply_layer_decode(
+            params["tail"][f"tail{t}"], kinds[n_blocks * period + t], x, cfg,
+            cache["tail"][f"tail{t}"], pos)
+    return x, {"block": new_block, "tail": new_tail}
+
+
+# ------------------------------------------------------------------ LM API
+def lm_apply(params: dict, tokens: jax.Array, cfg: ArchConfig,
+             frontend_embeds: jax.Array | None = None, remat: bool = True):
+    """Full forward for training. Returns (logits f32 [B,S,V], aux_loss)."""
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens)
+    if frontend_embeds is not None:  # vlm/audio stub: overwrite leading slots
+        n = frontend_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, frontend_embeds.astype(x.dtype), 0, axis=1)
+    positions = jnp.arange(s)
+    x, aux = apply_stack_train(params, x, cfg, positions, remat=remat)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return unembed(params["embed"], x, cfg), aux
+
+
+def lm_prefill(params: dict, tokens: jax.Array, cfg: ArchConfig,
+               frontend_embeds: jax.Array | None = None, max_len: int = 0):
+    """Prefill: returns (last-position logits [B,V], cache)."""
+    b, s = tokens.shape
+    x = embed_tokens(params["embed"], tokens)
+    if frontend_embeds is not None:
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, frontend_embeds.astype(x.dtype), 0, axis=1)
+    positions = jnp.arange(s)
+    x, cache = apply_stack_prefill(params, x, cfg, positions, max_len=max_len)
+    x_last = x[:, -1:]
+    x_last = apply_norm(params["final_norm"], x_last, cfg)
+    logits = unembed(params["embed"], x_last, cfg)[:, 0]
+    return logits, cache
+
+
+def lm_decode_step(params: dict, token: jax.Array, cache: dict,
+                   pos: jax.Array, cfg: ArchConfig):
+    """One decode step: token [B] int32, pos scalar -> (logits [B,V], cache)."""
+    x = embed_tokens(params["embed"], token[:, None])
+    x, new_cache = apply_stack_decode(params, x, cfg, cache, pos)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embed"], x, cfg)[:, 0]
+    return logits, new_cache
+
+
+def lm_loss(params: dict, tokens: jax.Array, labels: jax.Array,
+            cfg: ArchConfig, frontend_embeds=None, remat: bool = True):
+    from repro.models.layers import softmax_cross_entropy
+    logits, aux = lm_apply(params, tokens, cfg, frontend_embeds, remat=remat)
+    return softmax_cross_entropy(logits, labels) + aux

@@ -1,0 +1,39 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+Checkpoints store full logical arrays (per-host shards in a real pod, with
+the manifest describing the global shapes), so re-scaling is: load -> build
+the new mesh's shardings from the same logical-axis annotations ->
+device_put.  The data pipeline re-partitions itself from (n_shards,
+shard_id) (data/pipeline.py), so a 16x16 run can resume as 8x8 or 2x16x16
+with bitwise-identical model state and a consistent stream position.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import ckpt
+from repro.runtime import mesh_utils
+
+
+def reshard_tree(tree, axes_tree, new_mesh, rules=None):
+    """device_put every leaf with the sharding its logical axes imply on
+    `new_mesh` (divisibility fallbacks handled by logical_to_spec)."""
+    def leaf(x, axes):
+        sh = mesh_utils.logical_to_sharding(axes, x.shape, new_mesh, rules)
+        return jax.device_put(x, sh)
+    return jax.tree.map(
+        leaf, tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def restore_on_mesh(directory: str, step: int, like_tree, axes_tree,
+                    new_mesh, rules=None):
+    """Load checkpoint `step` and place it on `new_mesh`."""
+    shardings = jax.tree.map(
+        lambda sds, axes: mesh_utils.logical_to_sharding(
+            axes, sds.shape, new_mesh, rules),
+        like_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    return ckpt.restore(directory, step, like_tree, shardings)

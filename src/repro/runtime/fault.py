@@ -1,0 +1,61 @@
+"""Fault tolerance: failure injection + restart-from-checkpoint driver.
+
+The contract for 1000+ node runs (DESIGN.md §7): any host can die at any
+step; on restart the driver resumes from the latest *committed* checkpoint
+(atomic rename in checkpoint/ckpt.py guarantees no torn state), and the
+deterministic data pipeline replays the exact batch sequence from the
+restored cursor.  tests/test_fault_tolerance.py kills a training run at a
+random step and asserts the restarted run converges to the bit-identical
+parameter trajectory of an uninterrupted run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+
+class InjectedFailure(RuntimeError):
+    """Simulated node failure."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Deterministically raises at configured steps (or by probability)."""
+    fail_at_steps: tuple = ()
+    fail_prob: float = 0.0
+    seed: int = 0
+    max_failures: int = 1
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._count = 0
+
+    def check(self, step: int):
+        if self._count >= self.max_failures:
+            return
+        if step in self.fail_at_steps or (
+                self.fail_prob > 0 and self._rng.random() < self.fail_prob):
+            self._count += 1
+            raise InjectedFailure(f"simulated node failure at step {step}")
+
+
+def run_with_restarts(make_driver: Callable[[], "object"],
+                      total_steps: int, max_restarts: int = 5):
+    """Supervisor loop: (re)create the driver and run until `total_steps`.
+
+    `make_driver()` must return an object with `.step` (resumed position)
+    and `.run_until(step)` that raises on failure.  Mirrors how a cluster
+    scheduler restarts a crashed job from its checkpoint directory.
+    """
+    restarts = 0
+    while True:
+        driver = make_driver()
+        try:
+            driver.run_until(total_steps)
+            return driver, restarts
+        except InjectedFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise

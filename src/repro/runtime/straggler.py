@@ -1,0 +1,60 @@
+"""Straggler mitigation via speculative batch re-execution.
+
+Because every batch is a pure function of (seed, step, shard)
+(data/pipeline.py), a slow host's work can be re-issued on any spare host
+without coordination or data movement: the backup recomputes `batch_at(cfg,
+step)` for the straggler's shard and runs the same deterministic step.  The
+first finisher wins; results are identical, so no reconciliation is needed.
+
+This module provides the host-side policy: an EWMA step-time tracker that
+flags stragglers, and a simulator used by tests (no real multi-host here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    n_shards: int
+    ewma_alpha: float = 0.2
+    threshold: float = 1.8   # x median EWMA
+
+    def __post_init__(self):
+        self.ewma = np.zeros(self.n_shards)
+
+    def observe(self, shard: int, step_time_s: float):
+        prev = self.ewma[shard]
+        self.ewma[shard] = (step_time_s if prev == 0 else
+                            (1 - self.ewma_alpha) * prev
+                            + self.ewma_alpha * step_time_s)
+
+    def stragglers(self) -> list[int]:
+        active = self.ewma[self.ewma > 0]
+        if len(active) < max(2, self.n_shards // 2):
+            return []
+        med = float(np.median(active))
+        return [i for i in range(self.n_shards)
+                if self.ewma[i] > self.threshold * med]
+
+
+def simulate_speculative_execution(step_times: np.ndarray,
+                                   detector: StragglerDetector,
+                                   backup_speed: float = 1.0):
+    """step_times [steps, shards] -> (completion time per step with/without
+    speculation). A flagged straggler's shard is also run on a backup; the
+    step completes at min(straggler, backup) while others are unaffected."""
+    base, spec = [], []
+    for t in range(step_times.shape[0]):
+        times = step_times[t].copy()
+        for s in range(detector.n_shards):
+            detector.observe(s, times[s])
+        base.append(times.max())
+        flagged = detector.stragglers()
+        for s in flagged:
+            med = float(np.median(times))
+            times[s] = min(times[s], med / backup_speed)
+        spec.append(times.max())
+    return np.array(base), np.array(spec)

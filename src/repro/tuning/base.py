@@ -1,0 +1,92 @@
+"""Baseline tuner interface + budgeted evaluation loop with failure
+accounting (paper §5.3: Default / Random / Grid / Heuristic / SMBO / DDPG).
+
+Every tuner proposes raw-parameter dicts; the runner evaluates them on the
+(data, workload) instance through the same `evaluate_params` primitive the
+RL env uses, so comparisons are apples-to-apples.  Violations (memory /
+runtime budget) are counted as *failures* -- exactly what Fig 1(d) and
+Fig 11(f) report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spaces import ParamSpace
+from repro.index import env as E
+
+
+@dataclasses.dataclass
+class TuneResult:
+    method: str
+    best_runtime_ns: float
+    default_runtime_ns: float
+    best_params: dict
+    runtimes: list            # runtime per evaluated candidate, in order
+    failures: int             # budget violations encountered
+    evals: int
+    wall_s: float
+
+    @property
+    def best_so_far(self) -> np.ndarray:
+        return np.minimum.accumulate(np.asarray(self.runtimes))
+
+    @property
+    def speedup(self) -> float:
+        return self.default_runtime_ns / max(self.best_runtime_ns, 1e-9)
+
+
+class Tuner:
+    """Propose/observe interface."""
+    name = "base"
+
+    def __init__(self, space: ParamSpace, seed: int = 0):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+
+    def propose(self) -> dict:
+        raise NotImplementedError
+
+    def observe(self, params: dict, runtime_ns: float, failed: bool):
+        pass
+
+
+def run_tuner(tuner: Tuner, env_cfg: E.EnvConfig, data_keys, workload,
+              wr_ratio, budget_evals: int = 25,
+              budget_seconds: float | None = None) -> TuneResult:
+    from repro.index.env import evaluate_params
+    mod_defaults = __import__(
+        f"repro.index.{env_cfg.index_type}", fromlist=["DEFAULTS"]).DEFAULTS
+    default_raw = {k: jnp.float32(v) for k, v in mod_defaults.items()}
+    r_def, _, _ = evaluate_params(env_cfg, default_raw, data_keys, workload,
+                                  wr_ratio)
+    r_def = float(r_def)
+
+    t0 = time.time()
+    runtimes, failures = [], 0
+    best_rt, best_params = r_def, dict(mod_defaults)
+    for i in range(budget_evals):
+        if budget_seconds is not None and time.time() - t0 > budget_seconds:
+            break
+        params = tuner.propose()
+        params_j = {k: jnp.float32(v) for k, v in params.items()}
+        rt, _, viol = evaluate_params(env_cfg, params_j, data_keys, workload,
+                                      wr_ratio)
+        rt = float(rt)
+        failed = float(viol["c_m"]) + float(viol["c_r"]) > 0
+        failures += int(failed)
+        # a failed configuration cannot be deployed; treat as default-speed
+        eff_rt = r_def * 2.0 if failed else rt
+        runtimes.append(eff_rt)
+        tuner.observe(params, eff_rt, failed)
+        if not failed and rt < best_rt:
+            best_rt, best_params = rt, params
+    return TuneResult(
+        method=tuner.name, best_runtime_ns=best_rt,
+        default_runtime_ns=r_def, best_params=best_params,
+        runtimes=runtimes, failures=failures, evals=len(runtimes),
+        wall_s=time.time() - t0)

@@ -1,0 +1,149 @@
+"""The paper's baseline tuning methods (§5.3), self-contained:
+
+  * RandomSearch  — uniform over the raw space
+  * GridSearch    — fixed lattice fixed at the outset (no expert defaults)
+  * HeuristicSearch — simulated annealing (OpenTuner's SA kernel analogue)
+  * SMBO          — Tree-structured Parzen Estimator from scratch
+                    (Bergstra et al.; the paper uses TPE via Hyperopt)
+"""
+from __future__ import annotations
+
+import itertools
+import math
+
+import numpy as np
+
+from repro.core.spaces import ParamSpace
+from repro.tuning.base import Tuner
+
+
+class RandomSearch(Tuner):
+    name = "random"
+
+    def propose(self) -> dict:
+        return self.space.random_raw(self.rng)
+
+
+class GridSearch(Tuner):
+    name = "grid"
+
+    def __init__(self, space: ParamSpace, seed: int = 0,
+                 points_per_dim: int = 3):
+        super().__init__(space, seed)
+        axes = space.grid_axes(points_per_dim)
+        self._iter = itertools.product(*axes)
+
+    def propose(self) -> dict:
+        try:
+            point = next(self._iter)
+        except StopIteration:
+            point = [float(self.rng.choice(ax))
+                     for ax in self.space.grid_axes(3)]
+        return dict(zip(self.space.names, [float(x) for x in point]))
+
+
+class HeuristicSearch(Tuner):
+    """Simulated annealing over the normalized [-1,1]^d space."""
+    name = "heuristic"
+
+    def __init__(self, space: ParamSpace, seed: int = 0,
+                 t0: float = 1.0, cooling: float = 0.9, step: float = 0.3):
+        super().__init__(space, seed)
+        self.temp = t0
+        self.cooling = cooling
+        self.step = step
+        self.cur = self.rng.uniform(-1, 1, space.dim).astype(np.float32)
+        self.cur_val: float | None = None
+        self._pending = None
+
+    def _to_raw(self, a: np.ndarray) -> dict:
+        import jax.numpy as jnp
+        return {k: float(v) for k, v in
+                self.space.decode(jnp.asarray(a)).items()}
+
+    def propose(self) -> dict:
+        cand = np.clip(self.cur + self.rng.normal(0, self.step,
+                                                  self.space.dim), -1, 1)
+        self._pending = cand
+        return self._to_raw(cand)
+
+    def observe(self, params: dict, runtime_ns: float, failed: bool):
+        if self.cur_val is None:
+            self.cur, self.cur_val = self._pending, runtime_ns
+            return
+        delta = runtime_ns - self.cur_val
+        accept = delta < 0 or self.rng.uniform() < math.exp(
+            -delta / max(self.cur_val * self.temp, 1e-9))
+        if accept and not failed:
+            self.cur, self.cur_val = self._pending, runtime_ns
+        self.temp *= self.cooling
+
+
+class SMBO(Tuner):
+    """Tree-structured Parzen Estimator (from scratch, no hyperopt).
+
+    Splits observed configs into good (best gamma-quantile) and bad sets,
+    models each dimension with a KDE, and proposes the candidate maximizing
+    l(x)/g(x) among n_ei samples drawn from the good model.
+    """
+    name = "smbo"
+
+    def __init__(self, space: ParamSpace, seed: int = 0, gamma: float = 0.25,
+                 n_ei: int = 24, n_startup: int = 5, bw: float = 0.15):
+        super().__init__(space, seed)
+        self.gamma, self.n_ei, self.n_startup, self.bw = gamma, n_ei, n_startup, bw
+        self.X: list[np.ndarray] = []   # normalized [0,1]^d
+        self.y: list[float] = []
+
+    def _norm(self, raw: dict) -> np.ndarray:
+        x = np.array([raw[n] for n in self.space.names], np.float64)
+        return (x - self.space.lows) / np.maximum(
+            self.space.highs - self.space.lows, 1e-9)
+
+    def _denorm(self, x01: np.ndarray) -> dict:
+        x = x01 * (self.space.highs - self.space.lows) + self.space.lows
+        out = {}
+        for i, (n, kind) in enumerate(zip(self.space.names,
+                                          self.space.kinds)):
+            v = float(x[i])
+            if kind == "bool":
+                v = float(x01[i] > 0.5)
+            elif kind in ("int", "choice"):
+                v = float(round(v))
+            out[n] = v
+        return out
+
+    def _kde_logpdf(self, pts: np.ndarray, x: np.ndarray) -> np.ndarray:
+        # product of per-dim gaussian KDEs; pts [n,d], x [m,d] -> [m]
+        if len(pts) == 0:
+            return np.zeros(len(x))
+        d2 = ((x[:, None, :] - pts[None, :, :]) / self.bw) ** 2
+        log_k = -0.5 * d2.sum(-1)
+        m = log_k.max(axis=1, keepdims=True)
+        return (m[:, 0] + np.log(np.exp(log_k - m).sum(1) + 1e-300))
+
+    def propose(self) -> dict:
+        if len(self.y) < self.n_startup:
+            return self.space.random_raw(self.rng)
+        order = np.argsort(self.y)
+        n_good = max(1, int(self.gamma * len(self.y)))
+        good = np.stack([self.X[i] for i in order[:n_good]])
+        bad = np.stack([self.X[i] for i in order[n_good:]]) \
+            if len(self.y) > n_good else np.zeros((0, self.space.dim))
+        # sample candidates from the good KDE
+        centers = good[self.rng.integers(0, len(good), self.n_ei)]
+        cands = np.clip(centers + self.rng.normal(0, self.bw,
+                                                  centers.shape), 0, 1)
+        score = self._kde_logpdf(good, cands) - self._kde_logpdf(bad, cands)
+        return self._denorm(cands[int(np.argmax(score))])
+
+    def observe(self, params: dict, runtime_ns: float, failed: bool):
+        self.X.append(self._norm(params))
+        self.y.append(runtime_ns * (4.0 if failed else 1.0))
+
+
+def make_baseline(name: str, space: ParamSpace, seed: int = 0) -> Tuner:
+    return {
+        "random": RandomSearch, "grid": GridSearch,
+        "heuristic": HeuristicSearch, "smbo": SMBO,
+    }[name](space, seed)

@@ -1,0 +1,87 @@
+"""Vanilla DDPG tuner (paper §5.3 "DDPG"): a direct RL pipeline from the
+DBMS-tuning literature (CDBTune/RusKey style) embedded in our framework —
+no LSTM context, no ET-MDP safety, no Meta-RL, no O2.  Pretrained and
+fine-tuned with the same data as LITune (paper's protocol), it demonstrates
+why the tailor-made design matters (Fig 6/7: lags 10-15%; Fig 12:
+unstable training)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ddpg
+from repro.core.ddpg import DDPGConfig
+from repro.core.etmdp import ETMDPConfig, rollout_episode
+from repro.core.maml import TaskSpec, make_task_env, sample_task
+from repro.core.networks import NetConfig
+from repro.core.replay import SequenceReplay
+from repro.index import env as E
+
+
+@dataclasses.dataclass(frozen=True)
+class VanillaConfig:
+    index_type: str = "alex"
+    episode_len: int = 25
+    lstm_hidden: int = 128   # buffer layout only; hiddens are zeroed
+    mlp_hidden: int = 256
+    ddpg: DDPGConfig = DDPGConfig(use_lstm=False)
+    updates_per_episode: int = 8
+
+
+class VanillaDDPGTuner:
+    name = "ddpg"
+
+    def __init__(self, cfg: VanillaConfig = VanillaConfig(), seed: int = 0):
+        self.cfg = cfg
+        self.env_cfg = E.EnvConfig(index_type=cfg.index_type,
+                                   episode_len=cfg.episode_len)
+        self.net_cfg = NetConfig(obs_dim=E.obs_dim(),
+                                 action_dim=self.env_cfg.space.dim,
+                                 lstm_hidden=cfg.lstm_hidden,
+                                 mlp_hidden=cfg.mlp_hidden)
+        self.et_cfg = ETMDPConfig(enabled=False)  # no safety (by design)
+        self.key = jax.random.PRNGKey(seed)
+        self.key, k = jax.random.split(self.key)
+        self.state = ddpg.init_state(k, self.net_cfg, cfg.ddpg)
+        self.replay = SequenceReplay(16384, E.obs_dim(),
+                                     self.env_cfg.space.dim,
+                                     cfg.lstm_hidden,
+                                     seq_len=cfg.ddpg.seq_len, seed=seed)
+        self.rng = np.random.default_rng(seed)
+        self.train_violations = 0.0
+        self.train_returns: list[float] = []
+
+    def pretrain(self, n_episodes: int = 20, callback=None):
+        for ep in range(n_episodes):
+            task = sample_task(self.rng)
+            data, workload = make_task_env(task)
+            self.key, k = jax.random.split(self.key)
+            summary = rollout_episode(
+                k, self.state, self.net_cfg, self.env_cfg, self.et_cfg,
+                data, workload, task.wr_ratio,
+                noise_scale=self.cfg.ddpg.noise_scale, replay=self.replay)
+            self.train_violations += summary["violations"]
+            self.train_returns.append(summary["episode_return"])
+            for _ in range(self.cfg.updates_per_episode):
+                batch = self.replay.sample_sequences(self.cfg.ddpg.batch_size)
+                if batch is None:
+                    break
+                batch = jax.tree.map(jnp.asarray, batch)
+                self.state, _ = ddpg.update(self.state, batch, self.net_cfg,
+                                            self.cfg.ddpg)
+            if callback:
+                callback({"episode": ep,
+                          "return": summary["episode_return"],
+                          "violations": summary["violations"]})
+        return self.train_returns
+
+    def tune(self, data_keys, workload, wr_ratio, budget_steps: int = 25):
+        env_cfg = dataclasses.replace(self.env_cfg, episode_len=budget_steps)
+        self.key, k = jax.random.split(self.key)
+        summary = rollout_episode(k, self.state, self.net_cfg, env_cfg,
+                                  self.et_cfg, data_keys, workload, wr_ratio,
+                                  noise_scale=0.05, replay=self.replay)
+        return summary

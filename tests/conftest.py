@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benchmarks must see the real (single) device; only launch/dryrun.py pins
+the 512-device host platform."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def small_index_instance():
+    """A (data, workload) tuning instance shared across index/RL tests."""
+    from repro.index.workloads import sample_keys, wr_workload
+    key = jax.random.PRNGKey(42)
+    data = sample_keys(key, 2048, "mix")
+    workload, _ = wr_workload(jax.random.fold_in(key, 1), data, 1.0,
+                              total=2048, dist="mix")
+    return data, workload

@@ -1,0 +1,151 @@
+"""Fault tolerance / checkpointing / elastic / pipeline / straggler tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataPipeline, PipelineConfig, batch_at
+from repro.launch.train import Trainer, TrainerConfig
+from repro.runtime.fault import FailureInjector, InjectedFailure, run_with_restarts
+from repro.runtime.straggler import StragglerDetector, simulate_speculative_execution
+
+
+# ------------------------------------------------------------ pipeline
+def test_pipeline_deterministic_and_restorable():
+    cfg = PipelineConfig(vocab_size=128, seq_len=16, global_batch=4, seed=7)
+    p1 = DataPipeline(cfg)
+    seq1 = [next(p1) for _ in range(5)]
+    state = p1.state_dict()
+    p2 = DataPipeline.from_state(cfg, state)
+    b1, b2 = next(p1), next(p2)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # pure-function access matches the iterator
+    np.testing.assert_array_equal(np.asarray(seq1[3]["tokens"]),
+                                  np.asarray(batch_at(cfg, 3)["tokens"]))
+
+
+def test_pipeline_shards_partition_global_batch():
+    base = PipelineConfig(vocab_size=128, seq_len=8, global_batch=8, seed=1)
+    full = batch_at(base, 0)
+    assert full["tokens"].shape == (8, 8)
+    shard_batches = [
+        batch_at(PipelineConfig(vocab_size=128, seq_len=8, global_batch=8,
+                                seed=1, n_shards=4, shard_id=i), 0)
+        for i in range(4)]
+    assert all(b["tokens"].shape == (2, 8) for b in shard_batches)
+    # distinct shards produce distinct data (independent streams)
+    assert not np.array_equal(np.asarray(shard_batches[0]["tokens"]),
+                              np.asarray(shard_batches[1]["tokens"]))
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    path = ckpt.save(str(tmp_path), 3, tree, extra={"note": "x"})
+    assert path.endswith("step_3") and os.path.isdir(path)
+    assert not any(p.endswith(".tmp") for p in os.listdir(tmp_path))
+    restored, manifest = ckpt.restore(str(tmp_path), 3, tree)
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert manifest["extra"]["note"] == "x"
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_manager_rotation(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_every=1, keep_last=2)
+    tree = {"w": jnp.zeros((2,))}
+    for step in range(5):
+        mgr.save(step, tree)
+    assert ckpt.available_steps(str(tmp_path)) == [3, 4]
+
+
+# ------------------------------------------------------------ fault tolerance
+@pytest.mark.slow
+def test_restart_bitwise_identical_trajectory(tmp_path):
+    """Kill training mid-run; the restarted run must land on the exact same
+    parameters as an uninterrupted run (deterministic pipeline + atomic
+    checkpoints)."""
+    def tc(d):
+        return TrainerConfig(arch="llama3_8b", scale="tiny", steps=30,
+                             global_batch=2, seq_len=64,
+                             ckpt_dir=str(d), save_every=5, log_every=1000)
+
+    # uninterrupted reference
+    ref = Trainer(tc(tmp_path / "ref"))
+    ref.run_until(30)
+
+    # interrupted run: dies at step 17, restarts from step 15 checkpoint
+    injector = FailureInjector(fail_at_steps=(17,), max_failures=1)
+    holder = {"first": True}
+
+    def make_driver():
+        inj = injector if holder.pop("first", False) else None
+        return Trainer(tc(tmp_path / "faulty"), injector=inj)
+
+    driver, restarts = run_with_restarts(make_driver, 30)
+    assert restarts == 1
+
+    ref_leaves = jax.tree.leaves(ref.state["params"])
+    got_leaves = jax.tree.leaves(driver.state["params"])
+    for a, b in zip(ref_leaves, got_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------ elastic
+def test_elastic_reshard_roundtrip(tmp_path):
+    import os as _os
+    if len(jax.devices()) < 2:
+        from repro.runtime.elastic import restore_on_mesh, reshard_tree
+        from repro.runtime import mesh_utils
+        # single-device: verify the API works with a 1x1 mesh at least
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        tree = {"w": jnp.arange(8, dtype=jnp.float32).reshape(2, 4)}
+        axes = {"w": ("batch", "mlp")}
+        out = reshard_tree(tree, axes, mesh)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+        ckpt.save(str(tmp_path), 0, tree)
+        restored, _ = restore_on_mesh(str(tmp_path), 0, tree, axes, mesh)
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(tree["w"]))
+    else:
+        pytest.skip("multi-device elastic covered by dryrun")
+
+
+# ------------------------------------------------------------ straggler
+def test_straggler_detection_and_speculation():
+    rng = np.random.default_rng(0)
+    times = np.abs(rng.normal(1.0, 0.05, (50, 8)))
+    times[:, 3] *= 3.0  # shard 3 is a consistent straggler
+    det = StragglerDetector(n_shards=8)
+    base, spec = simulate_speculative_execution(times, det)
+    assert 3 in det.stragglers()
+    assert spec[10:].mean() < base[10:].mean() * 0.6  # big win after warmup
+
+
+# ------------------------------------------------------------ grad compress
+def test_grad_compression_error_feedback_tracks_sgd():
+    """Compressed-SGD trajectory must track uncompressed SGD (EF property),
+    single-device path (the psum path is covered in test_dryrun_small)."""
+    from repro.optim.grad_compress import compress_residual, dequantize
+    rng = np.random.default_rng(0)
+    w_ref = np.zeros(32)
+    w_cmp = np.zeros(32)
+    err = np.zeros(32)
+    target = rng.normal(size=32)
+    lr = 0.1
+    for step in range(200):
+        g_ref = (w_ref - target)
+        w_ref = w_ref - lr * g_ref
+        g = (w_cmp - target)
+        q, scale, err = compress_residual(jnp.asarray(g), jnp.asarray(err))
+        g_hat = np.asarray(dequantize(q, scale))
+        err = np.asarray(err)
+        w_cmp = w_cmp - lr * g_hat
+    assert np.max(np.abs(w_cmp - w_ref)) < 0.05

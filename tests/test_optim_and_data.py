@@ -1,0 +1,71 @@
+"""Optimizer + schedules + workload-generator unit/property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.adamw import AdamWConfig, adamw_update, global_norm, init_opt_state
+from repro.optim.schedules import warmup_cosine
+from repro.index.workloads import sample_keys, wr_workload
+
+
+def test_adamw_converges_on_quadratic():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=16),
+                         jnp.float32)
+    params = {"w": jnp.zeros(16, jnp.float32)}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+    for _ in range(300):
+        grads = {"w": params["w"] - target}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"] - target))) < 0.05
+
+
+def test_adamw_grad_clipping():
+    params = {"w": jnp.zeros(4, jnp.float32)}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=1.0, grad_clip_norm=1.0, weight_decay=0.0)
+    _, _, metrics = adamw_update(params, {"w": jnp.full(4, 100.0)}, state,
+                                 cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_adamw_weight_decay_applies_to_matrices_only():
+    params = {"mat": jnp.ones((4, 4)), "vec": jnp.ones((4,))}
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=1.0, grad_clip_norm=1e9)
+    zero_g = jax.tree.map(jnp.zeros_like, params)
+    new_params, _, _ = adamw_update(params, zero_g, state, cfg)
+    assert float(jnp.max(new_params["mat"])) < 1.0   # decayed
+    assert float(jnp.max(new_params["vec"])) == 1.0  # untouched
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+    assert float(sched(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(sched(jnp.int32(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(sched(jnp.int32(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+# ------------------------------------------------------------ workloads
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(["uniform", "books", "osm", "fb", "mix"]),
+       st.integers(0, 10_000))
+def test_sample_keys_sorted_in_unit_interval(dist, seed):
+    keys = sample_keys(jax.random.PRNGKey(seed), 512, dist)
+    k = np.asarray(keys)
+    assert np.all(np.diff(k) >= 0)
+    assert k.min() >= 0.0 and k.max() <= 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.1, 10.0), st.integers(0, 1000))
+def test_wr_workload_ratio(wr, seed):
+    key = jax.random.PRNGKey(seed)
+    data = sample_keys(key, 256, "uniform")
+    workload, cfg = wr_workload(jax.random.fold_in(key, 1), data, wr,
+                                total=1024)
+    got = workload["inserts"].shape[0] / max(workload["reads"].shape[0], 1)
+    assert got == pytest.approx(wr, rel=0.15)
+    assert workload["reads"].shape[0] + workload["inserts"].shape[0] == 1024

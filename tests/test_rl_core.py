@@ -1,0 +1,153 @@
+"""Unit tests for the RL core: reward (paper §4.1), ET-MDP termination,
+DDPG update mechanics, replay sequencing, O2 divergence detection."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ddpg, networks as nets, reward as rw
+from repro.core.ddpg import DDPGConfig
+from repro.core.etmdp import ETMDPConfig, rollout_episode
+from repro.core.networks import NetConfig
+from repro.core.o2 import ks_distance, _quantiles
+from repro.core.replay import SequenceReplay
+from repro.index import env as E
+
+
+# ------------------------------------------------------------------ reward
+def test_reward_sign_matches_paper():
+    # improvement over both baselines -> positive
+    assert float(rw.reward(80.0, 100.0, 90.0)) > 0
+    # regression below initial -> negative
+    assert float(rw.reward(120.0, 100.0, 90.0)) < 0
+    # no change -> zero
+    assert abs(float(rw.reward(100.0, 100.0, 100.0))) < 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1.0, 1e6), st.floats(1.0, 1e6), st.floats(1.0, 1e6))
+def test_reward_finite_and_sign_follows_delta0(r0, rprev, rt):
+    """Paper invariant: reward > 0 iff the runtime improved over the initial
+    baseline (Delta_{t->0} > 0); the formula is deliberately NOT monotone in
+    rt alone (it also weighs step-over-step progress)."""
+    r = float(rw.reward(rt, r0, rprev))
+    assert np.isfinite(r)
+    if rt < r0 * (1 - 1e-9):
+        assert r >= 0.0
+    elif rt > r0 * (1 + 1e-9):
+        assert r <= 0.0
+
+
+def test_reward_deltas():
+    d0, d1 = rw.deltas(80.0, 100.0, 90.0)
+    assert abs(float(d0) - 0.2) < 1e-6
+    assert abs(float(d1) - (10.0 / 90.0)) < 1e-6
+
+
+# ------------------------------------------------------------------ networks
+def test_actor_critic_shapes(rng_key):
+    cfg = NetConfig(obs_dim=26, action_dim=14, lstm_hidden=16, mlp_hidden=32)
+    params = nets.init_actor_critic(rng_key, cfg)
+    obs = jnp.ones((5, 26))
+    h = nets.zero_hidden(cfg, (5,))
+    a, h2 = nets.actor_apply(params["actor"], obs, h, cfg)
+    assert a.shape == (5, 14) and float(jnp.max(jnp.abs(a))) <= 1.0
+    q, _ = nets.critic_apply(params["critic0"], obs, a, h, cfg)
+    assert q.shape == (5,)
+
+
+def test_lstm_context_changes_output(rng_key):
+    """The LSTM hidden state must influence the action (context matters)."""
+    cfg = NetConfig(obs_dim=26, action_dim=14, lstm_hidden=16, mlp_hidden=32)
+    params = nets.init_actor_critic(rng_key, cfg)
+    obs = jnp.ones((26,))
+    a0, h = nets.actor_apply(params["actor"], obs,
+                             nets.zero_hidden(cfg), cfg)
+    a1, _ = nets.actor_apply(params["actor"], obs, h, cfg)
+    assert float(jnp.max(jnp.abs(a0 - a1))) > 1e-6
+
+
+# ------------------------------------------------------------------ replay
+def test_replay_sequences_respect_episodes():
+    rep = SequenceReplay(128, obs_dim=4, action_dim=2, lstm_hidden=8,
+                         seq_len=4, seed=0)
+    for ep in range(6):
+        for t in range(10):
+            done = t == 9
+            rep.add(np.full(4, ep), np.zeros(2), 0.0, np.zeros(4), done, 0.0,
+                    (np.zeros(8), np.zeros(8)), (np.zeros(8), np.zeros(8)))
+    batch = rep.sample_sequences(16)
+    assert batch["obs"].shape == (16, 4, 4)
+    # within a sampled window, no done except possibly at the last step
+    assert np.all(batch["done"][:, :-1] == 0)
+
+
+# ------------------------------------------------------------------ ddpg
+def test_ddpg_update_runs_and_changes_params(rng_key):
+    net_cfg = NetConfig(obs_dim=6, action_dim=3, lstm_hidden=8, mlp_hidden=16)
+    dcfg = DDPGConfig(seq_len=4, burn_in=1, batch_size=8)
+    state = ddpg.init_state(rng_key, net_cfg, dcfg)
+    B, L = 8, 4
+    batch = {
+        "obs": jnp.ones((B, L, 6)), "action": jnp.zeros((B, L, 3)),
+        "reward": jnp.ones((B, L)), "next_obs": jnp.ones((B, L, 6)),
+        "done": jnp.zeros((B, L)), "cost": jnp.zeros((B, L)),
+        "h_a": jnp.zeros((B, 8)), "c_a": jnp.zeros((B, 8)),
+        "h_q": jnp.zeros((B, 8)), "c_q": jnp.zeros((B, 8)),
+    }
+    new_state, metrics = ddpg.update(state, batch, net_cfg, dcfg)
+    assert np.isfinite(float(metrics["critic_loss"]))
+    before = jax.tree.leaves(state["params"]["actor"])[0]
+    after = jax.tree.leaves(new_state["params"]["actor"])[0]
+    assert float(jnp.max(jnp.abs(before - after))) > 0
+
+
+def test_lagrangian_lambda_rises_under_violations(rng_key):
+    net_cfg = NetConfig(obs_dim=6, action_dim=3, lstm_hidden=8, mlp_hidden=16)
+    dcfg = DDPGConfig(seq_len=4, burn_in=1, use_cost_critic=True,
+                      cost_limit=0.5, lambda_lr=0.1)
+    state = ddpg.init_state(rng_key, net_cfg, dcfg)
+    B, L = 4, 4
+    batch = {
+        "obs": jnp.ones((B, L, 6)), "action": jnp.zeros((B, L, 3)),
+        "reward": jnp.ones((B, L)), "next_obs": jnp.ones((B, L, 6)),
+        "done": jnp.zeros((B, L)), "cost": jnp.ones((B, L)),  # violations!
+        "h_a": jnp.zeros((B, 8)), "c_a": jnp.zeros((B, 8)),
+        "h_q": jnp.zeros((B, 8)), "c_q": jnp.zeros((B, 8)),
+    }
+    new_state, metrics = ddpg.update(state, batch, net_cfg, dcfg)
+    assert float(new_state["lmbda"]) > float(state["lmbda"])
+
+
+# ------------------------------------------------------------------ etmdp
+def test_etmdp_early_termination(rng_key, small_index_instance):
+    """Force violations by shrinking budgets -> episode must terminate
+    early with the termination reward."""
+    data, workload = small_index_instance
+    env_cfg = E.EnvConfig(index_type="alex", episode_len=20,
+                          mem_budget=1.0, runtime_budget=1.0)  # always violate
+    net_cfg = NetConfig(obs_dim=E.obs_dim(), action_dim=env_cfg.space.dim,
+                        lstm_hidden=8, mlp_hidden=16)
+    agent = ddpg.init_state(rng_key, net_cfg, DDPGConfig())
+    et = ETMDPConfig(cost_budget=3.0, termination_reward=-1.0, enabled=True)
+    s = rollout_episode(rng_key, agent, net_cfg, env_cfg, et, data, workload,
+                        1.0, noise_scale=0.3)
+    assert s["terminated_early"]
+    assert s["steps"] <= 3  # 2 violations/step -> b_t exceeds C=3 at step 2
+    et_off = ETMDPConfig(enabled=False)
+    s2 = rollout_episode(rng_key, agent, net_cfg, env_cfg, et_off, data,
+                         workload, 1.0, noise_scale=0.3)
+    assert not s2["terminated_early"] and s2["steps"] == 20
+
+
+# ------------------------------------------------------------------ o2
+def test_ks_divergence_detects_shift(rng_key):
+    from repro.index.workloads import sample_keys
+    a = np.asarray(sample_keys(rng_key, 2048, "uniform"))
+    b = np.asarray(sample_keys(jax.random.fold_in(rng_key, 1), 2048, "fb"))
+    qa, qb = _quantiles(a, 32), _quantiles(b, 32)
+    assert ks_distance(qa, qa) < 1e-9
+    assert ks_distance(qa, qb) > 0.15

@@ -1,0 +1,78 @@
+"""Baseline tuner behaviour + the budgeted runner's failure accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spaces import alex_space, carmi_space
+from repro.index import env as E
+from repro.tuning.base import run_tuner
+from repro.tuning.baselines import GridSearch, SMBO, make_baseline
+
+
+@pytest.mark.parametrize("method", ["random", "grid", "heuristic", "smbo"])
+@pytest.mark.parametrize("index_type", ["alex", "carmi"])
+def test_baselines_never_worse_than_default(method, index_type,
+                                            small_index_instance):
+    data, workload = small_index_instance
+    env_cfg = E.EnvConfig(index_type=index_type)
+    space = alex_space() if index_type == "alex" else carmi_space()
+    res = run_tuner(make_baseline(method, space, seed=0), env_cfg, data,
+                    workload, 1.0, budget_evals=12)
+    assert res.best_runtime_ns <= res.default_runtime_ns + 1e-6
+    assert res.evals == 12
+    assert len(res.best_so_far) == 12
+    assert np.all(np.diff(res.best_so_far) <= 1e-9)  # monotone best-so-far
+
+
+def test_grid_search_is_deterministic_lattice():
+    space = alex_space()
+    g1 = GridSearch(space, seed=0)
+    g2 = GridSearch(space, seed=99)  # seed must not matter for the lattice
+    for _ in range(5):
+        assert g1.propose() == g2.propose()
+
+
+def test_smbo_concentrates_on_good_region():
+    """TPE on a quadratic surrogate: late proposals closer to optimum."""
+    space = carmi_space()
+    smbo = SMBO(space, seed=0, n_startup=5)
+    target = {n: (space.lows[i] + space.highs[i]) / 2
+              for i, n in enumerate(space.names)}
+
+    def score(p):
+        return sum((p[n] - target[n]) ** 2 /
+                   (space.highs[i] - space.lows[i]) ** 2
+                   for i, n in enumerate(space.names))
+
+    dists = []
+    for i in range(40):
+        p = smbo.propose()
+        d = score(p)
+        smbo.observe(p, d, failed=False)
+        dists.append(d)
+    assert np.mean(dists[-10:]) < np.mean(dists[:10])
+
+
+def test_runner_counts_failures(small_index_instance):
+    """A tuner that always proposes the dangerous corner must rack up
+    failures and never displace the default as 'best'."""
+    from repro.index.alex import DEFAULTS
+    from repro.tuning.base import Tuner
+
+    class DangerTuner(Tuner):
+        name = "danger"
+
+        def propose(self):
+            raw = dict(DEFAULTS)
+            raw.update(fanout_selection_method=1, splitting_policy_method=1,
+                       allow_splitting_upwards=1, kmax_ood_keys_log2=14,
+                       ood_tolerance_factor=50)
+            return raw
+
+    data, workload = small_index_instance
+    env_cfg = E.EnvConfig(index_type="alex")
+    res = run_tuner(DangerTuner(alex_space(), 0), env_cfg, data, workload,
+                    1.0, budget_evals=5)
+    assert res.failures == 5
+    assert res.best_runtime_ns == res.default_runtime_ns
