@@ -5,10 +5,28 @@ an absorbing state s_e: when the running cost b_t = sum(c^m_tau + c^r_tau)
 exceeds the budget C, the episode transitions to s_e with termination reward
 r_e and stays there.  Solved by the DDPG+LSTM backbone (the LSTM is the
 context model that generalizes safety across tasks).
+
+The per-step computation (policy act -> critic hidden advance -> env step ->
+ET-MDP bookkeeping) lives in one pure core, `_episode_step_core`, shared by
+both execution paths:
+
+  * `episode_step`          — jitted, unbatched: drives the serial
+                              `rollout_episode` (one request at a time);
+  * `batched_episode_step`  — jitted `lax.map` over a carry with a leading
+                              slot axis (one service tick);
+  * `batched_episode_scan`  — `lax.scan` over K ticks of the map body:
+                              drives the multi-tenant
+                              `launch/tune_serve.TuningService`.
+
+Because the batched paths map the *same* traced program per slot, a slot in
+a B-wide service step produces bitwise-identical rewards/runtimes/actions
+to a serial episode started from the same PRNG key
+(tests/test_tune_service.py asserts this).
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 
 import numpy as np
 import jax
@@ -25,6 +43,116 @@ class ETMDPConfig:
     enabled: bool = True            # False -> plain (unsafe) episodes
 
 
+# ------------------------------------------------------------------ carry
+def init_episode_carry(key, env_state, obs, net_cfg, batch_shape=()):
+    """The per-episode recurrent state threaded through `episode_step`."""
+    return {
+        "key": key,
+        "env": env_state,
+        "obs": obs,
+        "h_a": nets.zero_hidden(net_cfg, batch_shape),
+        "h_q": nets.zero_hidden(net_cfg, batch_shape),
+        "b_t": jnp.zeros(batch_shape, jnp.float32),
+    }
+
+
+def _episode_step_core(params, carry, noise_scale, net_cfg,
+                       env_cfg: E.EnvConfig, et_cfg: ETMDPConfig,
+                       deterministic: bool):
+    """One ET-MDP step for a single episode (unbatched carry).
+
+    Returns (carry', outputs).  `outputs["reward"]` is the ET-MDP reward
+    (termination reward substituted on early exit), `outputs["early"]` the
+    budget-exceeded flag, `outputs["done"]` early-or-horizon.
+    """
+    key, k_act = jax.random.split(carry["key"])
+    action, h_a2 = ddpg.act(params, carry["obs"], carry["h_a"], k_act,
+                            net_cfg, noise_scale=noise_scale,
+                            deterministic=deterministic)
+    # critic hidden advances on (obs, action) for stored-state replay
+    _, h_q2 = nets.critic_apply(params["critic0"], carry["obs"], action,
+                                carry["h_q"], net_cfg)
+    env2, next_obs, r, done, info = E.step_core(env_cfg, carry["env"], action)
+    cost = info["cost"]
+    b_t = carry["b_t"] + cost
+    if et_cfg.enabled:
+        early = b_t > et_cfg.cost_budget
+    else:
+        early = jnp.zeros_like(done)
+    r_val = jnp.where(early, jnp.float32(et_cfg.termination_reward), r)
+    next_obs_eff = jnp.where(early, jnp.zeros_like(next_obs), next_obs)
+    done_flag = done | early
+    new_carry = {"key": key, "env": env2, "obs": next_obs_eff,
+                 "h_a": h_a2, "h_q": h_q2, "b_t": b_t}
+    outputs = {"action": action, "reward": r_val, "raw_reward": r,
+               "runtime_ns": info["runtime_ns"], "cost": cost,
+               "early": early, "done": done_flag,
+               "memory_bytes": info["memory_bytes"]}
+    return new_carry, outputs
+
+
+@partial(jax.jit, static_argnames=("net_cfg", "env_cfg", "et_cfg",
+                                   "deterministic"))
+def episode_step(params, carry, noise_scale, net_cfg, env_cfg: E.EnvConfig,
+                 et_cfg: ETMDPConfig, deterministic: bool = False):
+    """Jitted single-episode step (the serial tuning path)."""
+    return _episode_step_core(params, carry, noise_scale, net_cfg, env_cfg,
+                              et_cfg, deterministic)
+
+
+def batched_episode_core(params, carry, noise_scale, net_cfg,
+                         env_cfg: E.EnvConfig, et_cfg: ETMDPConfig,
+                         deterministic: bool = False):
+    """One step for B concurrent episodes (un-jitted core): `carry` has a
+    leading slot axis on every leaf, `noise_scale` is [B] (per-request
+    exploration).  The policy parameters are shared across slots.
+
+    `lax.map` rather than `vmap` on purpose: the map body is the *same
+    unbatched program* as the serial `episode_step`, so per-slot results
+    are bitwise identical to the serial path at any slot count — a vmapped
+    GEMM changes its reduction lowering with batch width and drifts by an
+    ulp, which the carmi runtime model (continuous in the action) amplifies
+    into observable divergence.  The batching win on the serving path is
+    dispatch amortization plus slot-sharding over host devices
+    (launch/tune_serve.py), both of which the map keeps.
+
+    Note the program is independent of `env_cfg.episode_len` except for the
+    env-internal horizon flag — the serving loop enforces per-request
+    budgets host-side, so heterogeneous budgets share one executable.
+    """
+    return jax.lax.map(
+        lambda cn: _episode_step_core(params, cn[0], cn[1], net_cfg,
+                                      env_cfg, et_cfg, deterministic),
+        (carry, noise_scale))
+
+
+batched_episode_step = partial(jax.jit, static_argnames=(
+    "net_cfg", "env_cfg", "et_cfg", "deterministic"))(batched_episode_core)
+
+
+def batched_episode_scan(params, carry, noise_scale, n_steps: int, net_cfg,
+                         env_cfg: E.EnvConfig, et_cfg: ETMDPConfig,
+                         deterministic: bool = False):
+    """`n_steps` ticks of `batched_episode_core` under one `lax.scan`
+    (un-jitted; the tuning service wraps it in shard_map+jit).  Outputs
+    are stacked [n_steps, B, ...].
+
+    The scan body is the *whole* one-tick map program, so each step's
+    per-slot math is the proven-bitwise body — scanning the unbatched core
+    per slot instead (map-of-scan) refuses XLA the same lowering and
+    drifts by an ulp.
+    """
+    def body(c, _):
+        return batched_episode_core(params, c, noise_scale, net_cfg,
+                                    env_cfg, et_cfg, deterministic)
+    return jax.lax.scan(body, carry, None, length=n_steps)
+
+
+# jitted reset shared by the serial and batched paths (slot admission
+# resets exactly one episode, so the unbatched program is reused there)
+reset_episode = jax.jit(E.reset, static_argnames=("cfg",))
+
+
 def rollout_episode(key, agent_state, net_cfg, env_cfg: E.EnvConfig,
                     et_cfg: ETMDPConfig, data_keys, workload, wr_ratio,
                     noise_scale: float = 0.1, replay=None,
@@ -35,42 +163,34 @@ def rollout_episode(key, agent_state, net_cfg, env_cfg: E.EnvConfig,
     terminated-early flag, params history).  Transitions are pushed into
     `replay` when provided.
     """
-    env_state, obs = E.reset(env_cfg, data_keys, workload, wr_ratio)
-    hidden_a = nets.zero_hidden(net_cfg)
-    hidden_q = nets.zero_hidden(net_cfg)
+    env_state, obs = reset_episode(env_cfg, data_keys, workload, wr_ratio)
+    carry = init_episode_carry(key, env_state, obs, net_cfg)
     params = agent_state["params"]
 
     total_r, best_rt, violations = 0.0, float(env_state["r_best"]), 0.0
     terminated = False
     runtimes, actions = [], []
-    b_t = 0.0
     for t in range(env_cfg.episode_len):
-        key, k_act = jax.random.split(key)
-        action, new_hidden_a = ddpg.act(params, obs, hidden_a, k_act, net_cfg,
-                                        noise_scale=noise_scale,
-                                        deterministic=deterministic)
-        # critic hidden advances on (obs, action) for stored-state replay
-        _, new_hidden_q = nets.critic_apply(params["critic0"], obs, action,
-                                            hidden_q, net_cfg)
-        env_state, next_obs, r, done, info = E.step(env_cfg, env_state, action)
-        cost = float(info["cost"])
-        b_t += cost
+        prev_obs, prev_ha, prev_hq = carry["obs"], carry["h_a"], carry["h_q"]
+        carry, out = episode_step(params, carry, noise_scale, net_cfg,
+                                  env_cfg, et_cfg,
+                                  deterministic=deterministic)
+        cost = float(out["cost"])
         violations += cost
-        early = et_cfg.enabled and b_t > et_cfg.cost_budget
-        r_val = float(r) if not early else et_cfg.termination_reward
-        next_obs_eff = jnp.zeros_like(next_obs) if early else next_obs
-        done_flag = bool(done) or early
+        r_val = float(out["reward"])
+        early = bool(out["early"])
+        done_flag = bool(out["done"])
 
         if replay is not None:
-            replay.add(np.asarray(obs), np.asarray(action), r_val,
-                       np.asarray(next_obs_eff), float(done_flag), cost,
-                       (np.asarray(hidden_a[0]), np.asarray(hidden_a[1])),
-                       (np.asarray(hidden_q[0]), np.asarray(hidden_q[1])))
+            replay.add(np.asarray(prev_obs), np.asarray(out["action"]),
+                       r_val, np.asarray(carry["obs"]), float(done_flag),
+                       cost,
+                       (np.asarray(prev_ha[0]), np.asarray(prev_ha[1])),
+                       (np.asarray(prev_hq[0]), np.asarray(prev_hq[1])))
         total_r += r_val
-        best_rt = min(best_rt, float(info["runtime_ns"]))
-        runtimes.append(float(info["runtime_ns"]))
-        actions.append(np.asarray(action))
-        obs, hidden_a, hidden_q = next_obs_eff, new_hidden_a, new_hidden_q
+        best_rt = min(best_rt, float(out["runtime_ns"]))
+        runtimes.append(float(out["runtime_ns"]))
+        actions.append(np.asarray(out["action"]))
         if early:
             terminated = True
             break
@@ -79,7 +199,7 @@ def rollout_episode(key, agent_state, net_cfg, env_cfg: E.EnvConfig,
     return {
         "episode_return": total_r,
         "best_runtime_ns": best_rt,
-        "r0_ns": float(env_state["r0"]),
+        "r0_ns": float(carry["env"]["r0"]),
         "violations": violations,
         "terminated_early": terminated,
         "runtimes": runtimes,

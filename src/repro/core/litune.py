@@ -24,6 +24,15 @@ from repro.core.o2 import O2Config, O2System
 from repro.index import env as E
 
 
+def attach_best_params(summary: dict, env_cfg: E.EnvConfig) -> dict:
+    """Decode the best-runtime step's action into raw index parameters —
+    the summary shape shared by `LITune.tune` and the batched
+    `launch.tune_serve.TuningService` (host-side decode: no device
+    dispatches per request)."""
+    best_t = int(np.argmin(summary["runtimes"]))
+    return env_cfg.space.decode_np(np.asarray(summary["actions"][best_t]))
+
+
 @dataclasses.dataclass(frozen=True)
 class LITuneConfig:
     index_type: str = "alex"
@@ -84,12 +93,32 @@ class LITune:
             data_keys, workload, wr_ratio,
             noise_scale=0.0 if deterministic else 0.05,
             deterministic=deterministic)
-        best_t = int(np.argmin(summary["runtimes"]))
-        space = env_cfg.space
-        best_raw = {k_: float(v) for k_, v in
-                    space.decode(jnp.asarray(summary["actions"][best_t])).items()}
-        summary["best_params"] = best_raw
+        summary["best_params"] = attach_best_params(summary, env_cfg)
         return summary
+
+    def tune_many(self, instances, slots: int = 4,
+                  deterministic: bool = False, budget_steps: int | None = None):
+        """Serve many tuning requests through the slot-batched
+        `launch.tune_serve.TuningService` (multi-tenant `tune`).
+
+        `instances` is an iterable of `(data_keys, workload, wr_ratio)`
+        tuples; returns summaries in submission order.
+        """
+        from repro.launch.tune_serve import TuningService
+        # advance our PRNG so repeated tune_many calls explore differently,
+        # matching tune()'s per-request key splitting
+        self.key, k = jax.random.split(self.key)
+        service = TuningService(
+            self, slots=slots,
+            # any budget tune() accepts must fit the service horizon too
+            horizon_cap=max(256, budget_steps or self.cfg.episode_len),
+            seed=int(np.asarray(jax.random.key_data(k))[-1]))
+        rids = [service.submit(data, workload, wr,
+                               budget_steps=budget_steps,
+                               deterministic=deterministic)
+                for data, workload, wr in instances]
+        results = service.run()
+        return [results[rid] for rid in rids]
 
     def stream(self, windows, max_steps_per_window: int = 5):
         """Continuous tuning over an iterable of

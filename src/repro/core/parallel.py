@@ -35,6 +35,17 @@ def batched_reset(cfg: E.EnvConfig, data_keys, workloads, wr_ratios):
                          wr_ratios)
 
 
+def mapped_reset(cfg: E.EnvConfig, data_keys, workloads, wr_ratios):
+    """`lax.map` variant of `batched_reset`: per-slot results are bitwise
+    identical to the unbatched `E.reset` (see core/etmdp.py on map-vs-vmap);
+    the tuning service admits request waves through this."""
+    def one(x):
+        data, reads, inserts, wr = x
+        return E.reset(cfg, data, {"reads": reads, "inserts": inserts}, wr)
+    return jax.lax.map(one, (data_keys, workloads["reads"],
+                             workloads["inserts"], wr_ratios))
+
+
 @partial(jax.jit, static_argnames=("env_cfg", "net_cfg", "ddpg_cfg",
                                    "n_steps"))
 def parallel_rollout(agent_params, env_states, obs, key,
@@ -49,7 +60,7 @@ def parallel_rollout(agent_params, env_states, obs, key,
     b = obs.shape[0]
     hidden_a = nets.zero_hidden(net_cfg, (b,))
     hidden_q = nets.zero_hidden(net_cfg, (b,))
-    step_fn = E.step.__wrapped__  # un-jitted core; vmapped below
+    step_fn = E.step_core  # un-jitted core; vmapped below
 
     def body(carry, k):
         env_states, obs, h_a, h_q = carry

@@ -41,6 +41,24 @@ class ParamSpace:
             out[name] = x.astype(jnp.float32)
         return out
 
+    def decode_np(self, action) -> dict:
+        """Host-side mirror of `decode` (same float32 arithmetic, numpy):
+        per-request summaries on the serving hot path decode without any
+        device dispatches."""
+        a = np.asarray(action, np.float32)
+        a01 = (np.clip(a, np.float32(-1.0), np.float32(1.0))
+               + np.float32(1.0)) * np.float32(0.5)
+        out = {}
+        for i, (name, kind) in enumerate(zip(self.names, self.kinds)):
+            lo, hi = float(self.lows[i]), float(self.highs[i])
+            x = a01[i] * np.float32(hi - lo) + np.float32(lo)
+            if kind == "bool":
+                x = np.float32(a01[i] > 0.5)
+            elif kind in ("int", "choice"):
+                x = np.round(x)
+            out[name] = float(np.float32(x))
+        return out
+
     def encode(self, raw: dict) -> np.ndarray:
         """dict of raw params -> action in [-1,1]^d (for warm starts)."""
         a = np.zeros(self.dim, np.float32)

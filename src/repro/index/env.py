@@ -16,7 +16,6 @@ terminates when the cumulative cost exceeds C.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -97,9 +96,14 @@ def reset(cfg: EnvConfig, data_keys, workload, wr_ratio,
     return env_state, obs
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def step(cfg: EnvConfig, env_state: dict, action: jax.Array):
-    """One tuning step. action in [-1,1]^dim."""
+def step_core(cfg: EnvConfig, env_state: dict, action: jax.Array):
+    """One tuning step (un-jitted pure core). action in [-1,1]^dim.
+
+    This is the composable form: `step` below is its jitted entry point,
+    `core/etmdp.py` inlines it into the fused episode step,
+    `core/parallel.py` vmaps it over the meta-batch, and the serving path
+    (`launch/tune_serve.py`) `lax.map`s it over a slot axis.
+    """
     space = cfg.space
     params_raw = space.decode(action)
     workload = {"reads": env_state["reads"], "inserts": env_state["inserts"]}
@@ -120,6 +124,9 @@ def step(cfg: EnvConfig, env_state: dict, action: jax.Array):
     done = new_state["t"] >= cfg.episode_len
     info = {"runtime_ns": runtime, "cost": cost, **viol}
     return new_state, obs, r, done, info
+
+
+step = jax.jit(step_core, static_argnames=("cfg",))
 
 
 def obs_dim() -> int:

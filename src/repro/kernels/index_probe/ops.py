@@ -45,12 +45,15 @@ def batched_lookup(keys: jax.Array, queries: jax.Array, tile: int = 512,
     starts = jnp.searchsorted(t_sorted, jnp.arange(n_tiles))
     pos_in_tile = jnp.arange(m) - starts[t_sorted]
     keep = pos_in_tile < qcap
-    safe_pos = jnp.where(keep, pos_in_tile, qcap - 1)
+    # overflow queries scatter to the out-of-bounds column `qcap` so
+    # mode="drop" discards the write; clamping them to qcap-1 would clobber
+    # the legitimate occupant of the last slot with a silently-wrong rank
+    safe_pos = jnp.where(keep, pos_in_tile, qcap)
 
     q_grouped = jnp.full((n_tiles, qcap), -jnp.inf, queries.dtype)
     v_grouped = jnp.zeros((n_tiles, qcap), jnp.int32)
     q_grouped = q_grouped.at[t_sorted, safe_pos].set(
-        jnp.where(keep, queries[order], -jnp.inf), mode="drop")
+        queries[order], mode="drop")
     v_grouped = v_grouped.at[t_sorted, safe_pos].max(
         keep.astype(jnp.int32), mode="drop")
 
@@ -63,7 +66,8 @@ def batched_lookup(keys: jax.Array, queries: jax.Array, tile: int = 512,
                         q_grouped.astype(jnp.float32), v_grouped > 0)
 
     # gather back to query order: global rank = tile_start + local rank
-    local = pos[t_sorted, safe_pos]
+    # (dropped entries read a clamped slot; `keep` masks them to -1 below)
+    local = pos[t_sorted, jnp.minimum(safe_pos, qcap - 1)]
     global_rank = t_sorted * tile + local
     ranks = jnp.zeros((m,), jnp.int32).at[order].set(
         jnp.where(keep, global_rank, -1))

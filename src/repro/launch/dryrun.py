@@ -98,7 +98,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "alias_bytes": int(mem.alias_size_in_bytes),
         }
         record["analytic_memory"] = analytic_memory(plan)
-        ca = compiled.cost_analysis() or {}
+        ca = ha.xla_cost_analysis(compiled)
         record["xla_cost_analysis"] = {
             "flops": float(ca.get("flops", 0.0)),
             "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -1,0 +1,548 @@
+"""Batched tuning-as-a-service: slot-based continuous batching for the
+online tuning stage (multi-tenant `LITune.tune`).
+
+`launch/serve.py` serves LM decode with fixed slots and per-request
+completion; this driver applies the same shape to tuning requests.  Many
+concurrent requests — heterogeneous `(data_keys, workload, wr_ratio,
+budget_steps)` across both `alex` and `carmi` spaces — fill fixed slots in
+per-space pools; one jitted multi-step program advances all active
+episodes of a pool at once; a request that exhausts its budget (or
+ET-MDP-terminates) frees its slot mid-flight for the next queued request.
+
+CPU demo:
+    PYTHONPATH=src python -m repro.launch.tune_serve --requests 8 --slots 4
+Multi-core (slots shard over forced host devices):
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+        PYTHONPATH=src python -m repro.launch.tune_serve
+
+Key properties:
+  * **parity** — every slot computes the *same traced per-step program*
+    as the serial `rollout_episode` (`lax.map` over slots, `lax.scan`
+    over steps of the whole map body), so per-request rewards/runtimes
+    are bitwise identical to a one-at-a-time `LITune.tune` with the same
+    PRNG key (tests/test_tune_service.py).
+  * **no recompiles on mixed streams** — compiled executables are cached
+    by `(index_type, array shapes, batch shape, scan length)`; an alex
+    request arriving after a carmi wave reuses the alex program.
+  * **host-side budgets** — `budget_steps` is enforced by the serving
+    loop, not baked into the program: each tick scans
+    K = largest power of two ≤ the smallest remaining budget among active
+    slots, so heterogeneous budgets share a small ladder of executables.
+  * **slot sharding** — when the host platform exposes multiple devices
+    (cores) and they divide the slot count, slots shard across them via
+    `shard_map`; sharding never changes per-slot math, so parity holds.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from collections import deque
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import networks as nets
+from repro.runtime.mesh_utils import shard_map_compat
+from repro.core.etmdp import batched_episode_scan
+from repro.core.litune import attach_best_params
+from repro.core.parallel import mapped_reset
+from repro.index import env as E
+
+
+@dataclasses.dataclass
+class TuneRequest:
+    """One tuning-as-a-service request (the unit of multi-tenancy)."""
+    rid: int
+    data_keys: jax.Array
+    workload: dict                 # {"reads": [r], "inserts": [i]}
+    wr_ratio: float
+    budget_steps: int
+    index_type: str = "alex"       # alex | carmi
+    key: jax.Array | None = None   # episode PRNG key (parity handle)
+    noise_scale: float = 0.05
+
+
+def summarize_episode(env_cfg: E.EnvConfig, r0: float, rewards, runtimes,
+                      actions, costs, terminated: bool) -> dict:
+    """Assemble the per-request summary in the exact `LITune.tune` shape
+    (shared decode via `attach_best_params`)."""
+    summary = {
+        "episode_return": float(np.sum(rewards)),
+        "best_runtime_ns": min(r0, float(np.min(runtimes))),
+        "r0_ns": r0,
+        "violations": float(np.sum(costs)),
+        "terminated_early": terminated,
+        "runtimes": [float(r) for r in runtimes],
+        "actions": [np.asarray(a) for a in actions],
+        "steps": len(runtimes),
+    }
+    summary["best_params"] = attach_best_params(summary, env_cfg)
+    return summary
+
+
+def _pow2_ladder(n: int) -> list[int]:
+    out, k = [], 1
+    while k <= n:
+        out.append(k)
+        k *= 2
+    return out
+
+
+# --------------------------------------------------------------- programs
+# Process-wide program cache: builders are keyed on (device ids, frozen
+# configs, shapes) so every TuningService instance — and every pool within
+# one — shares the same jitted callables and their compiled executables.
+# A per-service dict on top of this would recompile per instance, which is
+# exactly the recompile-on-mixed-streams failure this engine exists to
+# avoid.
+
+def _mesh_for(device_ids: tuple) -> Mesh:
+    by_id = {d.id: d for d in jax.devices()}
+    return Mesh(np.array([by_id[i] for i in device_ids]), ("slots",))
+
+
+@lru_cache(maxsize=None)
+def _step_program(device_ids: tuple, net_cfg, env_cfg, et_cfg, k: int):
+    """K-step slot program: scan over K ticks of the bitwise-stable
+    one-tick map body, slots sharded over the mesh."""
+    mesh = _mesh_for(device_ids)
+
+    def core(p, c, n):
+        return batched_episode_scan(p, c, n, k, net_cfg, env_cfg, et_cfg,
+                                    False)
+
+    return jax.jit(shard_map_compat(
+        core, mesh, in_specs=(P(), P("slots"), P("slots")),
+        out_specs=(P("slots"), P(None, "slots"))))
+
+
+@lru_cache(maxsize=None)
+def _reset_program(device_ids: tuple, env_cfg):
+    """Batched admission: reset a wave of episodes in one (sharded when
+    the wave divides the mesh) program."""
+    mesh = _mesh_for(device_ids)
+
+    def core(d, r, i, wr):
+        return mapped_reset(env_cfg, d, {"reads": r, "inserts": i}, wr)
+
+    return jax.jit(shard_map_compat(
+        core, mesh,
+        in_specs=(P("slots"), P("slots"), P("slots"), P("slots")),
+        out_specs=P("slots")))
+
+
+@lru_cache(maxsize=None)
+def _admit_scatter_program(device_ids: tuple, net_cfg, slots: int):
+    """Scatter freshly-reset episodes into their slots (padded entries
+    target slot index B and are dropped)."""
+    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
+
+    def scatter(carry, idx, keys, env_states, obs):
+        def upd(buf, x):
+            return buf.at[idx].set(x, mode="drop")
+        zero_h = nets.zero_hidden(net_cfg, (idx.shape[0],))
+        return {
+            "key": upd(carry["key"], keys),
+            "env": jax.tree.map(upd, carry["env"], env_states),
+            "obs": upd(carry["obs"], obs),
+            "h_a": tuple(upd(c, z) for c, z in zip(carry["h_a"], zero_h)),
+            "h_q": tuple(upd(c, z) for c, z in zip(carry["h_q"], zero_h)),
+            "b_t": upd(carry["b_t"],
+                       jnp.zeros((idx.shape[0],), jnp.float32)),
+        }
+
+    return jax.jit(scatter, out_shardings=sharded)
+
+
+@lru_cache(maxsize=None)
+def _build_carry_program(device_ids: tuple, net_cfg, slots: int):
+    """Initial-wave fast path: construct the whole B-slot carry from a
+    full batch of resets (no scatter)."""
+    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
+
+    def build(keys, env_states, obs):
+        return {
+            "key": keys,
+            "env": env_states,
+            "obs": obs,
+            "h_a": nets.zero_hidden(net_cfg, (slots,)),
+            "h_q": nets.zero_hidden(net_cfg, (slots,)),
+            "b_t": jnp.zeros((slots,), jnp.float32),
+        }
+
+    return jax.jit(build, out_shardings=sharded)
+
+
+class _SlotPool:
+    """Fixed B-slot episode pool for one (index space, array-shape) group.
+
+    Device state: a slot-batched episode carry (sharded over the mesh) and
+    a [B] per-slot noise vector.  Host state: which request occupies which
+    slot, steps taken, and the per-step records streamed back each tick.
+    """
+
+    def __init__(self, env_cfg: E.EnvConfig, net_cfg, et_cfg, params,
+                 slots: int, mesh: Mesh):
+        self.env_cfg = env_cfg
+        self.net_cfg = net_cfg
+        self.et_cfg = et_cfg
+        self.slots = slots
+        self.mesh = mesh
+        self.replicated = NamedSharding(mesh, P())
+        self.sharded = NamedSharding(mesh, P("slots"))
+        self.params = jax.device_put(params, self.replicated)
+        self.carry = None                       # batched pytree, lazy init
+        self.noise = np.zeros((slots,), np.float32)
+        self._noise_dev = None                  # placed copy, lazy
+        self.requests: list[TuneRequest | None] = [None] * slots
+        self.steps_taken = np.zeros((slots,), np.int64)
+        self.records: list[dict | None] = [None] * slots
+        self.r0: list[float] = [0.0] * slots
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.requests)
+
+    def free_slots(self):
+        return [i for i, r in enumerate(self.requests) if r is None]
+
+    def remaining(self):
+        return [r.budget_steps - int(self.steps_taken[i])
+                for i, r in enumerate(self.requests) if r is not None]
+
+    def noise_dev(self):
+        if self._noise_dev is None:
+            self._noise_dev = jax.device_put(jnp.asarray(self.noise),
+                                             self.sharded)
+        return self._noise_dev
+
+    def mark_admitted(self, slot: int, req: TuneRequest, r0: float):
+        self.noise[slot] = req.noise_scale
+        self._noise_dev = None
+        self.requests[slot] = req
+        self.steps_taken[slot] = 0
+        self.r0[slot] = r0
+        self.records[slot] = {"rewards": [], "runtimes": [], "actions": [],
+                              "costs": []}
+
+    def collect(self, slot: int, out_host: dict, step: int):
+        rec = self.records[slot]
+        rec["rewards"].append(float(out_host["reward"][step, slot]))
+        rec["runtimes"].append(float(out_host["runtime_ns"][step, slot]))
+        rec["actions"].append(np.asarray(out_host["action"][step, slot]))
+        rec["costs"].append(float(out_host["cost"][step, slot]))
+        self.steps_taken[slot] += 1
+
+    def retire(self, slot: int, terminated: bool) -> tuple[int, dict]:
+        req, rec = self.requests[slot], self.records[slot]
+        summary = summarize_episode(
+            self.env_cfg, self.r0[slot], rec["rewards"], rec["runtimes"],
+            rec["actions"], rec["costs"], terminated)
+        self.requests[slot] = None
+        self.records[slot] = None
+        return req.rid, summary
+
+
+class TuningService:
+    """Multi-tenant tuning engine over pretrained LITune agents.
+
+    `agents` maps index_type -> a `core.litune.LITune` (or anything with
+    `.cfg` and `.state`); a single LITune is accepted and keyed by its own
+    `cfg.index_type`.  Submit requests, then `run()` — per-request
+    summaries come back keyed by request id.
+    """
+
+    def __init__(self, agents, slots: int = 4, horizon_cap: int = 256,
+                 seed: int = 0):
+        if not isinstance(agents, dict):
+            agents = {agents.cfg.index_type: agents}
+        self.agents = agents
+        self.slots = slots
+        self.horizon_cap = horizon_cap
+        self.key = jax.random.PRNGKey(seed)
+        devices = jax.devices()
+        # largest device subset whose count divides the slots (gcd), so
+        # e.g. slots=4 on a 16-device host still shards over 4 devices
+        devices = devices[:np.gcd(slots, len(devices))]
+        self.mesh = Mesh(np.array(devices), ("slots",))
+        self.queue: deque[TuneRequest] = deque()
+        self.results: dict[int, dict] = {}
+        self.pools: dict[tuple, _SlotPool] = {}
+        self._programs: dict[tuple, object] = {}   # compiled-program cache
+        self.program_misses = 0
+        self.program_hits = 0
+        self.service_steps = 0
+        self.episode_steps = 0
+        self._next_rid = 0
+
+    # ------------------------------------------------------------ intake
+    def submit(self, data_keys, workload, wr_ratio: float,
+               budget_steps: int | None = None, index_type: str | None = None,
+               noise_scale: float | None = None,
+               deterministic: bool = False, key=None) -> int:
+        """Enqueue one tuning request; returns its request id."""
+        if index_type is None:
+            index_type = next(iter(self.agents))
+        if index_type not in self.agents:
+            raise KeyError(f"no agent for index_type={index_type!r} "
+                           f"(have {sorted(self.agents)})")
+        tuner = self.agents[index_type]
+        if budget_steps is None:
+            budget_steps = tuner.cfg.episode_len
+        if budget_steps > self.horizon_cap:
+            raise ValueError(f"budget_steps={budget_steps} exceeds "
+                             f"horizon_cap={self.horizon_cap}")
+        if budget_steps < 1:
+            raise ValueError(f"budget_steps={budget_steps} must be >= 1")
+        # `deterministic` is served as noise_scale=0.0 through the shared
+        # stochastic program (a per-request static branch would split the
+        # pool's executable): for the tanh-bounded actor, a + 0*noise
+        # clipped to [-1,1] equals the deterministic branch's raw output,
+        # so recommendations match LITune.tune(deterministic=True)
+        if noise_scale is None:
+            noise_scale = 0.0 if deterministic else 0.05
+        if key is None:
+            self.key, key = jax.random.split(self.key)
+        rid = self._next_rid
+        self._next_rid += 1
+        # numpy (uncommitted) on purpose: admission programs place these
+        # per the pool's mesh; committed jax arrays would pin device 0
+        self.queue.append(TuneRequest(
+            rid=rid, data_keys=np.asarray(data_keys),
+            workload={"reads": np.asarray(workload["reads"]),
+                      "inserts": np.asarray(workload["inserts"])},
+            wr_ratio=float(wr_ratio), budget_steps=int(budget_steps),
+            index_type=index_type, key=key,
+            noise_scale=float(noise_scale)))
+        return rid
+
+    # ------------------------------------------------------------ pools
+    def _pool_key(self, req: TuneRequest) -> tuple:
+        return (req.index_type, int(req.data_keys.shape[0]),
+                int(req.workload["reads"].shape[0]),
+                int(req.workload["inserts"].shape[0]))
+
+    def _pool_for(self, req: TuneRequest) -> _SlotPool:
+        pk = self._pool_key(req)
+        if pk not in self.pools:
+            tuner = self.agents[req.index_type]
+            env_cfg = dataclasses.replace(tuner.cfg.env_cfg(),
+                                          episode_len=self.horizon_cap)
+            self.pools[pk] = _SlotPool(env_cfg, tuner.cfg.net_cfg(),
+                                       tuner.cfg.et_cfg(),
+                                       tuner.state["params"], self.slots,
+                                       self.mesh)
+        return self.pools[pk]
+
+    # --------------------------------------------------------- programs
+    @property
+    def _device_ids(self) -> tuple:
+        return tuple(d.id for d in self.mesh.devices.flat)
+
+    def _pool_step_program(self, pk: tuple, pool: _SlotPool, k: int):
+        """K-step slot program, cached process-wide on
+        (devices, frozen configs, K) so mixed alex/carmi request streams —
+        and successive service instances — alternate between resident
+        executables, never re-tracing."""
+        prog_key = ("step", pk, self.slots, k)
+        if prog_key not in self._programs:
+            self.program_misses += 1
+            self._programs[prog_key] = _step_program(
+                self._device_ids, pool.net_cfg, pool.env_cfg, pool.et_cfg,
+                k)
+        else:
+            self.program_hits += 1
+        return self._programs[prog_key]
+
+    def _pool_reset_program(self, pool: _SlotPool, width: int):
+        ids = self._device_ids
+        if width % len(ids) != 0:
+            ids = ids[:1]               # narrow wave: single-device mesh
+        return _reset_program(ids, pool.env_cfg)
+
+    # ------------------------------------------------------------ serving
+    def _admit(self, pk: tuple, pool: _SlotPool, admits: list[TuneRequest]):
+        """Admit up to `len(free slots)` requests into `pool` with one
+        batched reset (padded to a power-of-two width)."""
+        free = pool.free_slots()
+        assert len(admits) <= len(free)
+        m = len(admits)
+        widths = sorted(set(_pow2_ladder(self.slots) + [self.slots]))
+        width = next(w for w in widths if w >= m)
+        pad = width - m
+        reqs = admits + [admits[0]] * pad
+        data = np.stack([r.data_keys for r in reqs])
+        reads = np.stack([r.workload["reads"] for r in reqs])
+        ins = np.stack([r.workload["inserts"] for r in reqs])
+        wr = np.asarray([r.wr_ratio for r in reqs], np.float32)
+        keys = np.stack([np.asarray(r.key) for r in reqs])
+        env_states, obs = self._pool_reset_program(pool, width)(
+            data, reads, ins, wr)
+        ndev = len(self._device_ids)
+        if ndev > 1 and width % ndev != 0:
+            # narrow reset ran on a single-device mesh; rehome to host so
+            # the scatter (placed on the pool mesh) accepts it
+            env_states, obs = jax.device_get((env_states, obs))
+
+        if m == self.slots and pool.carry is None:
+            pool.carry = _build_carry_program(
+                self._device_ids, pool.net_cfg, self.slots)(
+                keys, env_states, obs)
+            slots_used = list(range(self.slots))
+        else:
+            if pool.carry is None:
+                # first admission with a partial wave: seed every slot with
+                # episode 0 so idle slots hold valid (ignored) state
+                es0, obs0 = jax.device_get(
+                    (jax.tree.map(lambda x: x[:1], env_states), obs[:1]))
+                full = jax.tree.map(
+                    lambda x: np.broadcast_to(x, (self.slots,)
+                                              + x.shape[1:]),
+                    (es0, obs0))
+                pool.carry = _build_carry_program(
+                    self._device_ids, pool.net_cfg, self.slots)(
+                    np.broadcast_to(keys[:1], (self.slots,)
+                                    + keys.shape[1:]), full[0], full[1])
+            slots_used = free[:m]
+            idx = np.asarray(slots_used + [self.slots] * pad, np.int32)
+            pool.carry = _admit_scatter_program(
+                self._device_ids, pool.net_cfg, self.slots)(
+                pool.carry, idx, keys, env_states, obs)
+        r0s = np.asarray(jax.device_get(env_states["r_best"]))
+        for j, (slot, req) in enumerate(zip(slots_used, admits)):
+            pool.mark_admitted(slot, req, float(r0s[j]))
+
+    def _admit_from_queue(self):
+        """Fill free slots with queued requests (FIFO per pool group),
+        one batched reset per pool per tick."""
+        per_pool: dict[tuple, list[TuneRequest]] = {}
+        still_queued = deque()
+        free_left: dict[tuple, int] = {}
+        while self.queue:
+            req = self.queue.popleft()
+            pool = self._pool_for(req)
+            pk = self._pool_key(req)
+            if pk not in free_left:
+                free_left[pk] = len(pool.free_slots())
+            if free_left[pk] > 0:
+                per_pool.setdefault(pk, []).append(req)
+                free_left[pk] -= 1
+            else:
+                still_queued.append(req)
+        self.queue = still_queued
+        for pk, admits in per_pool.items():
+            self._admit(pk, self.pools[pk], admits)
+
+    def step(self) -> int:
+        """One service tick: admit queued requests, advance every active
+        pool by a K-step jitted program, retire finished episodes.
+        Returns the number of episode-steps of useful work done."""
+        self._admit_from_queue()
+        work = 0
+        for pk, pool in self.pools.items():
+            if pool.n_active == 0 or pool.carry is None:
+                continue
+            min_rem = min(pool.remaining())
+            k = max(w for w in _pow2_ladder(self.horizon_cap)
+                    if w <= max(min_rem, 1))
+            program = self._pool_step_program(pk, pool, k)
+            pool.carry, out = program(pool.params, pool.carry,
+                                      pool.noise_dev())
+            # only the fields the serving loop reads cross to the host
+            out_host = jax.device_get({f: out[f] for f in (
+                "reward", "runtime_ns", "action", "cost", "early")})
+            for slot, req in enumerate(pool.requests):
+                if req is None:
+                    continue
+                for j in range(k):
+                    pool.collect(slot, out_host, j)
+                    work += 1
+                    early = bool(out_host["early"][j, slot])
+                    done = early or \
+                        pool.steps_taken[slot] >= req.budget_steps
+                    if done:
+                        rid, summary = pool.retire(slot, early)
+                        self.results[rid] = summary
+                        break
+        self.service_steps += 1
+        self.episode_steps += work
+        return work
+
+    def run(self, max_service_steps: int | None = None) -> dict[int, dict]:
+        """Serve until the queue and every slot drain; returns
+        {rid: summary} for everything completed so far."""
+        n = 0
+        while self.queue or any(p.n_active for p in self.pools.values()):
+            if max_service_steps is not None and n >= max_service_steps:
+                break
+            self.step()
+            n += 1
+        return self.results
+
+    def stats(self) -> dict:
+        return {
+            "service_steps": self.service_steps,
+            "episode_steps": self.episode_steps,
+            "completed": len(self.results),
+            "queued": len(self.queue),
+            "pools": len(self.pools),
+            "devices": len(self.mesh.devices),
+            # per-service binds: first/repeat use of a program key here
+            "program_misses": self.program_misses,
+            "program_hits": self.program_hits,
+            # actual process-wide compiled step programs (shared cache)
+            "programs_resident": _step_program.cache_info().currsize,
+        }
+
+
+# ---------------------------------------------------------------- driver
+def main():
+    from repro.core.litune import LITune, LITuneConfig
+    from repro.index.workloads import sample_keys, wr_workload
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--n-keys", type=int, default=2048)
+    ap.add_argument("--budget", type=int, default=10)
+    ap.add_argument("--index", default="alex", choices=["alex", "carmi"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = LITuneConfig(index_type=args.index, episode_len=args.budget,
+                       lstm_hidden=32, mlp_hidden=64)
+    tuner = LITune(cfg, seed=args.seed)
+    service = TuningService(tuner, slots=args.slots, seed=args.seed)
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    for i in range(args.requests):
+        k = jax.random.fold_in(key, i)
+        wr = [0.33, 1.0, 3.0][i % 3]
+        data = sample_keys(k, args.n_keys, "mix")
+        wl, _ = wr_workload(jax.random.fold_in(k, 1), data, wr,
+                            total=args.n_keys, dist="mix")
+        service.submit(data, wl, wr, budget_steps=args.budget)
+
+    t0 = time.time()
+    results = service.run()
+    dt = time.time() - t0
+    for rid in sorted(results):
+        r = results[rid]
+        print(f"req {rid}: default {r['r0_ns']:9.1f} ns/op  best "
+              f"{r['best_runtime_ns']:9.1f}  steps {r['steps']:3d}  "
+              f"violations {r['violations']:.0f}")
+    st = service.stats()
+    print(f"\n{len(results)} requests in {dt:.2f}s "
+          f"({len(results) / max(dt, 1e-9):.2f} req/s)  "
+          f"ticks={st['service_steps']}  devices={st['devices']}  "
+          f"step programs bound={st['program_misses']} "
+          f"reused={st['program_hits']} "
+          f"resident={st['programs_resident']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,16 @@ import dataclasses
 import re
 from collections import defaultdict
 
+
+def xla_cost_analysis(compiled) -> dict:
+    """Version-tolerant ``compiled.cost_analysis()``: newer jax returns one
+    properties dict, older versions a one-element list of dicts (and some
+    builds return None for empty programs).  Always returns a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
 _DTYPE_BYTES = {
     "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
     "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,

@@ -19,6 +19,29 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 DATA_AXES = ("pod", "data")
 MODEL_AXIS = "model"
 
+
+def shard_map_compat(body, mesh, in_specs, out_specs, axis_names=None):
+    """Version-tolerant `shard_map` (single shim for every call site):
+    jax >= 0.6 exposes `jax.shard_map` with `check_vma`/`axis_names`;
+    older versions only have the experimental surface with `check_rep`.
+    `axis_names` (the *manual* axes) maps to the experimental surface's
+    complementary `auto=` set so partial-manual programs keep their
+    GSPMD-managed axes instead of silently going fully manual."""
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": False}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map
+    kw = {"check_rep": False}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, **kw)
+
 # Default logical-axis -> mesh-axis rules (single source of truth).
 # None means replicate.  Tuples mean "shard over the product of these axes".
 DEFAULT_RULES: dict[str, object] = {

@@ -51,7 +51,7 @@ def test_scan_flops_match_unrolled_cost_analysis(compiled_pair):
     scan, unroll = compiled_pair
     res_scan = ha.analyze(scan.as_text())
     res_unroll = ha.analyze(unroll.as_text())
-    xla_unroll = float(unroll.cost_analysis()["flops"])
+    xla_unroll = float(ha.xla_cost_analysis(unroll)["flops"])
     analytic = L * 2 * (2 * B * D * F)
     # parser on scan == parser on unroll == XLA on unroll == analytic (±5%)
     for val in (res_scan.flops, res_unroll.flops, xla_unroll):
@@ -61,7 +61,7 @@ def test_scan_flops_match_unrolled_cost_analysis(compiled_pair):
 def test_xla_cost_analysis_undercounts_scan(compiled_pair):
     """The reason this module exists: XLA counts while bodies once."""
     scan, _ = compiled_pair
-    xla_scan = float(scan.cost_analysis()["flops"])
+    xla_scan = float(ha.xla_cost_analysis(scan)["flops"])
     res_scan = ha.analyze(scan.as_text())
     assert xla_scan < res_scan.flops / 2
 

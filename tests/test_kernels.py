@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -122,3 +122,38 @@ def test_mamba_scan_matches_model_block(rng_key):
     got = selective_scan(u, dt, b_mat, c_mat, a, chunk=64, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------- capacity path (dispatch)
+def test_batched_lookup_capacity_overflow_flags_dropped(rng_key):
+    """Queries beyond a tile's `qcap` come back flagged `dropped` with
+    rank -1 — never a silently-wrong rank."""
+    tile = 128
+    keys = jnp.sort(jax.random.uniform(rng_key, (8 * tile,)))
+    # cram 32 queries into tile 0's key range with qcap=4 -> overflow
+    queries = jnp.linspace(float(keys[1]), float(keys[tile - 2]), 32)
+    ranks, dropped = batched_lookup(keys, queries, tile=tile, qcap=4)
+    ranks, dropped = np.asarray(ranks), np.asarray(dropped)
+    assert dropped.sum() == 32 - 4          # exactly qcap survive
+    assert np.all(ranks[dropped] == -1)
+    want = np.asarray(jnp.searchsorted(keys, queries, side="right"))
+    np.testing.assert_array_equal(ranks[~dropped], want[~dropped])
+
+
+def test_batched_lookup_capacity_retry_recovers(rng_key):
+    """The caller contract: retrying with a larger `qcap` clears the drops
+    and recovers the reference ranks (probe_ref path and searchsorted)."""
+    tile = 128
+    keys = jnp.sort(jax.random.uniform(rng_key, (8 * tile,)))
+    queries = jnp.linspace(float(keys[1]), float(keys[tile - 2]), 32)
+    _, dropped = batched_lookup(keys, queries, tile=tile, qcap=4)
+    assert bool(np.asarray(dropped).any())
+    # retry the same batch with ample capacity
+    ranks2, dropped2 = batched_lookup(keys, queries, tile=tile, qcap=32)
+    assert not bool(np.asarray(dropped2).any())
+    ref_ranks, ref_dropped = batched_lookup(keys, queries, tile=tile,
+                                            qcap=32, use_pallas=False)
+    assert not bool(np.asarray(ref_dropped).any())
+    np.testing.assert_array_equal(np.asarray(ranks2), np.asarray(ref_ranks))
+    want = np.asarray(jnp.searchsorted(keys, queries, side="right"))
+    np.testing.assert_array_equal(np.asarray(ranks2), want)

@@ -63,7 +63,10 @@ def results():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         timeout=540, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                          "HOME": "/root"}, cwd="/root/repo")
+                          "HOME": "/root",
+                          # force CPU: a stray libtpu otherwise burns
+                          # minutes probing cloud TPU metadata
+                          "JAX_PLATFORMS": "cpu"}, cwd="/root/repo")
     assert proc.returncode == 0, proc.stderr[-3000:]
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")]
     return json.loads(line[0][len("RESULT "):])

@@ -1,0 +1,148 @@
+"""Batched tuning-as-a-service engine (launch/tune_serve.py):
+
+* batched-vs-serial parity — a B-slot `TuningService` produces bitwise
+  identical per-request runtimes/rewards to B independent
+  `rollout_episode` calls with the same PRNG keys (alex and carmi);
+* slot recycling — a short-budget request finishes mid-flight and its
+  slot is reused by a queued request;
+* compiled-program cache — a mixed alex/carmi stream compiles one
+  program per (space, shape) group and reuses them.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import etmdp
+from repro.core.litune import LITune, LITuneConfig, attach_best_params
+from repro.index.workloads import sample_keys, wr_workload
+from repro.launch.tune_serve import TuningService
+
+
+def _cfg(index_type: str, **kw) -> LITuneConfig:
+    return LITuneConfig(index_type=index_type, episode_len=4,
+                        lstm_hidden=16, mlp_hidden=32, **kw)
+
+
+def _instances(n: int, n_keys: int = 512, seed: int = 5, wr: float = 1.0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        data = sample_keys(k, n_keys, "mix")
+        wl, _ = wr_workload(jax.random.fold_in(k, 1), data, wr,
+                            total=n_keys, dist="mix")
+        out.append((data, wl))
+    return out
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("index_type", ["alex", "carmi"])
+def test_batched_parity_with_serial(index_type):
+    cfg = _cfg(index_type)
+    tuner = LITune(cfg, seed=0)
+    slots, budget, wr = 3, 4, 1.0
+    inst = _instances(slots)
+    keys = [jax.random.PRNGKey(100 + i) for i in range(slots)]
+
+    serial = [
+        etmdp.rollout_episode(
+            keys[i], tuner.state, cfg.net_cfg(),
+            dataclasses.replace(cfg.env_cfg(), episode_len=budget),
+            cfg.et_cfg(), data, wl, wr, noise_scale=0.05)
+        for i, (data, wl) in enumerate(inst)
+    ]
+
+    service = TuningService(tuner, slots=slots)
+    rids = [service.submit(data, wl, wr, budget_steps=budget,
+                           key=keys[i], noise_scale=0.05)
+            for i, (data, wl) in enumerate(inst)]
+    results = service.run()
+
+    for i, rid in enumerate(rids):
+        got, want = results[rid], serial[i]
+        assert got["steps"] == want["steps"]
+        assert got["terminated_early"] == want["terminated_early"]
+        # bitwise: same floats out of the same traced per-step program
+        assert got["runtimes"] == want["runtimes"]
+        assert got["episode_return"] == want["episode_return"]
+        assert got["violations"] == want["violations"]
+        assert got["best_runtime_ns"] == want["best_runtime_ns"]
+        assert got["r0_ns"] == want["r0_ns"]
+        # bitwise holds for the actions too: the service's lax.map body is
+        # the same unbatched program as the serial episode_step
+        for a_got, a_want in zip(got["actions"], want["actions"]):
+            np.testing.assert_array_equal(a_got, a_want)
+        assert got["best_params"] == attach_best_params(
+            want, dataclasses.replace(cfg.env_cfg(), episode_len=budget))
+
+
+def test_tune_many_matches_tune_shape():
+    """LITune.tune_many returns summaries in the LITune.tune shape."""
+    tuner = LITune(_cfg("alex"), seed=0)
+    inst = _instances(2)
+    out = tuner.tune_many([(d, w, 1.0) for d, w in inst], slots=2,
+                          budget_steps=3)
+    assert len(out) == 2
+    ref = tuner.tune(*inst[0], 1.0, budget_steps=3)
+    for s in out:
+        assert set(ref) == set(s)
+        assert s["steps"] == 3
+        assert set(s["best_params"]) == set(ref["best_params"])
+
+
+# ------------------------------------------------------------ recycling
+def test_slot_recycling():
+    """A short-budget request retires mid-flight and its slot is taken by
+    the queued request; everything completes."""
+    tuner = LITune(_cfg("alex", safe_rl=False), seed=0)  # no early exits
+    service = TuningService(tuner, slots=2)
+    (d0, w0), (d1, w1), (d2, w2) = _instances(3)
+    r_short = service.submit(d0, w0, 1.0, budget_steps=2)
+    r_long = service.submit(d1, w1, 1.0, budget_steps=6)
+    r_queued = service.submit(d2, w2, 1.0, budget_steps=3)
+
+    # tick 1 scans K=2 (the short request's remaining budget bounds K):
+    # the short request completes, the third still waits in the queue
+    service.step()
+    pool = next(iter(service.pools.values()))
+    assert r_short in service.results
+    assert len(service.queue) == 1          # only 2 slots, third waited
+    freed = [i for i, r in enumerate(pool.requests) if r is None]
+    assert len(freed) == 1                  # short request's slot is free
+    active = [r.rid for r in pool.requests if r is not None]
+    assert active == [r_long]
+
+    # tick 2 admits the queued request into the freed slot, mid-flight
+    service.step()
+    assert len(service.queue) == 0
+    assert pool.requests[freed[0]] is not None \
+        and pool.requests[freed[0]].rid == r_queued  # recycled slot
+
+    results = service.run()
+    assert sorted(results) == sorted([r_short, r_long, r_queued])
+    assert results[r_short]["steps"] == 2
+    assert results[r_long]["steps"] == 6
+    assert results[r_queued]["steps"] == 3
+    assert service.episode_steps == 2 + 6 + 3   # no lost/duplicated work
+
+
+# ------------------------------------------------------------ program cache
+def test_mixed_stream_program_cache():
+    """alex and carmi requests interleave; one compile per space, then
+    pure reuse."""
+    agents = {"alex": LITune(_cfg("alex"), seed=0),
+              "carmi": LITune(_cfg("carmi"), seed=1)}
+    service = TuningService(agents, slots=2)
+    inst = _instances(8, n_keys=512)
+    for i, (d, w) in enumerate(inst):
+        service.submit(d, w, 1.0, budget_steps=2,
+                       index_type="alex" if i % 2 == 0 else "carmi")
+    results = service.run()
+    assert len(results) == 8
+    st = service.stats()
+    assert st["program_misses"] == 2        # one step program per space
+    assert st["program_hits"] >= 2          # the second wave reuses both
+    assert st["queued"] == 0
