@@ -1,0 +1,165 @@
+"""Cost of continuous tuning (O2) inside the batched tuning service.
+
+    PYTHONPATH=src python -m benchmarks.o2_serve
+    PYTHONPATH=src python -m benchmarks.o2_serve --requests 8 --budget 4 \
+        --n-keys 256 --slots 2 --json BENCH_o2_serve.json
+
+Serves the same drifting request wave through two service configurations
+and reports req/s:
+
+  frozen — `TuningService` as PR 1 shipped it: a frozen pretrained agent,
+           no transition capture, no offline learner;
+  o2     — `O2ServiceConfig(enabled=True)`: per-request divergence
+           observation, transition streaming into the tenant replay,
+           `offline_updates_per_tick` DDPG steps between ticks, and
+           divergence-triggered assessments/hot-swaps.
+
+The gap between the two is the end-to-end price of continuous tuning
+(capture + fine-tune + assess).  The hot-swap itself is also timed
+directly — it is a pure param-buffer update over the tenant's pools, so
+it should sit far under one service tick.
+
+Prints CSV ``o2_serve,<mode>,<slots>,<req/s>,<vs_frozen>`` plus a
+``o2_serve,swap,...`` latency row; ``--json`` writes the same numbers as
+a JSON artifact for the CI perf trend.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+# expose every core as an XLA host device so the service can shard slots;
+# must happen before jax initializes (no-op if the operator already set it)
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={os.cpu_count()}")
+
+import jax
+import numpy as np
+
+from repro.core.ddpg import DDPGConfig
+from repro.core.litune import LITune, LITuneConfig
+from repro.core.o2 import O2Config
+from repro.index.workloads import sample_keys, wr_workload
+from repro.launch.tune_serve import O2ServiceConfig, TuningService
+
+
+def make_requests(n: int, n_keys: int, seed: int = 1):
+    """A drifting wave: the key distribution cycles so the divergence
+    monitor actually fires (the O2 path's worst case — every window may
+    trigger an assessment)."""
+    dists = ["uniform", "books", "osm", "fb"]
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        data = sample_keys(k, n_keys, dists[i % len(dists)])
+        wl, _ = wr_workload(jax.random.fold_in(k, 1), data, 1.0,
+                            total=n_keys, dist="mix")
+        out.append((data, wl, 1.0))
+    return out
+
+
+def bench(tuner: LITune, requests, budget: int, slots: int,
+          o2: O2ServiceConfig | None):
+    service = TuningService(tuner, slots=slots, o2=o2)
+    t0 = time.perf_counter()
+    for data, wl, wr in requests:
+        service.submit(data, wl, wr, budget_steps=budget, noise_scale=0.02)
+    results = service.run()
+    dt = time.perf_counter() - t0
+    assert len(results) == len(requests)
+    return len(requests) / dt, service
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--budget", type=int, default=8)
+    ap.add_argument("--n-keys", type=int, default=512)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--updates-per-tick", type=int, default=4)
+    ap.add_argument("--swap-reps", type=int, default=20,
+                    help="direct hot-swap latency measurements")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as a JSON artifact (CI trend)")
+    args = ap.parse_args()
+
+    cfg = LITuneConfig(
+        index_type="alex", episode_len=args.budget,
+        lstm_hidden=32, mlp_hidden=64,
+        ddpg=DDPGConfig(batch_size=16, seq_len=4, burn_in=1),
+        o2=O2Config(divergence_threshold=0.10,
+                    offline_updates_per_window=args.updates_per_tick))
+    o2_cfg = O2ServiceConfig(
+        enabled=True, o2=cfg.o2,
+        offline_updates_per_tick=args.updates_per_tick)
+    requests = make_requests(args.requests, args.n_keys, seed=args.seed + 1)
+
+    # warm both paths so compile time is excluded (programs are cached
+    # process-wide; a real service binds them once at startup)
+    bench(LITune(cfg, seed=args.seed), requests, args.budget, args.slots,
+          None)
+    bench(LITune(cfg, seed=args.seed), requests, args.budget, args.slots,
+          o2_cfg)
+
+    frozen_rps, _ = bench(LITune(cfg, seed=args.seed), requests,
+                          args.budget, args.slots, None)
+    o2_rps, service = bench(LITune(cfg, seed=args.seed), requests,
+                            args.budget, args.slots, o2_cfg)
+
+    st = service.stats()["o2"]["alex"]
+
+    # hot-swap latency, measured directly: promote the offline model over
+    # the service's (already live) pools `swap_reps` times
+    from repro.launch.tune_serve import TuneRequest
+    data, wl, wr = requests[-1]
+    last_req = TuneRequest(
+        rid=-1, data_keys=np.asarray(data),
+        workload={"reads": np.asarray(wl["reads"]),
+                  "inserts": np.asarray(wl["inserts"])},
+        wr_ratio=wr, budget_steps=args.budget)
+    tenant = service.tenants["alex"]
+    n0 = len(tenant.swap_times_s)
+    for _ in range(args.swap_reps):
+        service._hot_swap("alex", last_req)
+    swap_ms = 1e3 * float(np.mean(tenant.swap_times_s[n0:]))
+    print(f"# o2_serve  requests={args.requests} budget={args.budget} "
+          f"n_keys={args.n_keys} slots={args.slots} "
+          f"updates_per_tick={args.updates_per_tick} "
+          f"devices={len(jax.devices())} "
+          f"windows={st['windows']} diverged={st['diverged']} "
+          f"swaps={st['swaps']} offline_updates={st['offline_updates']}")
+    print("benchmark,mode,slots,req_per_s,vs_frozen")
+    print(f"o2_serve,frozen,{args.slots},{frozen_rps:.3f},1.00")
+    print(f"o2_serve,o2,{args.slots},{o2_rps:.3f},"
+          f"{o2_rps / frozen_rps:.2f}")
+    print(f"o2_serve,swap,{args.slots},{swap_ms:.3f} ms,-")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "o2_serve",
+                       "config": {"requests": args.requests,
+                                  "budget": args.budget,
+                                  "n_keys": args.n_keys,
+                                  "slots": args.slots,
+                                  "updates_per_tick": args.updates_per_tick,
+                                  "devices": len(jax.devices())},
+                       "rows": [
+                           {"mode": "frozen", "req_per_s": frozen_rps,
+                            "vs_frozen": 1.0},
+                           {"mode": "o2", "req_per_s": o2_rps,
+                            "vs_frozen": o2_rps / frozen_rps},
+                       ],
+                       "swap_latency_ms": swap_ms,
+                       "o2_stats": st}, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

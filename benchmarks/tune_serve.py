@@ -21,6 +21,7 @@ tuner cannot use.  Prints CSV ``tune_serve,<mode>,<slots>,<req/s>,<speedup>``.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import time
 
@@ -84,6 +85,8 @@ def main():
     ap.add_argument("--mixed-wr", action="store_true",
                     help="cycle write/read ratios (heterogeneous pools)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as a JSON artifact (CI trend)")
     args = ap.parse_args()
     slot_counts = [int(s) for s in args.slots.split(",")]
 
@@ -105,10 +108,26 @@ def main():
           f"mixed_wr={args.mixed_wr} devices={len(jax.devices())}")
     print("benchmark,mode,slots,req_per_s,speedup_vs_serial")
     serial_rps = bench_serial(tuner, requests, args.budget)
+    rows = [{"mode": "serial", "slots": 1, "req_per_s": serial_rps,
+             "speedup_vs_serial": 1.0}]
     print(f"tune_serve,serial,1,{serial_rps:.3f},1.00")
     for b in slot_counts:
         rps = bench_batched(tuner, requests, args.budget, b)
+        rows.append({"mode": "batched", "slots": b, "req_per_s": rps,
+                     "speedup_vs_serial": rps / serial_rps})
         print(f"tune_serve,batched,{b},{rps:.3f},{rps / serial_rps:.2f}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "tune_serve",
+                       "config": {"requests": args.requests,
+                                  "budget": args.budget,
+                                  "n_keys": args.n_keys,
+                                  "index": args.index,
+                                  "mixed_wr": args.mixed_wr,
+                                  "devices": len(jax.devices())},
+                       "rows": rows}, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

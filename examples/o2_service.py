@@ -1,0 +1,71 @@
+"""Continuous tuning (O2) inside the batched tuning service: a drifting
+window stream served by `TuningService` with `O2ServiceConfig(enabled=True)`.
+
+Each window is one tuning request; the service observes its key/W-R
+divergence at admission, streams the retired episode's transitions into
+the tenant replay, fine-tunes the offline DDPG learner between ticks, and
+hot-swaps pool params (a pure buffer update — no re-trace) whenever a
+diverged window's assessment shows the offline model winning.
+
+    PYTHONPATH=src python examples/o2_service.py
+
+The one-call equivalent is ``LITune.stream(windows, via_service=True)``,
+which makes the same swap decisions as the serial
+`O2System.tune_window` loop (tests/test_o2_service.py asserts parity).
+"""
+import jax
+
+from repro.core.ddpg import DDPGConfig
+from repro.core.litune import LITune, LITuneConfig
+from repro.core.maml import MetaConfig
+from repro.core.o2 import O2Config
+from repro.index.workloads import StreamConfig, stream_windows
+from repro.launch.tune_serve import O2ServiceConfig, TuningService
+
+
+def main():
+    cfg = LITuneConfig(
+        index_type="alex", episode_len=6,
+        lstm_hidden=32, mlp_hidden=64,
+        ddpg=DDPGConfig(batch_size=16, seq_len=4, burn_in=1),
+        meta=MetaConfig(meta_batch=2, inner_episodes=1, inner_updates=4),
+        o2=O2Config(divergence_threshold=0.10,
+                    offline_updates_per_window=8))
+    tuner = LITune(cfg, seed=0)
+    print("pretraining ...")
+    tuner.pretrain(n_outer=2)
+    service = TuningService(
+        tuner, slots=1,
+        o2=O2ServiceConfig(enabled=True, o2=cfg.o2, strict_order=True))
+
+    stream_cfg = StreamConfig(
+        n_windows=8, base_per_window=2048, updates_per_window=2048,
+        dist="mix", drift_per_window=0.15, wr_start=1.0, wr_end=3.0)
+    print("serving 8 tumbling windows (drift 0.15/window, W/R 1->3) "
+          "through the O2-enabled service:")
+    rids = [service.submit(data, wl, wr, budget_steps=6, noise_scale=0.02)
+            for _, data, wl, wr in
+            stream_windows(jax.random.PRNGKey(3), stream_cfg)]
+    results = service.run()
+
+    for w, rid in enumerate(rids):
+        r = results[rid]
+        div = r["divergence"]
+        print(f"  window {w:2d}: default {r['r0_ns']:8.1f} ns/op  "
+              f"tuned {r['best_runtime_ns']:8.1f}  "
+              f"ks={div['ks']:.3f}  "
+              f"{'<- model swap' if r['swapped'] else ''}")
+
+    st = service.stats()
+    o2 = st["o2"]["alex"]
+    print(f"\nO2: windows={o2['windows']}  diverged={o2['diverged']}  "
+          f"swaps={o2['swaps']}  offline updates={o2['offline_updates']}  "
+          f"replay={o2['replay_size']} transitions")
+    print(f"programs: bound={st['program_misses']} "
+          f"reused={st['program_hits']} "
+          f"resident={st['programs_resident']} — hot-swaps never re-trace "
+          f"(params are program inputs, not constants)")
+
+
+if __name__ == "__main__":
+    main()

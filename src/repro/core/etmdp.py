@@ -87,7 +87,13 @@ def _episode_step_core(params, carry, noise_scale, net_cfg,
     outputs = {"action": action, "reward": r_val, "raw_reward": r,
                "runtime_ns": info["runtime_ns"], "cost": cost,
                "early": early, "done": done_flag,
-               "memory_bytes": info["memory_bytes"]}
+               "memory_bytes": info["memory_bytes"],
+               # the transition view, for replay ingestion off the batched
+               # paths: pre-step obs/hiddens + the post-step observation
+               # (zeroed on early exit, the absorbing state s_e) — exactly
+               # what the serial `rollout_episode` pushes into replay
+               "obs": carry["obs"], "next_obs": next_obs_eff,
+               "h_a": carry["h_a"], "h_q": carry["h_q"]}
     return new_carry, outputs
 
 
@@ -171,7 +177,6 @@ def rollout_episode(key, agent_state, net_cfg, env_cfg: E.EnvConfig,
     terminated = False
     runtimes, actions = [], []
     for t in range(env_cfg.episode_len):
-        prev_obs, prev_ha, prev_hq = carry["obs"], carry["h_a"], carry["h_q"]
         carry, out = episode_step(params, carry, noise_scale, net_cfg,
                                   env_cfg, et_cfg,
                                   deterministic=deterministic)
@@ -182,11 +187,14 @@ def rollout_episode(key, agent_state, net_cfg, env_cfg: E.EnvConfig,
         done_flag = bool(out["done"])
 
         if replay is not None:
-            replay.add(np.asarray(prev_obs), np.asarray(out["action"]),
-                       r_val, np.asarray(carry["obs"]), float(done_flag),
+            # the step emits its own transition view (pre-step obs/hiddens,
+            # post-step next_obs) — the same fields the batched serving
+            # path captures per slot
+            replay.add(np.asarray(out["obs"]), np.asarray(out["action"]),
+                       r_val, np.asarray(out["next_obs"]), float(done_flag),
                        cost,
-                       (np.asarray(prev_ha[0]), np.asarray(prev_ha[1])),
-                       (np.asarray(prev_hq[0]), np.asarray(prev_hq[1])))
+                       (np.asarray(out["h_a"][0]), np.asarray(out["h_a"][1])),
+                       (np.asarray(out["h_q"][0]), np.asarray(out["h_q"][1])))
         total_r += r_val
         best_rt = min(best_rt, float(out["runtime_ns"]))
         runtimes.append(float(out["runtime_ns"]))

@@ -86,7 +86,7 @@ class LITune:
         """One tuning request: returns best params found + episode summary."""
         env_cfg = self.cfg.env_cfg()
         if budget_steps is not None:
-            env_cfg = dataclasses.replace(env_cfg, episode_len=budget_steps)
+            env_cfg = env_cfg.with_episode_len(budget_steps)
         self.key, k = jax.random.split(self.key)
         summary = rollout_episode(
             k, self.state, self.cfg.net_cfg(), env_cfg, self.cfg.et_cfg(),
@@ -120,9 +120,21 @@ class LITune:
         results = service.run()
         return [results[rid] for rid in rids]
 
-    def stream(self, windows, max_steps_per_window: int = 5):
+    def stream(self, windows, max_steps_per_window: int = 5,
+               via_service: bool = False):
         """Continuous tuning over an iterable of
-        (idx, data_keys, workload, wr_ratio) windows via the O2 system."""
+        (idx, data_keys, workload, wr_ratio) windows via the O2 system.
+
+        With ``via_service=True`` the same stream is served through the
+        batched `TuningService` with O2 enabled (one slot): same swap
+        decisions as the serial loop, but on the engine that also serves
+        concurrent tenants (see launch/tune_serve.py)."""
+        if via_service:
+            if not self.cfg.use_o2:
+                raise ValueError(
+                    "stream(via_service=True) serves the O2 system; the "
+                    "use_o2=False ablation only runs the serial path")
+            return self._stream_via_service(windows, max_steps_per_window)
         if self._o2 is None or not self.cfg.use_o2:
             self._o2 = O2System(self.state, self.cfg.net_cfg(), self.cfg.ddpg,
                                 self.cfg.env_cfg(), self.cfg.et_cfg(),
@@ -134,8 +146,8 @@ class LITune:
                 res = self._o2.tune_window(k, data, workload, wr,
                                            max_steps=max_steps_per_window)
             else:  # ablation: frozen pretrained model, no O2
-                env_cfg = dataclasses.replace(
-                    self.cfg.env_cfg(), episode_len=max_steps_per_window)
+                env_cfg = self.cfg.env_cfg().with_episode_len(
+                    max_steps_per_window)
                 res = rollout_episode(k, self.state, self.cfg.net_cfg(),
                                       env_cfg, self.cfg.et_cfg(), data,
                                       workload, wr, noise_scale=0.02)
@@ -144,6 +156,31 @@ class LITune:
         if self.cfg.use_o2 and self._o2 is not None:
             self.state = self._o2.online  # keep the improved model
         return results
+
+    def _stream_via_service(self, windows, max_steps: int):
+        """O2 window stream through the batched serving engine."""
+        from repro.launch.tune_serve import O2ServiceConfig, TuningService
+        service = TuningService(
+            self, slots=1, horizon_cap=max(256, max_steps),
+            o2=O2ServiceConfig(enabled=True, o2=self.cfg.o2,
+                               strict_order=True))
+        rids, widx = [], []
+        for w, data, workload, wr in windows:
+            # same per-window key draws as the serial stream above
+            self.key, k = jax.random.split(self.key)
+            rids.append(service.submit(data, workload, wr,
+                                       budget_steps=max_steps, key=k,
+                                       noise_scale=0.02))
+            widx.append(w)
+        results = service.run()
+        out = []
+        for w, rid in zip(widx, rids):
+            res = results[rid]
+            res["window"] = w
+            out.append(res)
+        # keep the improved (possibly hot-swapped) model
+        self.state = service.tenants[self.cfg.index_type].online
+        return out
 
     # ---------------- persistence ----------------
     def save(self, path: str):

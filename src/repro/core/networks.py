@@ -13,8 +13,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.module import (ParamSpec, abstract_params, fan_in_init,
-                                 init_params, zeros_init)
+from repro.models.module import (ParamSpec, fan_in_init, init_params,
+                                 zeros_init)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,7 +8,18 @@ A divergence monitor (KS statistic over key-distribution quantiles + W/R
 drift) decides when data has shifted; at assessment points, if divergence
 exceeds the threshold and the offline model beats the online one on the
 recent window, the online model is swapped (Example 3.2's
-stable-vs-dynamic-phase behaviour)."""
+stable-vs-dynamic-phase behaviour).
+
+The loop is factored into three reusable pieces shared by the serial path
+(`O2System.tune_window`, driven by `LITune.stream`) and the serving path
+(`launch/tune_serve.TuningService` with `O2ServiceConfig`):
+
+  * `DivergenceMonitor` — per-tenant KS + W/R drift bookkeeping;
+  * `offline_finetune`  — N DDPG updates of the offline learner on the
+                          shared replay;
+  * `assess_offline`    — the deterministic offline evaluation episode
+                          whose best-runtime decides a hot-swap.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -42,8 +53,98 @@ def _quantiles(keys: np.ndarray, n: int) -> np.ndarray:
 def ks_distance(q_ref: np.ndarray, q_new: np.ndarray) -> float:
     """KS statistic between two distributions given matched quantile grids."""
     grid = np.union1d(q_ref, q_new)
-    cdf = lambda q: np.searchsorted(q, grid, side="right") / len(q)
+
+    def cdf(q):
+        return np.searchsorted(q, grid, side="right") / len(q)
+
     return float(np.max(np.abs(cdf(q_ref) - cdf(q_new))))
+
+
+class DivergenceMonitor:
+    """KS-on-quantiles + W/R drift detector over a window stream.
+
+    Bookkeeping invariants (one entry per observed window, always):
+      * ``len(divergences) == windows_seen`` — the reference window records
+        a 0.0 divergence instead of being silently dropped;
+      * ``anchors`` lists the window indices (0-based) whose data anchors
+        the current and all past reference quantiles, so re-anchors on
+        model swaps stay visible in the history.
+    """
+
+    def __init__(self, cfg: O2Config):
+        self.cfg = cfg
+        self.ref_quantiles: np.ndarray | None = None
+        self.ref_wr: float | None = None
+        self.windows_seen = 0
+        self.divergences: list[float] = []
+        self.anchors: list[int] = []
+        self.diverged_count = 0        # windows whose verdict fired (KS or W/R)
+
+    def observe(self, data_keys, wr_ratio: float) -> dict:
+        """Record one window; returns the divergence verdict for it."""
+        q = _quantiles(np.asarray(data_keys), self.cfg.n_quantiles)
+        self.windows_seen += 1
+        if self.ref_quantiles is None:
+            self.ref_quantiles, self.ref_wr = q, wr_ratio
+            self.divergences.append(0.0)
+            self.anchors.append(self.windows_seen - 1)
+            return {"diverged": False, "ks": 0.0, "wr_shift": 0.0}
+        ks = ks_distance(self.ref_quantiles, q)
+        wr_shift = abs(wr_ratio - self.ref_wr) / max(abs(self.ref_wr), 1e-9)
+        self.divergences.append(ks)
+        diverged = (ks > self.cfg.divergence_threshold
+                    or wr_shift > self.cfg.wr_shift_threshold)
+        self.diverged_count += bool(diverged)
+        return {"diverged": diverged, "ks": ks, "wr_shift": wr_shift}
+
+    def re_anchor(self, data_keys, wr_ratio: float,
+                  window: int | None = None):
+        """Reset the reference distribution (after a model swap) and record
+        which window re-anchored it.  `window` is the 0-based index of the
+        window whose data is being anchored; it defaults to the latest
+        observed one (the serial loop's case), but a concurrent server
+        passes the retired window explicitly — another window may have
+        been observed since."""
+        self.ref_quantiles = _quantiles(np.asarray(data_keys),
+                                        self.cfg.n_quantiles)
+        self.ref_wr = wr_ratio
+        self.anchors.append(self.windows_seen - 1 if window is None
+                            else window)
+
+
+def make_replay(net_cfg: NetConfig, ddpg_cfg: DDPGConfig,
+                env_cfg: E.EnvConfig, capacity: int = 8192,
+                seed: int = 0) -> SequenceReplay:
+    """The replay shape both O2 paths share — constructing it identically
+    is what makes serial/serving fine-tuning bitwise comparable."""
+    return SequenceReplay(capacity, E.obs_dim(), env_cfg.space.dim,
+                          net_cfg.lstm_hidden, seq_len=ddpg_cfg.seq_len,
+                          seed=seed)
+
+
+def offline_finetune(state, replay: SequenceReplay, net_cfg: NetConfig,
+                     ddpg_cfg: DDPGConfig, n_updates: int):
+    """Continually fine-tune the offline learner: up to `n_updates` DDPG
+    steps on the accumulated transitions.  Returns (state, updates_done)."""
+    done = 0
+    for _ in range(n_updates):
+        batch = replay.sample_sequences(ddpg_cfg.batch_size)
+        if batch is None:
+            break
+        batch = jax.tree.map(jnp.asarray, batch)
+        state, _ = ddpg.update(state, batch, net_cfg, ddpg_cfg)
+        done += 1
+    return state, done
+
+
+def assess_offline(key, offline_state, net_cfg: NetConfig,
+                   env_cfg: E.EnvConfig, et_cfg: ETMDPConfig, data_keys,
+                   workload, wr_ratio) -> dict:
+    """The assessment episode: run the offline model deterministically on
+    the window; the caller compares best runtimes to decide the swap."""
+    return rollout_episode(key, offline_state, net_cfg, env_cfg, et_cfg,
+                           data_keys, workload, wr_ratio, noise_scale=0.0,
+                           deterministic=True)
 
 
 class O2System:
@@ -51,32 +152,37 @@ class O2System:
                  ddpg_cfg: DDPGConfig, env_cfg: E.EnvConfig,
                  et_cfg: ETMDPConfig, o2_cfg: O2Config = O2Config(),
                  seed: int = 0):
-        copy = lambda s: jax.tree.map(lambda x: x, s)
+        def copy(s):
+            return jax.tree.map(lambda x: x, s)
+
         self.online = copy(pretrained_state)
         self.offline = copy(pretrained_state)
         self.net_cfg, self.ddpg_cfg = net_cfg, ddpg_cfg
         self.env_cfg, self.et_cfg, self.cfg = env_cfg, et_cfg, o2_cfg
-        self.replay = SequenceReplay(8192, E.obs_dim(), env_cfg.space.dim,
-                                     net_cfg.lstm_hidden,
-                                     seq_len=ddpg_cfg.seq_len, seed=seed)
-        self.ref_quantiles: np.ndarray | None = None
-        self.ref_wr: float | None = None
-        self.windows_seen = 0
+        self.replay = make_replay(net_cfg, ddpg_cfg, env_cfg, seed=seed)
+        self.monitor = DivergenceMonitor(o2_cfg)
         self.swaps = 0
-        self.divergences: list[float] = []
+
+    # monitor state, surfaced for callers/tests that predate the refactor
+    @property
+    def windows_seen(self) -> int:
+        return self.monitor.windows_seen
+
+    @property
+    def divergences(self) -> list[float]:
+        return self.monitor.divergences
+
+    @property
+    def ref_quantiles(self):
+        return self.monitor.ref_quantiles
+
+    @property
+    def ref_wr(self):
+        return self.monitor.ref_wr
 
     # ---------- divergence detection ----------
     def observe_window(self, data_keys, wr_ratio: float) -> dict:
-        q = _quantiles(np.asarray(data_keys), self.cfg.n_quantiles)
-        if self.ref_quantiles is None:
-            self.ref_quantiles, self.ref_wr = q, wr_ratio
-            return {"diverged": False, "ks": 0.0, "wr_shift": 0.0}
-        ks = ks_distance(self.ref_quantiles, q)
-        wr_shift = abs(wr_ratio - self.ref_wr) / max(abs(self.ref_wr), 1e-9)
-        self.divergences.append(ks)
-        diverged = (ks > self.cfg.divergence_threshold
-                    or wr_shift > self.cfg.wr_shift_threshold)
-        return {"diverged": diverged, "ks": ks, "wr_shift": wr_shift}
+        return self.monitor.observe(data_keys, wr_ratio)
 
     # ---------- the O2 loop on one window ----------
     def tune_window(self, key, data_keys, workload, wr_ratio: float,
@@ -84,10 +190,9 @@ class O2System:
         """Online-tune the current window; offline model keeps learning;
         swap if diverged and offline wins."""
         div = self.observe_window(data_keys, wr_ratio)
-        self.windows_seen += 1
         env_cfg = self.env_cfg
         if max_steps is not None:
-            env_cfg = dataclasses.replace(env_cfg, episode_len=max_steps)
+            env_cfg = env_cfg.with_episode_len(max_steps)
 
         key, k_on = jax.random.split(key)
         online_summary = rollout_episode(
@@ -96,27 +201,21 @@ class O2System:
             replay=self.replay, deterministic=False)
 
         # offline model: continual fine-tuning on accumulated transitions
-        for _ in range(self.cfg.offline_updates_per_window):
-            batch = self.replay.sample_sequences(self.ddpg_cfg.batch_size)
-            if batch is None:
-                break
-            batch = jax.tree.map(jnp.asarray, batch)
-            self.offline, _ = ddpg.update(self.offline, batch, self.net_cfg,
-                                          self.ddpg_cfg)
+        self.offline, _ = offline_finetune(
+            self.offline, self.replay, self.net_cfg, self.ddpg_cfg,
+            self.cfg.offline_updates_per_window)
 
         swapped = False
         if div["diverged"] and \
-                self.windows_seen % self.cfg.assess_every == 0:
+                self.monitor.windows_seen % self.cfg.assess_every == 0:
             key, k_off = jax.random.split(key)
-            off_summary = rollout_episode(
+            off_summary = assess_offline(
                 k_off, self.offline, self.net_cfg, env_cfg, self.et_cfg,
-                data_keys, workload, wr_ratio, noise_scale=0.0,
-                deterministic=True)
+                data_keys, workload, wr_ratio)
             if off_summary["best_runtime_ns"] < online_summary["best_runtime_ns"]:
                 self.online = jax.tree.map(lambda x: x, self.offline)
                 self.swaps += 1
                 swapped = True
-                q = _quantiles(np.asarray(data_keys), self.cfg.n_quantiles)
-                self.ref_quantiles, self.ref_wr = q, wr_ratio
+                self.monitor.re_anchor(data_keys, wr_ratio)
 
         return {**online_summary, "divergence": div, "swapped": swapped}

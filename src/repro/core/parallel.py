@@ -14,7 +14,6 @@ training loop is pod-scale runnable.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
@@ -24,7 +23,6 @@ from repro.core import ddpg, networks as nets
 from repro.core.ddpg import DDPGConfig
 from repro.core.networks import NetConfig
 from repro.index import env as E
-from repro.index.features import STATE_DIM
 
 
 def batched_reset(cfg: E.EnvConfig, data_keys, workloads, wr_ratios):

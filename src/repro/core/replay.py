@@ -52,6 +52,49 @@ class SequenceReplay:
         self.ptr = (self.ptr + 1) % self.capacity
         self.size = min(self.size + 1, self.capacity)
 
+    def add_episode(self, obs, action, reward, next_obs, done, cost,
+                    actor_hidden, critic_hidden):
+        """Ingest one complete episode in a single batched ring write.
+
+        All arguments are time-major ``[T, ...]`` arrays (hiddens are
+        ``(h, c)`` pairs of ``[T, hidden]``), e.g. the stacked per-slot
+        outputs of a `batched_episode_scan` tick.  Equivalent to T
+        sequential `add` calls — same contents, pointer, size, and
+        `step_left` back-fill — but with one slice assignment per field
+        instead of T scalar writes, which is what lets the tuning service
+        stream retired episodes into replay between ticks.
+        """
+        T = int(np.shape(reward)[0])
+        if T == 0:
+            return
+        if T > self.capacity:
+            raise ValueError(f"episode of {T} steps exceeds replay "
+                             f"capacity {self.capacity}")
+        ptr0, size0 = self.ptr, self.size
+        idx = (ptr0 + np.arange(T)) % self.capacity
+        self.obs[idx] = obs
+        self.action[idx] = action
+        self.reward[idx] = reward
+        self.next_obs[idx] = next_obs
+        self.done[idx] = done
+        self.cost[idx] = cost
+        self.h_a[idx], self.c_a[idx] = actor_hidden
+        self.h_q[idx], self.c_q[idx] = critic_hidden
+        self.step_left[idx] = 0
+        for t in np.flatnonzero(np.asarray(done)):
+            # the same back-fill walk `add` runs at its done step, with the
+            # buffer size it would have seen at that point
+            size_t = min(size0 + int(t), self.capacity)
+            j, count = int(idx[t]), 0
+            while True:
+                self.step_left[j] = count
+                count += 1
+                j = (j - 1) % self.capacity
+                if count >= size_t + 1 or self.done[j] or count > 10_000:
+                    break
+        self.ptr = (ptr0 + T) % self.capacity
+        self.size = min(size0 + T, self.capacity)
+
     def _valid_starts(self):
         idx = np.arange(self.size)
         # a window [i, i+L) is valid if no done before its last element and

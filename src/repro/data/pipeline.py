@@ -16,8 +16,6 @@ container); the interface matches what a file-backed loader would expose.
 from __future__ import annotations
 
 import dataclasses
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 

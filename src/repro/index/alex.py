@@ -59,7 +59,6 @@ def build(keys: jax.Array, p: dict):
     node_keys = 2.0 ** p["max_node_size_log2"] * p["density_init"]
     n_leaves = jnp.clip(jnp.ceil(nf / jnp.maximum(node_keys, 16.0)),
                         1.0, jnp.minimum(max_fanout, MAX_LEAVES))
-    n_leaves_i = n_leaves.astype(jnp.int32)
 
     ranks = jnp.arange(n, dtype=jnp.float32)
     kmin, kmax = keys[0], keys[-1]

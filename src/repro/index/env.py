@@ -40,6 +40,11 @@ class EnvConfig:
     def space(self) -> ParamSpace:
         return alex_space() if self.index_type == "alex" else carmi_space()
 
+    def with_episode_len(self, n: int) -> "EnvConfig":
+        """Same environment, different horizon — the tuning/O2/serving
+        paths re-horizon per request without touching any other knob."""
+        return dataclasses.replace(self, episode_len=n)
+
 
 def _backend(index_type: str):
     mod = alex if index_type == "alex" else carmi

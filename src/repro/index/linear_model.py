@@ -39,7 +39,6 @@ def fit_segments_exact(keys: jax.Array, seg_id: jax.Array, n_segs: int):
 
 def fit_segments_approx(keys: jax.Array, seg_id: jax.Array, n_segs: int):
     """2-point (min/max) fit per segment — ALEX's approximate model path."""
-    n = keys.shape[0]
     big = jnp.inf
     kmin = jnp.full((n_segs,), big).at[seg_id].min(keys)
     kmax = jnp.full((n_segs,), -big).at[seg_id].max(keys)

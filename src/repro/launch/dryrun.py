@@ -139,7 +139,7 @@ def run_litune_cell(index_type: str, multi_pod: bool,
     mesh-parallel meta-training rollout (core/parallel.py) with the tuning
     instances sharded over the data axes of the production mesh."""
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
     from repro.core.ddpg import DDPGConfig
     from repro.core.networks import NetConfig
     from repro.core import parallel as par

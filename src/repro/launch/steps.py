@@ -15,8 +15,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ArchConfig, ShapeConfig
 from repro.models import model_zoo
 from repro.models.model_zoo import ModelBundle
-from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state, opt_state_specs
-from repro.models.module import abstract_params, axes_tree, is_spec
+from repro.optim.adamw import AdamWConfig, adamw_update, opt_state_specs
+from repro.models.module import abstract_params, axes_tree
 from repro.runtime import mesh_utils
 
 
@@ -65,8 +65,9 @@ def make_train_step(bundle: ModelBundle, opt_cfg: AdamWConfig,
 
             def acc(carry, mbatch):
                 loss_a, grads_a = carry
-                l, g = jax.value_and_grad(bundle.loss_fn)(params, **mbatch)
-                return (loss_a + l / microbatches,
+                lv, g = jax.value_and_grad(bundle.loss_fn)(params,
+                                                            **mbatch)
+                return (loss_a + lv / microbatches,
                         jax.tree.map(lambda a, b: a + b / microbatches,
                                      grads_a, g)), None
 

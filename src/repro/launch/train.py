@@ -19,14 +19,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.configs import get_config, smoke
+from repro.configs import get_config
 from repro.data.pipeline import DataPipeline, PipelineConfig
 from repro.models import model_zoo
-from repro.models.module import abstract_params, axes_tree
+from repro.models.module import abstract_params
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
 from repro.optim import grad_compress as gc
 from repro.optim.schedules import warmup_cosine
-from repro.runtime import mesh_utils
 from repro.runtime.fault import FailureInjector
 
 
@@ -84,9 +83,6 @@ class Trainer:
             lr=warmup_cosine(tc.lr, tc.warmup, tc.steps))
         self.manager = CheckpointManager(tc.ckpt_dir,
                                          save_every=tc.save_every)
-        n_shards = 1
-        if mesh is not None:
-            n_shards = mesh_utils.axis_size(mesh, mesh_utils.DATA_AXES)
         self.pipe_cfg = PipelineConfig(
             vocab_size=cfg.vocab_size, seq_len=tc.seq_len,
             global_batch=tc.global_batch, seed=tc.seed)
@@ -153,9 +149,9 @@ class Trainer:
                 mb = jax.tree.map(resh, batch)
 
                 def acc_body(carry, mbatch):
-                    l, g = jax.value_and_grad(loss_fn)(state["params"],
-                                                       **mbatch)
-                    return (carry[0] + l / nmb,
+                    lv, g = jax.value_and_grad(loss_fn)(state["params"],
+                                                        **mbatch)
+                    return (carry[0] + lv / nmb,
                             jax.tree.map(lambda a, b: a + b / nmb,
                                          carry[1], g)), None
 

@@ -18,8 +18,6 @@ import time
 import jax
 
 from repro.core.litune import LITune, LITuneConfig
-from repro.core.ddpg import DDPGConfig
-from repro.core.maml import MetaConfig
 from repro.index.workloads import StreamConfig, sample_keys, stream_windows, wr_workload
 
 

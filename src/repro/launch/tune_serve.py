@@ -31,6 +31,17 @@ Key properties:
   * **slot sharding** — when the host platform exposes multiple devices
     (cores) and they divide the slot count, slots shard across them via
     `shard_map`; sharding never changes per-slot math, so parity holds.
+  * **continuous tuning (O2)** — with `O2ServiceConfig(enabled=True)` the
+    service stops serving a frozen agent: retired episodes stream their
+    transitions into a per-tenant replay, an offline DDPG learner
+    fine-tunes between ticks, and a divergence monitor (KS on key
+    quantiles + W/R drift, observed at admission) triggers assessments
+    that hot-swap pool params when the offline model wins.  The swap is a
+    pure buffer update — params are program *inputs*, so the K-ladder
+    compiled-program cache never re-traces.  A single-tenant strict-order
+    stream makes the same swap decisions as
+    `core.o2.O2System.tune_window` at any budget
+    (tests/test_o2_service.py).
 """
 from __future__ import annotations
 
@@ -49,6 +60,8 @@ from repro.core import networks as nets
 from repro.runtime.mesh_utils import shard_map_compat
 from repro.core.etmdp import batched_episode_scan
 from repro.core.litune import attach_best_params
+from repro.core.o2 import (DivergenceMonitor, O2Config, assess_offline,
+                           make_replay, offline_finetune)
 from repro.core.parallel import mapped_reset
 from repro.index import env as E
 
@@ -64,6 +77,49 @@ class TuneRequest:
     index_type: str = "alex"       # alex | carmi
     key: jax.Array | None = None   # episode PRNG key (parity handle)
     noise_scale: float = 0.05
+    o2_key: jax.Array | None = None  # window-key remainder (assessment PRNG)
+
+
+@dataclasses.dataclass(frozen=True)
+class O2ServiceConfig:
+    """Continuous tuning inside the service (the O2 loop, per tenant)."""
+    enabled: bool = False
+    o2: O2Config = O2Config()
+    # offline fine-tune steps run after each tick that retires at least
+    # one of the tenant's episodes (ticks with no fresh transitions skip
+    # the learner: re-sampling an unchanged replay would add latency to
+    # every tick of a long episode and desync the per-window update count
+    # from the serial O2 loop).  None -> the O2Config's per-window count,
+    # which makes a strict-order single-tenant stream decision-identical
+    # to `O2System.tune_window` at any budget
+    offline_updates_per_tick: int | None = None
+    # one window in flight at a time, in submission order: trades the
+    # service's cross-pool concurrency for the serial O2 loop's exact
+    # observe->tune->assess interleaving (the parity mode LITune.stream
+    # uses when routed through the service)
+    strict_order: bool = False
+    replay_seed: int = 0
+
+
+class _TenantO2:
+    """Per-tenant continuous-tuning state: the divergence monitor, the
+    replay the offline learner samples, and the offline DDPG state that
+    hot-swaps into the tenant's pools on divergence + win."""
+
+    def __init__(self, tuner, svc_cfg: O2ServiceConfig):
+        self.cfg = svc_cfg.o2
+        self.net_cfg = tuner.cfg.net_cfg()
+        self.ddpg_cfg = tuner.cfg.ddpg
+        self.et_cfg = tuner.cfg.et_cfg()
+        self.env_cfg = tuner.cfg.env_cfg()
+        self.monitor = DivergenceMonitor(self.cfg)
+        self.replay = make_replay(self.net_cfg, self.ddpg_cfg, self.env_cfg,
+                                  seed=svc_cfg.replay_seed)
+        self.online = jax.tree.map(lambda x: x, tuner.state)
+        self.offline = jax.tree.map(lambda x: x, tuner.state)
+        self.offline_updates = 0
+        self.swaps = 0
+        self.swap_times_s: list[float] = []
 
 
 def summarize_episode(env_cfg: E.EnvConfig, r0: float, rewards, runtimes,
@@ -186,12 +242,13 @@ class _SlotPool:
     """
 
     def __init__(self, env_cfg: E.EnvConfig, net_cfg, et_cfg, params,
-                 slots: int, mesh: Mesh):
+                 slots: int, mesh: Mesh, capture: bool = False):
         self.env_cfg = env_cfg
         self.net_cfg = net_cfg
         self.et_cfg = et_cfg
         self.slots = slots
         self.mesh = mesh
+        self.capture = capture          # record per-step transitions (O2)
         self.replicated = NamedSharding(mesh, P())
         self.sharded = NamedSharding(mesh, P("slots"))
         self.params = jax.device_put(params, self.replicated)
@@ -226,25 +283,61 @@ class _SlotPool:
         self.requests[slot] = req
         self.steps_taken[slot] = 0
         self.r0[slot] = r0
-        self.records[slot] = {"rewards": [], "runtimes": [], "actions": [],
-                              "costs": []}
+        rec = {"rewards": [], "runtimes": [], "actions": [], "costs": []}
+        if self.capture:
+            rec.update({"obs": [], "next_obs": [], "done": [],
+                        "h_a": [], "c_a": [], "h_q": [], "c_q": []})
+        self.records[slot] = rec
 
-    def collect(self, slot: int, out_host: dict, step: int):
+    def collect(self, slot: int, out_host: dict, step: int,
+                early: bool = False) -> bool:
+        """Record one step for `slot`; returns whether the episode is done
+        (early exit or budget exhausted)."""
         rec = self.records[slot]
         rec["rewards"].append(float(out_host["reward"][step, slot]))
         rec["runtimes"].append(float(out_host["runtime_ns"][step, slot]))
         rec["actions"].append(np.asarray(out_host["action"][step, slot]))
         rec["costs"].append(float(out_host["cost"][step, slot]))
         self.steps_taken[slot] += 1
+        done = early or \
+            self.steps_taken[slot] >= self.requests[slot].budget_steps
+        if self.capture:
+            # the transition view: pre-step obs/hiddens + post-step obs.
+            # `done` is computed host-side against the request budget — the
+            # program's own horizon flag tracks the pool's horizon_cap, not
+            # the per-request episode length the serial path would record.
+            rec["obs"].append(np.asarray(out_host["obs"][step, slot]))
+            rec["next_obs"].append(
+                np.asarray(out_host["next_obs"][step, slot]))
+            rec["done"].append(1.0 if done else 0.0)
+            rec["h_a"].append(np.asarray(out_host["h_a"][0][step, slot]))
+            rec["c_a"].append(np.asarray(out_host["h_a"][1][step, slot]))
+            rec["h_q"].append(np.asarray(out_host["h_q"][0][step, slot]))
+            rec["c_q"].append(np.asarray(out_host["h_q"][1][step, slot]))
+        return done
 
-    def retire(self, slot: int, terminated: bool) -> tuple[int, dict]:
+    def retire(self, slot: int,
+               terminated: bool) -> tuple[TuneRequest, dict, dict | None]:
         req, rec = self.requests[slot], self.records[slot]
         summary = summarize_episode(
             self.env_cfg, self.r0[slot], rec["rewards"], rec["runtimes"],
             rec["actions"], rec["costs"], terminated)
+        transitions = None
+        if self.capture:
+            transitions = {
+                "obs": np.stack(rec["obs"]),
+                "action": np.stack(rec["actions"]),
+                "reward": np.asarray(rec["rewards"], np.float32),
+                "next_obs": np.stack(rec["next_obs"]),
+                "done": np.asarray(rec["done"], np.float32),
+                "cost": np.asarray(rec["costs"], np.float32),
+                "actor_hidden": (np.stack(rec["h_a"]), np.stack(rec["c_a"])),
+                "critic_hidden": (np.stack(rec["h_q"]),
+                                  np.stack(rec["c_q"])),
+            }
         self.requests[slot] = None
         self.records[slot] = None
-        return req.rid, summary
+        return req, summary, transitions
 
 
 class TuningService:
@@ -257,12 +350,18 @@ class TuningService:
     """
 
     def __init__(self, agents, slots: int = 4, horizon_cap: int = 256,
-                 seed: int = 0):
+                 seed: int = 0, o2: O2ServiceConfig | None = None):
         if not isinstance(agents, dict):
             agents = {agents.cfg.index_type: agents}
         self.agents = agents
         self.slots = slots
         self.horizon_cap = horizon_cap
+        self.o2 = o2 if o2 is not None else O2ServiceConfig()
+        self.tenants: dict[str, _TenantO2] = {}
+        if self.o2.enabled:
+            for it, tuner in agents.items():
+                self.tenants[it] = _TenantO2(tuner, self.o2)
+        self._o2_pending: dict[int, dict] = {}  # rid -> admission verdict
         self.key = jax.random.PRNGKey(seed)
         devices = jax.devices()
         # largest device subset whose count divides the slots (gcd), so
@@ -307,6 +406,13 @@ class TuningService:
             noise_scale = 0.0 if deterministic else 0.05
         if key is None:
             self.key, key = jax.random.split(self.key)
+        o2_key = None
+        if self.o2.enabled:
+            # mirror O2System.tune_window's PRNG discipline: the submitted
+            # key is the *window* key — the episode runs on k_on, and the
+            # assessment (if the window diverges) draws k_off from the
+            # remainder, so decisions line up with the serial O2 loop
+            o2_key, key = jax.random.split(key)
         rid = self._next_rid
         self._next_rid += 1
         # numpy (uncommitted) on purpose: admission programs place these
@@ -317,7 +423,7 @@ class TuningService:
                       "inserts": np.asarray(workload["inserts"])},
             wr_ratio=float(wr_ratio), budget_steps=int(budget_steps),
             index_type=index_type, key=key,
-            noise_scale=float(noise_scale)))
+            noise_scale=float(noise_scale), o2_key=o2_key))
         return rid
 
     # ------------------------------------------------------------ pools
@@ -330,12 +436,15 @@ class TuningService:
         pk = self._pool_key(req)
         if pk not in self.pools:
             tuner = self.agents[req.index_type]
-            env_cfg = dataclasses.replace(tuner.cfg.env_cfg(),
-                                          episode_len=self.horizon_cap)
+            env_cfg = tuner.cfg.env_cfg().with_episode_len(self.horizon_cap)
+            # under O2, pools serve the tenant's (possibly already swapped)
+            # online model rather than the agent's frozen pretrained state
+            params = (self.tenants[req.index_type].online["params"]
+                      if self.o2.enabled else tuner.state["params"])
             self.pools[pk] = _SlotPool(env_cfg, tuner.cfg.net_cfg(),
-                                       tuner.cfg.et_cfg(),
-                                       tuner.state["params"], self.slots,
-                                       self.mesh)
+                                       tuner.cfg.et_cfg(), params,
+                                       self.slots, self.mesh,
+                                       capture=self.o2.enabled)
         return self.pools[pk]
 
     # --------------------------------------------------------- programs
@@ -415,10 +524,27 @@ class TuningService:
         r0s = np.asarray(jax.device_get(env_states["r_best"]))
         for j, (slot, req) in enumerate(zip(slots_used, admits)):
             pool.mark_admitted(slot, req, float(r0s[j]))
+            if self.o2.enabled:
+                # each admitted request is one window of the tenant's
+                # stream: observe divergence now (against the reference
+                # distribution), assess after the episode retires
+                tenant = self.tenants[req.index_type]
+                div = tenant.monitor.observe(req.data_keys, req.wr_ratio)
+                self._o2_pending[req.rid] = {
+                    "div": div, "window": tenant.monitor.windows_seen,
+                    "o2_key": req.o2_key}
 
     def _admit_from_queue(self):
         """Fill free slots with queued requests (FIFO per pool group),
-        one batched reset per pool per tick."""
+        one batched reset per pool per tick.  In strict-order O2 mode a
+        single window is admitted at a time, in submission order."""
+        if self.o2.enabled and self.o2.strict_order:
+            if not self.queue or \
+                    any(p.n_active for p in self.pools.values()):
+                return
+            req = self.queue.popleft()
+            self._admit(self._pool_key(req), self._pool_for(req), [req])
+            return
         per_pool: dict[tuple, list[TuneRequest]] = {}
         still_queued = deque()
         free_left: dict[tuple, int] = {}
@@ -439,10 +565,12 @@ class TuningService:
 
     def step(self) -> int:
         """One service tick: admit queued requests, advance every active
-        pool by a K-step jitted program, retire finished episodes.
-        Returns the number of episode-steps of useful work done."""
+        pool by a K-step jitted program, retire finished episodes, then —
+        under O2 — fine-tune the offline learners and assess retired
+        windows.  Returns the number of episode-steps of useful work."""
         self._admit_from_queue()
         work = 0
+        retired: list[tuple[TuneRequest, dict]] = []
         for pk, pool in self.pools.items():
             if pool.n_active == 0 or pool.carry is None:
                 continue
@@ -453,24 +581,90 @@ class TuningService:
             pool.carry, out = program(pool.params, pool.carry,
                                       pool.noise_dev())
             # only the fields the serving loop reads cross to the host
-            out_host = jax.device_get({f: out[f] for f in (
-                "reward", "runtime_ns", "action", "cost", "early")})
+            fields = ["reward", "runtime_ns", "action", "cost", "early"]
+            if self.o2.enabled:
+                fields += ["obs", "next_obs", "h_a", "h_q"]
+            out_host = jax.device_get({f: out[f] for f in fields})
             for slot, req in enumerate(pool.requests):
                 if req is None:
                     continue
                 for j in range(k):
-                    pool.collect(slot, out_host, j)
-                    work += 1
                     early = bool(out_host["early"][j, slot])
-                    done = early or \
-                        pool.steps_taken[slot] >= req.budget_steps
+                    done = pool.collect(slot, out_host, j, early)
+                    work += 1
                     if done:
-                        rid, summary = pool.retire(slot, early)
-                        self.results[rid] = summary
+                        rreq, summary, trans = pool.retire(slot, early)
+                        self.results[rreq.rid] = summary
+                        if self.o2.enabled:
+                            # stream the completed episode into the
+                            # tenant's replay (batched ring write)
+                            self.tenants[rreq.index_type].replay \
+                                .add_episode(**trans)
+                            retired.append((rreq, summary))
                         break
+        if self.o2.enabled:
+            self._o2_tick(retired)
         self.service_steps += 1
         self.episode_steps += work
         return work
+
+    # --------------------------------------------------------------- O2
+    def _o2_tick(self, retired: list):
+        """The between-ticks half of the O2 loop: each tenant that
+        retired an episode this tick fine-tunes its offline learner on
+        the freshly accumulated transitions, then every retired window is
+        assessed (if its admission flagged divergence) and may hot-swap
+        its tenant's pools."""
+        for index_type in {req.index_type for req, _ in retired}:
+            tenant = self.tenants[index_type]
+            n = (self.o2.offline_updates_per_tick
+                 if self.o2.offline_updates_per_tick is not None
+                 else tenant.cfg.offline_updates_per_window)
+            tenant.offline, done = offline_finetune(
+                tenant.offline, tenant.replay, tenant.net_cfg,
+                tenant.ddpg_cfg, n)
+            tenant.offline_updates += done
+        for req, summary in retired:
+            tenant = self.tenants[req.index_type]
+            pend = self._o2_pending.pop(req.rid)
+            swapped = False
+            if pend["div"]["diverged"] and \
+                    pend["window"] % tenant.cfg.assess_every == 0:
+                k_off = jax.random.split(pend["o2_key"])[1]
+                off = assess_offline(
+                    k_off, tenant.offline, tenant.net_cfg,
+                    tenant.env_cfg.with_episode_len(req.budget_steps),
+                    tenant.et_cfg, req.data_keys, req.workload,
+                    req.wr_ratio)
+                if off["best_runtime_ns"] < summary["best_runtime_ns"]:
+                    self._hot_swap(req.index_type, req,
+                                   window=pend["window"] - 1)
+                    swapped = True
+            # annotate the request's result with its window verdict, in
+            # the exact shape O2System.tune_window returns
+            summary["divergence"] = pend["div"]
+            summary["swapped"] = swapped
+
+    def _hot_swap(self, index_type: str, req: TuneRequest,
+                  window: int | None = None):
+        """Promote the offline model to online: a pure buffer update on
+        every pool of the tenant.  Params are program *inputs*, not traced
+        constants, so the K-ladder compiled-program cache is untouched —
+        no re-trace, no re-compile (asserted in tests/test_o2_service.py).
+        `window` is the retired window whose data re-anchors the monitor
+        (under concurrent serving it may not be the latest one observed).
+        """
+        t0 = time.perf_counter()
+        tenant = self.tenants[index_type]
+        tenant.online = jax.tree.map(lambda x: x, tenant.offline)
+        for pk, pool in self.pools.items():
+            if pk[0] == index_type:
+                pool.params = jax.device_put(tenant.online["params"],
+                                             pool.replicated)
+        tenant.monitor.re_anchor(req.data_keys, req.wr_ratio,
+                                 window=window)
+        tenant.swaps += 1
+        tenant.swap_times_s.append(time.perf_counter() - t0)
 
     def run(self, max_service_steps: int | None = None) -> dict[int, dict]:
         """Serve until the queue and every slot drain; returns
@@ -484,7 +678,7 @@ class TuningService:
         return self.results
 
     def stats(self) -> dict:
-        return {
+        st = {
             "service_steps": self.service_steps,
             "episode_steps": self.episode_steps,
             "completed": len(self.results),
@@ -497,6 +691,17 @@ class TuningService:
             # actual process-wide compiled step programs (shared cache)
             "programs_resident": _step_program.cache_info().currsize,
         }
+        if self.o2.enabled:
+            st["o2"] = {
+                it: {"windows": t.monitor.windows_seen,
+                     "diverged": t.monitor.diverged_count,
+                     "swaps": t.swaps,
+                     "offline_updates": t.offline_updates,
+                     "replay_size": t.replay.size,
+                     "mean_swap_ms": (1e3 * float(np.mean(t.swap_times_s))
+                                      if t.swap_times_s else 0.0)}
+                for it, t in self.tenants.items()}
+        return st
 
 
 # ---------------------------------------------------------------- driver

@@ -89,7 +89,7 @@ def flash_attention_jnp(q, k, v, *, causal: bool, window: int = 0,
         q_pos = q_pos_base + q_idx * qc + q_offset
 
         def kv_body(carry, ki):
-            m, l, acc = carry
+            m, lsum, acc = carry
             (k_blk, v_blk, k_idx) = ki
             k_blk = constrain(k_blk, ("batch", None, "q_heads", None))
             v_blk = constrain(v_blk, ("batch", None, "q_heads", None))
@@ -108,25 +108,25 @@ def flash_attention_jnp(q, k, v, *, causal: bool, window: int = 0,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
-            l_new = l * alpha + jnp.sum(p, axis=-1)
+            lsum_new = lsum * alpha + jnp.sum(p, axis=-1)
             pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
                             preferred_element_type=jnp.float32)
             acc_new = constrain(acc * alpha[..., None] + pv,
                                 ("batch", "q_heads", None, None))
-            return (m_new, l_new, acc_new), None
+            return (m_new, lsum_new, acc_new), None
 
         m0 = jnp.full((b, h, qc), NEG_INF, jnp.float32)
         l0 = jnp.zeros((b, h, qc), jnp.float32)
         a0 = jnp.zeros((b, h, qc, dh), jnp.float32)
         if nk == 1:
-            (m, l, acc), _ = kv_body((m0, l0, a0),
+            (m, lsum, acc), _ = kv_body((m0, l0, a0),
                                      (k[:, 0], v[:, 0], jnp.int32(0)))
         else:
             with trip_scope(nk, "attn_kv"):
-                (m, l, acc), _ = jax.lax.scan(
+                (m, lsum, acc), _ = jax.lax.scan(
                     kv_body, (m0, l0, a0),
                     (k.swapaxes(0, 1), v.swapaxes(0, 1), jnp.arange(nk)))
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = acc / jnp.maximum(lsum[..., None], 1e-30)
         return None, out.swapaxes(1, 2)  # [b, qc, h, dh]
 
     if nq == 1:

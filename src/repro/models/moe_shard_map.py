@@ -21,8 +21,6 @@ Capacity factors apply at both levels (token drops mirror the GSPMD path).
 from __future__ import annotations
 
 import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -42,7 +40,6 @@ def _local_moe(x, router, wg, wu, wd, cfg: ArchConfig, tp: int,
     t_loc, d = x.shape
     e, k = cfg.n_experts, cfg.experts_per_token
     e_loc = e // tp
-    f = cfg.moe_d_ff
 
     logits = (x.astype(jnp.float32) @ router)
     probs = jax.nn.softmax(logits, axis=-1)

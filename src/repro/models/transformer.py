@@ -11,7 +11,6 @@ scan (cache slices as xs, updated slices as ys).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -22,7 +21,7 @@ from repro.models import attention as attn
 from repro.models import mamba as ssm
 from repro.models.layers import (apply_mlp, apply_norm, embed_specs,
                                  embed_tokens, mlp_specs, norm_specs, unembed)
-from repro.models.module import abstract_params, stack_specs, trip_scope
+from repro.models.module import stack_specs, trip_scope
 from repro.models.moe import apply_moe, moe_specs
 from repro.runtime import mesh_utils
 from repro.runtime.mesh_utils import constrain
@@ -275,7 +274,6 @@ def lm_apply(params: dict, tokens: jax.Array, cfg: ArchConfig,
     b, s = tokens.shape
     x = embed_tokens(params["embed"], tokens)
     if frontend_embeds is not None:  # vlm/audio stub: overwrite leading slots
-        n = frontend_embeds.shape[1]
         x = jax.lax.dynamic_update_slice_in_dim(
             x, frontend_embeds.astype(x.dtype), 0, axis=1)
     positions = jnp.arange(s)

@@ -15,7 +15,7 @@ import numpy as np
 from repro.core import ddpg
 from repro.core.ddpg import DDPGConfig
 from repro.core.etmdp import ETMDPConfig, rollout_episode
-from repro.core.maml import TaskSpec, make_task_env, sample_task
+from repro.core.maml import make_task_env, sample_task
 from repro.core.networks import NetConfig
 from repro.core.replay import SequenceReplay
 from repro.index import env as E
