@@ -1,0 +1,58 @@
+"""Perf-trend gate: diff a fresh bench JSON against the committed
+baseline and fail on regression.
+
+    PYTHONPATH=src python -m benchmarks.check_bench \
+        --current BENCH_o2_serve.json \
+        --baseline benchmarks/baselines/BENCH_o2_serve.json \
+        --max-regression 0.15
+
+The guarded number is the o2-vs-frozen throughput *ratio* — dimensionless
+on purpose, so the committed baseline survives runner-hardware drift that
+absolute req/s would not.  The gate fails when the current ratio falls
+more than ``--max-regression`` (relative) below the baseline's; a faster
+ratio updates nothing (refresh the baseline deliberately by re-running
+the bench with ``--json`` and committing the artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def o2_ratio(doc: dict) -> float:
+    for row in doc["rows"]:
+        if row["mode"] == "o2":
+            return float(row["vs_frozen"])
+    raise KeyError("no 'o2' row in bench JSON")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--max-regression", type=float, default=0.15,
+                    help="largest tolerated relative drop of the "
+                         "o2-vs-frozen ratio")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    cur, base = o2_ratio(current), o2_ratio(baseline)
+    floor = base * (1.0 - args.max_regression)
+    verdict = "OK" if cur >= floor else "REGRESSION"
+    print(f"check_bench: o2-vs-frozen ratio current={cur:.3f} "
+          f"baseline={base:.3f} floor={floor:.3f} -> {verdict}")
+    if cur < floor:
+        print(f"check_bench: O2 serving tax regressed >"
+              f"{100 * args.max_regression:.0f}% vs the committed "
+              f"baseline ({args.baseline}); if intentional, refresh the "
+              f"baseline artifact in the same change", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -154,6 +154,20 @@ def batched_episode_scan(params, carry, noise_scale, n_steps: int, net_cfg,
     return jax.lax.scan(body, carry, None, length=n_steps)
 
 
+def transition_view(outputs: dict) -> dict:
+    """The replay-facing slice of a step's outputs, keyed like the
+    sequence-replay ring's wide fields (`core.replay.WIDE_FIELDS`):
+    pre-step observation and LSTM hiddens plus the post-step observation
+    (zeroed on early exit — the absorbing state s_e).  Works on single
+    steps, `[K, B, ...]` tick stacks, anything the step core emitted —
+    it's a pure re-keying, so the serving path's device-resident capture
+    ingests exactly what the serial `rollout_episode` pushes into replay.
+    """
+    return {"obs": outputs["obs"], "next_obs": outputs["next_obs"],
+            "h_a": outputs["h_a"][0], "c_a": outputs["h_a"][1],
+            "h_q": outputs["h_q"][0], "c_q": outputs["h_q"][1]}
+
+
 # jitted reset shared by the serial and batched paths (slot admission
 # resets exactly one episode, so the unbatched program is reused there)
 reset_episode = jax.jit(E.reset, static_argnames=("cfg",))

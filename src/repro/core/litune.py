@@ -173,6 +173,10 @@ class LITune:
                                        noise_scale=0.02))
             widx.append(w)
         results = service.run()
+        # settle any trailing O2 work (strict order drains verdicts
+        # inline, but the offline learner's last round may still be
+        # executing on the annex)
+        service.flush_o2()
         out = []
         for w, rid in zip(widx, rids):
             res = results[rid]

@@ -23,6 +23,7 @@ The loop is factored into three reusable pieces shared by the serial path
 from __future__ import annotations
 
 import dataclasses
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +33,8 @@ from repro.core import ddpg
 from repro.core.ddpg import DDPGConfig
 from repro.core.etmdp import ETMDPConfig, rollout_episode
 from repro.core.networks import NetConfig
-from repro.core.replay import SequenceReplay
+from repro.core.replay import (DeviceSequenceReplay, SequenceReplay,
+                               donate_argnums)
 from repro.index import env as E
 
 
@@ -114,27 +116,95 @@ class DivergenceMonitor:
 
 def make_replay(net_cfg: NetConfig, ddpg_cfg: DDPGConfig,
                 env_cfg: E.EnvConfig, capacity: int = 8192,
-                seed: int = 0) -> SequenceReplay:
+                seed: int = 0, device: bool = False,
+                place_on=None) -> SequenceReplay:
     """The replay shape both O2 paths share — constructing it identically
-    is what makes serial/serving fine-tuning bitwise comparable."""
+    is what makes serial/serving fine-tuning bitwise comparable.  With
+    ``device=True`` the wide fields live in device ring buffers
+    (`DeviceSequenceReplay`) — same contents, same sampling RNG —
+    optionally pinned to `place_on` (the serving path's O2 annex device,
+    so ring traffic never queues on the serving mesh)."""
+    if device:
+        return DeviceSequenceReplay(
+            capacity, E.obs_dim(), env_cfg.space.dim, net_cfg.lstm_hidden,
+            seq_len=ddpg_cfg.seq_len, seed=seed, device=place_on)
     return SequenceReplay(capacity, E.obs_dim(), env_cfg.space.dim,
                           net_cfg.lstm_hidden, seq_len=ddpg_cfg.seq_len,
                           seed=seed)
 
 
-def offline_finetune(state, replay: SequenceReplay, net_cfg: NetConfig,
-                     ddpg_cfg: DDPGConfig, n_updates: int):
-    """Continually fine-tune the offline learner: up to `n_updates` DDPG
-    steps on the accumulated transitions.  Returns (state, updates_done)."""
-    done = 0
+@jax.jit
+def _copy_tree(tree):
+    # jnp.copy under jit (without donation) materializes distinct output
+    # buffers for every leaf — one program dispatch for the whole tree
+    return jax.tree.map(jnp.copy, tree)
+
+
+def copy_state(state):
+    """A real (buffer-copying) clone of a DDPG state tree, as one async
+    program dispatch.
+
+    `offline_finetune` donates its input state to the scanned update
+    program, so any tree that must outlive the learner — the pretrained
+    state handed in by the caller, the online model promoted at a swap —
+    has to own its buffers rather than alias the learner's."""
+    return _copy_tree(state)
+
+
+@lru_cache(maxsize=None)
+def _finetune_program(net_cfg: NetConfig, ddpg_cfg: DDPGConfig,
+                      n_updates: int):
+    """`n_updates` chained DDPG updates under one `lax.scan`, jitted with
+    the state donated (off-CPU — see `replay.donate_argnums`): one
+    dispatch per fine-tune round instead of one per update, so the
+    serving path can fire the whole round asynchronously after a tick
+    and never block on it."""
+    def run(state, batches):
+        def body(s, b):
+            s2, _ = ddpg.update(s, b, net_cfg, ddpg_cfg)
+            return s2, None
+        return jax.lax.scan(body, state, batches, length=n_updates)[0]
+
+    return jax.jit(run, donate_argnums=donate_argnums(0))
+
+
+def sample_update_batches(replay: SequenceReplay, n_updates: int,
+                          batch_size: int):
+    """Draw `n_updates` sequence batches stacked on a leading axis — the
+    same RNG draw sequence as `n_updates` sequential `sample_sequences`
+    calls (the ring does not change between draws of one round, so the
+    all-up-front sampling is observationally identical).  None when the
+    replay cannot sample yet."""
+    if hasattr(replay, "sample_sequence_batches"):
+        return replay.sample_sequence_batches(n_updates, batch_size)
+    batches = []
     for _ in range(n_updates):
-        batch = replay.sample_sequences(ddpg_cfg.batch_size)
-        if batch is None:
-            break
-        batch = jax.tree.map(jnp.asarray, batch)
-        state, _ = ddpg.update(state, batch, net_cfg, ddpg_cfg)
-        done += 1
-    return state, done
+        b = replay.sample_sequences(batch_size)
+        if b is None:
+            return None
+        batches.append(b)
+    return jax.tree.map(lambda *xs: np.stack(xs), *batches)
+
+
+def offline_finetune(state, replay: SequenceReplay, net_cfg: NetConfig,
+                     ddpg_cfg: DDPGConfig, n_updates: int, place_on=None):
+    """Continually fine-tune the offline learner: `n_updates` DDPG steps
+    on the accumulated transitions, dispatched as a single scanned
+    program.  Returns (state, updates_done); the returned state is an
+    async value — consume it as a program input, or block only when a
+    decision actually needs it.  `place_on` hops the sampled batches to
+    the learner's device first (the serving path's annex), so the update
+    program never mixes device queues."""
+    if n_updates <= 0:
+        return state, 0
+    batches = sample_update_batches(replay, n_updates, ddpg_cfg.batch_size)
+    if batches is None:
+        return state, 0
+    batches = jax.tree.map(jnp.asarray, batches)
+    if place_on is not None:
+        batches = jax.device_put(batches, place_on)
+    state = _finetune_program(net_cfg, ddpg_cfg, n_updates)(state, batches)
+    return state, n_updates
 
 
 def assess_offline(key, offline_state, net_cfg: NetConfig,
@@ -152,11 +222,11 @@ class O2System:
                  ddpg_cfg: DDPGConfig, env_cfg: E.EnvConfig,
                  et_cfg: ETMDPConfig, o2_cfg: O2Config = O2Config(),
                  seed: int = 0):
-        def copy(s):
-            return jax.tree.map(lambda x: x, s)
-
-        self.online = copy(pretrained_state)
-        self.offline = copy(pretrained_state)
+        # real copies: offline_finetune donates its input buffers to the
+        # scanned update program, so online / the caller's pretrained
+        # state must not alias the learner's tree
+        self.online = copy_state(pretrained_state)
+        self.offline = copy_state(pretrained_state)
         self.net_cfg, self.ddpg_cfg = net_cfg, ddpg_cfg
         self.env_cfg, self.et_cfg, self.cfg = env_cfg, et_cfg, o2_cfg
         self.replay = make_replay(net_cfg, ddpg_cfg, env_cfg, seed=seed)
@@ -213,7 +283,7 @@ class O2System:
                 k_off, self.offline, self.net_cfg, env_cfg, self.et_cfg,
                 data_keys, workload, wr_ratio)
             if off_summary["best_runtime_ns"] < online_summary["best_runtime_ns"]:
-                self.online = jax.tree.map(lambda x: x, self.offline)
+                self.online = copy_state(self.offline)
                 self.swaps += 1
                 swapped = True
                 self.monitor.re_anchor(data_keys, wr_ratio)

@@ -1,7 +1,31 @@
-"""Sequence replay buffer for the LSTM-context DDPG (R2D2-style stored
-hidden states).  Numpy ring buffer on host; batches ship to device per
-update.  Sequences never cross episode boundaries."""
+"""Sequence replay buffers for the LSTM-context DDPG (R2D2-style stored
+hidden states).  Sequences never cross episode boundaries.
+
+Two storage layouts share one ring/backfill/sampling discipline:
+
+  * `SequenceReplay`       — numpy ring on host; batches ship to device
+                             per update.  The serial O2 loop writes it one
+                             transition at a time (`add`) or one episode
+                             at a time (`add_episode`).
+  * `DeviceSequenceReplay` — the serving-path variant: the wide per-step
+                             fields (obs / next_obs / LSTM hiddens) live
+                             in device ring buffers fed directly from the
+                             tick program's outputs, so O2 transition
+                             capture never round-trips them through the
+                             host.  The narrow fields the serving loop
+                             already fetches per tick (action / reward /
+                             done / cost) stay host-side, which keeps the
+                             `step_left` back-fill walk and valid-start
+                             bookkeeping pure numpy.  Ring contents are
+                             bitwise identical to a `SequenceReplay` fed
+                             the same episodes (tests/test_o2_service.py),
+                             and `sample_sequences` draws the same RNG
+                             sequence, so offline fine-tuning consumes
+                             identical batches on either layout.
+"""
 from __future__ import annotations
+
+from functools import lru_cache
 
 import numpy as np
 
@@ -10,21 +34,27 @@ class SequenceReplay:
     def __init__(self, capacity: int, obs_dim: int, action_dim: int,
                  lstm_hidden: int, seq_len: int = 8, seed: int = 0):
         self.capacity = capacity
+        self.obs_dim = obs_dim
+        self.action_dim = action_dim
+        self.lstm_hidden = lstm_hidden
         self.seq_len = seq_len
         self.rng = np.random.default_rng(seed)
         self.size = 0
         self.ptr = 0
-        f32 = np.float32
-        self.obs = np.zeros((capacity, obs_dim), f32)
-        self.action = np.zeros((capacity, action_dim), f32)
+        self._alloc()
+
+    def _alloc(self):
+        capacity, f32 = self.capacity, np.float32
+        self.obs = np.zeros((capacity, self.obs_dim), f32)
+        self.action = np.zeros((capacity, self.action_dim), f32)
         self.reward = np.zeros((capacity,), f32)
-        self.next_obs = np.zeros((capacity, obs_dim), f32)
+        self.next_obs = np.zeros((capacity, self.obs_dim), f32)
         self.done = np.zeros((capacity,), f32)
         self.cost = np.zeros((capacity,), f32)
-        self.h_a = np.zeros((capacity, lstm_hidden), f32)
-        self.c_a = np.zeros((capacity, lstm_hidden), f32)
-        self.h_q = np.zeros((capacity, lstm_hidden), f32)
-        self.c_q = np.zeros((capacity, lstm_hidden), f32)
+        self.h_a = np.zeros((capacity, self.lstm_hidden), f32)
+        self.c_a = np.zeros((capacity, self.lstm_hidden), f32)
+        self.h_q = np.zeros((capacity, self.lstm_hidden), f32)
+        self.c_q = np.zeros((capacity, self.lstm_hidden), f32)
         self.step_left = np.zeros((capacity,), np.int32)  # steps to ep end
 
     def add(self, obs, action, reward, next_obs, done, cost,
@@ -41,16 +71,44 @@ class SequenceReplay:
         self.step_left[i] = 0
         # back-fill steps-to-end for the finished episode
         if done:
-            j = i
-            count = 0
-            while True:
-                self.step_left[j] = count
-                count += 1
-                j = (j - 1) % self.capacity
-                if count >= self.size + 1 or self.done[j] or count > 10_000:
-                    break
+            self._backfill(i, self.size)
         self.ptr = (self.ptr + 1) % self.capacity
         self.size = min(self.size + 1, self.capacity)
+
+    # ------------------------------------------------- shared ring helpers
+    def _ring_indices(self, T: int) -> np.ndarray:
+        return (self.ptr + np.arange(T)) % self.capacity
+
+    def _backfill(self, j: int, size_at_done: int):
+        """The steps-to-end walk `add` runs at a done step: walk backward
+        from `j` setting step_left until the previous episode's done (or
+        the buffer edge as of `size_at_done`)."""
+        count = 0
+        while True:
+            self.step_left[j] = count
+            count += 1
+            j = (j - 1) % self.capacity
+            if count >= size_at_done + 1 or self.done[j] or count > 10_000:
+                break
+
+    def _write_narrow_and_advance(self, idx: np.ndarray, action, reward,
+                                  done, cost):
+        """Batched write of the host-side narrow fields + `step_left`
+        back-fill + pointer/size advance — the episode-ingestion tail both
+        storage layouts share (`idx` from `_ring_indices`, pre-advance)."""
+        T = len(idx)
+        ptr0, size0 = self.ptr, self.size
+        self.action[idx] = action
+        self.reward[idx] = reward
+        self.done[idx] = done
+        self.cost[idx] = cost
+        self.step_left[idx] = 0
+        for t in np.flatnonzero(np.asarray(done)):
+            # the same back-fill walk `add` runs at its done step, with the
+            # buffer size it would have seen at that point
+            self._backfill(int(idx[t]), min(size0 + int(t), self.capacity))
+        self.ptr = (ptr0 + T) % self.capacity
+        self.size = min(size0 + T, self.capacity)
 
     def add_episode(self, obs, action, reward, next_obs, done, cost,
                     actor_hidden, critic_hidden):
@@ -70,30 +128,12 @@ class SequenceReplay:
         if T > self.capacity:
             raise ValueError(f"episode of {T} steps exceeds replay "
                              f"capacity {self.capacity}")
-        ptr0, size0 = self.ptr, self.size
-        idx = (ptr0 + np.arange(T)) % self.capacity
+        idx = self._ring_indices(T)
         self.obs[idx] = obs
-        self.action[idx] = action
-        self.reward[idx] = reward
         self.next_obs[idx] = next_obs
-        self.done[idx] = done
-        self.cost[idx] = cost
         self.h_a[idx], self.c_a[idx] = actor_hidden
         self.h_q[idx], self.c_q[idx] = critic_hidden
-        self.step_left[idx] = 0
-        for t in np.flatnonzero(np.asarray(done)):
-            # the same back-fill walk `add` runs at its done step, with the
-            # buffer size it would have seen at that point
-            size_t = min(size0 + int(t), self.capacity)
-            j, count = int(idx[t]), 0
-            while True:
-                self.step_left[j] = count
-                count += 1
-                j = (j - 1) % self.capacity
-                if count >= size_t + 1 or self.done[j] or count > 10_000:
-                    break
-        self.ptr = (ptr0 + T) % self.capacity
-        self.size = min(size0 + T, self.capacity)
+        self._write_narrow_and_advance(idx, action, reward, done, cost)
 
     def _valid_starts(self):
         idx = np.arange(self.size)
@@ -116,6 +156,9 @@ class SequenceReplay:
         if len(starts) == 0:
             return None
         sel = self.rng.choice(starts, size=batch, replace=True)
+        return self._gather_sequences(sel)
+
+    def _gather_sequences(self, sel: np.ndarray):
         L = self.seq_len
         gather = lambda arr: np.stack(
             [arr[(s + np.arange(L)) % self.capacity] for s in sel])
@@ -139,3 +182,252 @@ class SequenceReplay:
             "h_a": self.h_a[sel], "c_a": self.c_a[sel],
             "h_q": self.h_q[sel], "c_q": self.c_q[sel],
         }
+
+
+# --------------------------------------------------------------- device ring
+# The wide-field ring lives in a dict of jax arrays threaded functionally
+# through three jitted data-movement programs (scatter/gather only — no
+# float math, so there is nothing lowering-sensitive to drift bitwise).
+# All indices are computed host-side and passed as array inputs, so each
+# program compiles once per (padded length, ring shape) pair.
+
+WIDE_FIELDS = ("obs", "next_obs", "h_a", "c_a", "h_q", "c_q")
+
+
+def wide_dim(obs_dim: int, lstm_hidden: int) -> int:
+    """Feature width of one packed wide-field row: the six per-step
+    device-resident fields concatenated (`WIDE_FIELDS` order).  Packing
+    them into one array keeps every capture/ring program at one wide
+    operand instead of six, which matters when dispatch overhead is per
+    argument."""
+    return 2 * obs_dim + 4 * lstm_hidden
+
+
+def donate_argnums(*argnums: int) -> tuple:
+    """Buffer donation, gated off the CPU backend.  On accelerators,
+    donating the ring pages / capture buffers / learner state lets XLA
+    write outputs into the donated memory — the right call for the
+    largest live trees.  On the CPU PJRT backend the donation hand-off
+    is a synchronization point with the (shared) execution pool: the
+    dispatch blocks until every in-flight reader of the donated buffer
+    has executed, which under a busy offline learner re-serializes
+    exactly the work this module keeps off the serving path (measured:
+    a donated ring write stalls ~70 ms behind one fine-tune round, jax
+    0.4.37).  The ring is paged instead, so CPU forgoes nothing: writes
+    allocate one fresh page, not one fresh ring."""
+    import jax
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
+def _pow2_pad(n: int) -> int:
+    k = 1
+    while k < n:
+        k *= 2
+    return k
+
+
+def _jax():
+    import jax
+    return jax
+
+
+def _page_write(page, values, in_page_idx):
+    """page[in_page_idx] = values (entries outside this page carry index
+    == page_rows and drop).  The functional update allocates one fresh
+    *page*, not one fresh ring — the reason the ring is paged."""
+    return page.at[in_page_idx].set(values, mode="drop")
+
+
+def _field_cols(obs_dim: int, lstm_hidden: int, field: str) -> slice:
+    start = 0
+    for f, d in zip(WIDE_FIELDS, (obs_dim, obs_dim, lstm_hidden,
+                                  lstm_hidden, lstm_hidden, lstm_hidden)):
+        if f == field:
+            return slice(start, start + d)
+        start += d
+    raise KeyError(field)
+
+
+def _replay_programs(obs_dim: int, lstm_hidden: int):
+    """Process-wide jitted ring programs, keyed on the packed layout —
+    every replay instance (and every service instance) shares the same
+    callables, so a fresh service never recompiles the gather (a ~70 ms
+    compile that would otherwise recur per instance)."""
+    return _replay_programs_cached(obs_dim, lstm_hidden,
+                                   donate_argnums(0))
+
+
+@lru_cache(maxsize=None)
+def _replay_programs_cached(obs_dim: int, lstm_hidden: int,
+                            donate: tuple):
+    jax = _jax()
+    cols = {f: _field_cols(obs_dim, lstm_hidden, f) for f in WIDE_FIELDS}
+
+    def gather(pages, win_idx, start_idx):
+        """Packed sequence-window gather: obs/next_obs over the window
+        indices, hiddens at the start index only (stored-state replay).
+        The page concatenate materializes the ring view inside the
+        program — execution-side work on the learner's timeline."""
+        jnp = jax.numpy
+        packed = pages[0] if len(pages) == 1 else jnp.concatenate(pages)
+        win = packed[win_idx]
+        start = packed[start_idx]
+        return {
+            "obs": win[..., cols["obs"]],
+            "next_obs": win[..., cols["next_obs"]],
+            "h_a": start[..., cols["h_a"]],
+            "c_a": start[..., cols["c_a"]],
+            "h_q": start[..., cols["h_q"]],
+            "c_q": start[..., cols["c_q"]],
+        }
+
+    return {"write": jax.jit(_page_write, donate_argnums=donate),
+            "gather": jax.jit(gather)}
+
+
+class DeviceSequenceReplay(SequenceReplay):
+    """`SequenceReplay` with the wide per-step fields resident on device,
+    packed: one ``[rows, wide_dim]`` array holds obs | next_obs | h_a |
+    c_a | h_q | c_q per ring row (`WIDE_FIELDS` order), split back into
+    fields only where a consumer needs them.
+
+    `add_episode` accepts host `[T, ...]` arrays (same signature as the
+    base class); `add_episode_values` takes an already-packed device
+    array straight off a pool's capture buffer — the serving path's
+    ingestion, where the wide fields never visit the host.  Sampling
+    draws indices host-side with the exact RNG sequence of the base
+    class and gathers on device, so batches are bitwise identical to the
+    host layout's.
+    """
+
+    def __init__(self, *args, device=None, **kwargs):
+        self._device = device       # ring placement (None -> default)
+        super().__init__(*args, **kwargs)
+
+    def _alloc(self):
+        jnp = _jax().numpy
+        capacity, f32 = self.capacity, np.float32
+        self.action = np.zeros((capacity, self.action_dim), f32)
+        self.reward = np.zeros((capacity,), f32)
+        self.done = np.zeros((capacity,), f32)
+        self.cost = np.zeros((capacity,), f32)
+        self.step_left = np.zeros((capacity,), np.int32)
+        # the ring is a list of fixed-size packed pages: an episode write
+        # touches the 1-2 pages it lands on, so the functional update
+        # allocates O(page), never O(capacity)
+        self.wide = wide_dim(self.obs_dim, self.lstm_hidden)
+        self.page_rows = 256 if capacity % 256 == 0 else capacity
+        self._pages = [
+            self._place(jnp.zeros((self.page_rows, self.wide), f32))
+            for _ in range(capacity // self.page_rows)]
+
+    def _place(self, tree):
+        """Commit values to the ring's device so every ring program stays
+        single-device."""
+        if self._device is None:
+            return tree
+        return _jax().device_put(tree, self._device)
+
+    def _ring_view(self, field):
+        jnp = _jax().numpy
+        packed = (self._pages[0] if len(self._pages) == 1
+                  else jnp.concatenate(self._pages))
+        return packed[:, _field_cols(self.obs_dim, self.lstm_hidden,
+                                     field)]
+
+    # device ring views under the base-class attribute names, so parity
+    # tests (and any reader) address both layouts identically
+    obs = property(lambda self: self._ring_view("obs"))
+    next_obs = property(lambda self: self._ring_view("next_obs"))
+    h_a = property(lambda self: self._ring_view("h_a"))
+    c_a = property(lambda self: self._ring_view("c_a"))
+    h_q = property(lambda self: self._ring_view("h_q"))
+    c_q = property(lambda self: self._ring_view("c_q"))
+
+    def add(self, *args, **kwargs):
+        raise NotImplementedError(
+            "DeviceSequenceReplay ingests whole episodes (add_episode / "
+            "add_episode_values); per-step add is the host layout's path")
+
+    def _padded_ring_idx(self, T: int) -> np.ndarray:
+        """Ring scatter indices padded to a power of two so the write
+        program compiles once per padded length: pad rows scatter to index
+        `capacity`, which `.at[..., mode='drop']` discards."""
+        t = np.arange(_pow2_pad(T))
+        return np.where(t < T, (self.ptr + t) % self.capacity,
+                        self.capacity).astype(np.int32)
+
+    def add_episode(self, obs, action, reward, next_obs, done, cost,
+                    actor_hidden, critic_hidden):
+        T = int(np.shape(reward)[0])
+        if T == 0:
+            return
+        src = np.minimum(np.arange(_pow2_pad(T)), T - 1)
+        packed = np.concatenate(
+            [np.asarray(obs, np.float32), np.asarray(next_obs, np.float32),
+             np.asarray(actor_hidden[0], np.float32),
+             np.asarray(actor_hidden[1], np.float32),
+             np.asarray(critic_hidden[0], np.float32),
+             np.asarray(critic_hidden[1], np.float32)], axis=-1)[src]
+        self.add_episode_values(_jax().numpy.asarray(packed), T,
+                                action, reward, done, cost)
+
+    def add_episode_values(self, values, T: int, action, reward, done,
+                           cost):
+        """Ingest one episode whose wide fields arrive as one packed
+        ``[pow2_pad(T), wide_dim]`` device array (rows past T-1 are
+        don't-care pads — their ring indices drop); the narrow fields
+        arrive as host ``[T]`` arrays the serving loop already collected.
+        The serving path feeds this straight from a pool's capture
+        buffer, so the wide fields never visit the host."""
+        if T == 0:
+            return
+        if T > self.capacity:
+            raise ValueError(f"episode of {T} steps exceeds replay "
+                             f"capacity {self.capacity}")
+        flat = self._padded_ring_idx(T)
+        rows = self.page_rows
+        values = self._place(values)
+        live = flat[flat < self.capacity]
+        write = _replay_programs(self.obs_dim, self.lstm_hidden)["write"]
+        for p in np.unique(live // rows):
+            in_page = np.where((flat < self.capacity)
+                               & (flat // rows == p),
+                               flat % rows, rows).astype(np.int32)
+            self._pages[int(p)] = write(self._pages[int(p)], values,
+                                        in_page)
+        self._write_narrow_and_advance(self._ring_indices(T), action,
+                                       reward, done, cost)
+
+    def _gather_sequences(self, sel: np.ndarray):
+        L = self.seq_len
+        win = (sel[..., None] + np.arange(L)) % self.capacity
+        wide = _replay_programs(self.obs_dim, self.lstm_hidden)["gather"](
+            tuple(self._pages), win.astype(np.int32),
+            sel.astype(np.int32))
+        # narrow fields gather host-side and commit to the ring's device,
+        # so the learner's update program never mixes device queues
+        gather = lambda arr: self._place(arr[win])
+        return {
+            "obs": wide["obs"], "action": gather(self.action),
+            "reward": gather(self.reward), "next_obs": wide["next_obs"],
+            "done": gather(self.done), "cost": gather(self.cost),
+            "h_a": wide["h_a"], "c_a": wide["c_a"],
+            "h_q": wide["h_q"], "c_q": wide["c_q"],
+        }
+
+    def sample_sequence_batches(self, n_batches: int, batch: int):
+        """`n_batches` sequential `sample_sequences` draws gathered in one
+        device program, stacked on a leading axis — the scanned offline
+        fine-tune's input.  Same RNG sequence as the sequential calls, so
+        batches are bitwise identical; None if sampling isn't possible."""
+        starts = self._valid_starts()
+        if len(starts) == 0:
+            return None
+        sel = np.stack([self.rng.choice(starts, size=batch, replace=True)
+                        for _ in range(n_batches)])
+        return self._gather_sequences(sel)
+
+    def sample_steps(self, batch: int):
+        raise NotImplementedError(
+            "step sampling is the vanilla-DDPG baseline's host path")
