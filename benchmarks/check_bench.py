@@ -6,12 +6,18 @@ baseline and fail on regression.
         --baseline benchmarks/baselines/BENCH_o2_serve.json \
         --max-regression 0.15
 
-The guarded number is the o2-vs-frozen throughput *ratio* — dimensionless
-on purpose, so the committed baseline survives runner-hardware drift that
-absolute req/s would not.  The gate fails when the current ratio falls
-more than ``--max-regression`` (relative) below the baseline's; a faster
-ratio updates nothing (refresh the baseline deliberately by re-running
-the bench with ``--json`` and committing the artifact).
+The guarded number is picked by the artifact's ``benchmark`` field:
+
+  o2_serve  — the o2-vs-frozen throughput *ratio*;
+  slo_serve — the static-over-adaptive p95 queue-wait *ratio* (>1 means
+              adaptive slot scheduling beats static pools under bursts).
+
+Both are dimensionless on purpose, so the committed baselines survive
+runner-hardware drift that absolute req/s or milliseconds would not.
+The gate fails when the current ratio falls more than
+``--max-regression`` (relative) below the baseline's; a faster ratio
+updates nothing (refresh the baseline deliberately by re-running the
+bench with ``--json`` and committing the artifact).
 """
 from __future__ import annotations
 
@@ -27,13 +33,24 @@ def o2_ratio(doc: dict) -> float:
     raise KeyError("no 'o2' row in bench JSON")
 
 
+def slo_ratio(doc: dict) -> float:
+    return float(doc["p95_wait_static_over_adaptive"])
+
+
+# benchmark name -> (description of the guarded ratio, extractor)
+METRICS = {
+    "o2_serve": ("o2-vs-frozen ratio", o2_ratio),
+    "slo_serve": ("static/adaptive p95 queue-wait ratio", slo_ratio),
+}
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", required=True)
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--max-regression", type=float, default=0.15,
                     help="largest tolerated relative drop of the "
-                         "o2-vs-frozen ratio")
+                         "guarded ratio")
     args = ap.parse_args()
 
     with open(args.current) as f:
@@ -41,13 +58,24 @@ def main():
     with open(args.baseline) as f:
         baseline = json.load(f)
 
-    cur, base = o2_ratio(current), o2_ratio(baseline)
+    name = current.get("benchmark")
+    if name != baseline.get("benchmark"):
+        print(f"check_bench: benchmark mismatch: current={name!r} "
+              f"baseline={baseline.get('benchmark')!r}", file=sys.stderr)
+        sys.exit(2)
+    if name not in METRICS:
+        print(f"check_bench: no gated metric for benchmark={name!r} "
+              f"(have {sorted(METRICS)})", file=sys.stderr)
+        sys.exit(2)
+    label, extract = METRICS[name]
+
+    cur, base = extract(current), extract(baseline)
     floor = base * (1.0 - args.max_regression)
     verdict = "OK" if cur >= floor else "REGRESSION"
-    print(f"check_bench: o2-vs-frozen ratio current={cur:.3f} "
+    print(f"check_bench: {label} current={cur:.3f} "
           f"baseline={base:.3f} floor={floor:.3f} -> {verdict}")
     if cur < floor:
-        print(f"check_bench: O2 serving tax regressed >"
+        print(f"check_bench: {label} regressed >"
               f"{100 * args.max_regression:.0f}% vs the committed "
               f"baseline ({args.baseline}); if intentional, refresh the "
               f"baseline artifact in the same change", file=sys.stderr)

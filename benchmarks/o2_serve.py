@@ -50,7 +50,7 @@ from repro.core.ddpg import DDPGConfig
 from repro.core.litune import LITune, LITuneConfig
 from repro.core.o2 import O2Config
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.tune_serve import O2ServiceConfig, TuningService
+from repro.launch.serving import O2ServiceConfig, TuningService
 
 
 def make_requests(n: int, n_keys: int, seed: int = 1):
@@ -143,7 +143,7 @@ def main():
 
     # hot-swap latency, measured directly: promote the offline model over
     # the service's (already live) pools `swap_reps` times
-    from repro.launch.tune_serve import TuneRequest
+    from repro.launch.serving import TuneRequest
     data, wl, wr = requests[-1]
     last_req = TuneRequest(
         rid=-1, data_keys=np.asarray(data),

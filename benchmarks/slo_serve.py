@@ -1,0 +1,232 @@
+"""Tail latency under bursty arrivals: static vs adaptive slot
+scheduling.
+
+    PYTHONPATH=src python -m benchmarks.slo_serve
+    PYTHONPATH=src python -m benchmarks.slo_serve --bursts 4 \
+        --burst-mean 10 --budget 8 --n-keys 512 --json BENCH_slo_serve.json
+
+The other serving benches measure throughput on a pre-loaded queue; this
+one measures what a *tenant* feels — queue-wait and serve-time
+percentiles — under the arrival pattern that breaks static pools:
+Poisson-sized bursts separated by idle gaps.  The same arrival trace is
+replayed against two services:
+
+  static   — fixed pool width (`--slots`), PR 1–3 behavior: a burst
+             deeper than the pool waits out earlier waves slot by slot;
+  adaptive — `AdaptiveSlotPolicy`: the scheduler grows the pool to the
+             burst (ladder widths up to `--max-slots`, one cached gather
+             per resize, zero program re-traces) and shrinks it back in
+             the gaps.
+
+Reported per mode: p50/p95/p99 queue-wait and serve-time from
+`stats()["slo"]`, plus breach counts when `--deadline-ms` arms
+per-request deadlines.  The headline number — static p95 queue-wait over
+adaptive p95 queue-wait (>1 means adaptive wins) — is dimensionless so
+the committed baseline survives runner-hardware drift; ``--json`` writes
+it for the CI gate (benchmarks/check_bench.py).  Best of ``--repeats``
+runs per mode (max ratio paired from per-mode minima) since CI hosts are
+noisy.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+# expose every core as an XLA host device so pools shard; must happen
+# before jax initializes (no-op if the operator already set it)
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={os.cpu_count()}")
+
+import jax
+import numpy as np
+
+from repro.core.litune import LITune, LITuneConfig
+from repro.index.workloads import sample_keys, wr_workload
+from repro.launch.serving import AdaptiveSlotPolicy, TuningService
+
+
+def make_arrivals(n_bursts: int, burst_mean: int, gap_s: float,
+                  n_keys: int, seed: int):
+    """One fixed trace of (arrival_time_s, data, workload, wr): bursts of
+    Poisson(burst_mean) simultaneous requests, `gap_s` apart.  The trace
+    is generated once and replayed against every mode, so the comparison
+    is paired."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    arrivals, t, i = [], 0.0, 0
+    for b in range(n_bursts):
+        size = max(1, int(rng.poisson(burst_mean)))
+        for _ in range(size):
+            k = jax.random.fold_in(key, i)
+            data = sample_keys(k, n_keys, "mix")
+            wl, _ = wr_workload(jax.random.fold_in(k, 1), data, 1.0,
+                                total=n_keys, dist="mix")
+            arrivals.append((t, data, wl, 1.0))
+            i += 1
+        t += gap_s
+    return arrivals
+
+
+def drive(service: TuningService, arrivals, budget: int,
+          deadline_s: float | None) -> float:
+    """Replay the arrival trace in real time: submit each request at its
+    arrival instant, tick the service whenever there is work, sleep
+    through idle gaps.  Returns the wall-clock span."""
+    t0 = time.perf_counter()
+    i = 0
+    while True:
+        now = time.perf_counter() - t0
+        while i < len(arrivals) and arrivals[i][0] <= now:
+            _, data, wl, wr = arrivals[i]
+            service.submit(data, wl, wr, budget_steps=budget,
+                           deadline_s=deadline_s)
+            i += 1
+        busy = service.queue or \
+            any(p.n_active for p in service.pools.values())
+        if busy:
+            service.step()
+        elif i < len(arrivals):
+            time.sleep(max(0.0, min(arrivals[i][0] - now, 0.05)))
+        else:
+            break
+    return time.perf_counter() - t0
+
+
+def bench_mode(mk_tuner, arrivals, budget: int, slots: int,
+               policy_fn, deadline_s, repeats: int):
+    """Best-of-`repeats` run of one mode: keep the run with the lowest
+    p95 queue-wait (CI hosts are noisy; the floor is the capability)."""
+    best = None
+    for _ in range(repeats):
+        service = TuningService(mk_tuner(), slots=slots,
+                                policy=policy_fn())
+        span = drive(service, arrivals, budget, deadline_s)
+        st = service.stats()
+        slo = st["slo"]
+        row = {"span_s": span, "slo": slo, "stats": st}
+        if best is None or slo["queue_wait_ms"]["p95"] < \
+                best["slo"]["queue_wait_ms"]["p95"]:
+            best = row
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bursts", type=int, default=4)
+    ap.add_argument("--burst-mean", type=int, default=8,
+                    help="Poisson mean burst size")
+    ap.add_argument("--gap-s", type=float, default=0.5,
+                    help="idle gap between bursts (seconds)")
+    ap.add_argument("--budget", type=int, default=4)
+    ap.add_argument("--n-keys", type=int, default=256)
+    ap.add_argument("--slots", type=int, default=2,
+                    help="static pool width (and the adaptive floor)")
+    ap.add_argument("--max-slots", type=int, default=8,
+                    help="adaptive pool ceiling (keep near the burst "
+                         "size: wider pools pay idle-lane compute)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="arm per-request deadlines (breaches reported)")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="runs per mode; best p95 queue-wait is reported")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as a JSON artifact (CI gate)")
+    args = ap.parse_args()
+
+    cfg = LITuneConfig(index_type="alex", episode_len=args.budget,
+                       lstm_hidden=32, mlp_hidden=64)
+    mk = lambda: LITune(cfg, seed=args.seed)  # noqa: E731
+    arrivals = make_arrivals(args.bursts, args.burst_mean, args.gap_s,
+                             args.n_keys, args.seed + 1)
+    deadline_s = (args.deadline_ms / 1e3
+                  if args.deadline_ms is not None else None)
+    static_policy = lambda: None  # noqa: E731  (service default: static)
+    adaptive_policy = lambda: AdaptiveSlotPolicy(  # noqa: E731
+        min_slots=args.slots, max_slots=args.max_slots, shrink_patience=2)
+
+    def run_static():
+        return bench_mode(mk, arrivals, args.budget, args.slots,
+                          static_policy, deadline_s, args.repeats)
+
+    def run_adaptive():
+        return bench_mode(mk, arrivals, args.budget, args.slots,
+                          adaptive_policy, deadline_s, args.repeats)
+
+    # warm both modes with the full trace so every pool width's programs
+    # are resident before the timed runs (a real service binds them at
+    # startup; the cache is process-wide).  Two warm drives per mode:
+    # admission wave widths depend on timing, so a single pass can miss
+    # a width whose first-compile would then land mid-measurement
+    bench_mode(mk, arrivals, args.budget, args.slots, static_policy,
+               deadline_s, 2)
+    bench_mode(mk, arrivals, args.budget, args.slots, adaptive_policy,
+               deadline_s, 2)
+
+    rows = []
+    for mode, run in (("static", run_static), ("adaptive", run_adaptive)):
+        best = run()
+        slo = best["slo"]
+        st = best["stats"]
+        rows.append({
+            "mode": mode,
+            "queue_wait_ms": slo["queue_wait_ms"],
+            "serve_ms": slo["serve_ms"],
+            "breaches": slo["breaches"],
+            "span_s": best["span_s"],
+            "requests": slo["tracked"],
+            "resize_events": st["scheduler"]["resize_events"],
+            "peak_slots": max(p["peak_slots"]
+                              for p in st["per_pool"].values()),
+        })
+
+    p95_static = rows[0]["queue_wait_ms"]["p95"]
+    p95_adaptive = rows[1]["queue_wait_ms"]["p95"]
+    ratio = p95_static / max(p95_adaptive, 1e-9)
+
+    print(f"# slo_serve  bursts={args.bursts} burst_mean={args.burst_mean} "
+          f"gap_s={args.gap_s} budget={args.budget} n_keys={args.n_keys} "
+          f"slots={args.slots} max_slots={args.max_slots} "
+          f"deadline_ms={args.deadline_ms} repeats={args.repeats} "
+          f"devices={len(jax.devices())}")
+    print("benchmark,mode,slots,p50_wait_ms,p95_wait_ms,p99_wait_ms,"
+          "p95_serve_ms,resizes,peak_slots")
+    for r in rows:
+        print(f"slo_serve,{r['mode']},{args.slots},"
+              f"{r['queue_wait_ms']['p50']:.1f},"
+              f"{r['queue_wait_ms']['p95']:.1f},"
+              f"{r['queue_wait_ms']['p99']:.1f},"
+              f"{r['serve_ms']['p95']:.1f},"
+              f"{r['resize_events']},{r['peak_slots']}")
+    print(f"slo_serve,p95_wait_static_over_adaptive,{args.slots},"
+          f"{ratio:.2f},,,,,")
+    if args.deadline_ms is not None:
+        for r in rows:
+            print(f"slo_serve,{r['mode']}_breaches,{args.slots},"
+                  f"{r['breaches']},,,,,")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "slo_serve",
+                       "config": {"bursts": args.bursts,
+                                  "burst_mean": args.burst_mean,
+                                  "gap_s": args.gap_s,
+                                  "budget": args.budget,
+                                  "n_keys": args.n_keys,
+                                  "slots": args.slots,
+                                  "max_slots": args.max_slots,
+                                  "deadline_ms": args.deadline_ms,
+                                  "repeats": args.repeats,
+                                  "devices": len(jax.devices())},
+                       "rows": rows,
+                       "p95_wait_static_over_adaptive": ratio}, f,
+                      indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,7 @@ Serves the same wave of R tuning requests two ways and reports req/s:
   serial   — `LITune.tune` answers one request at a time (the paper's
              single-tenant shape: one jitted episode-step dispatch per
              step per request, host sync after every step);
-  batched  — `launch.tune_serve.TuningService` with B slots: one jitted
+  batched  — `launch.serving.TuningService` with B slots: one jitted
              B-slot step per service tick, one host transfer per tick.
 
 Both paths run the identical traced per-episode program (the parity the
@@ -37,7 +37,7 @@ import jax
 
 from repro.core.litune import LITune, LITuneConfig
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.tune_serve import TuningService
+from repro.launch.serving import TuningService
 
 
 def make_requests(n: int, n_keys: int, seed: int = 1, mixed_wr: bool = False):
@@ -98,7 +98,7 @@ def main():
 
     # warm both paths with the full wave so compile time is excluded (a
     # real service compiles its programs once at startup; the program
-    # cache in launch/tune_serve.py is process-wide)
+    # cache in launch/serving/programs.py is process-wide)
     bench_serial(tuner, requests, args.budget)
     for b in slot_counts:
         bench_batched(tuner, requests, args.budget, b)

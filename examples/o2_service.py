@@ -20,7 +20,7 @@ from repro.core.litune import LITune, LITuneConfig
 from repro.core.maml import MetaConfig
 from repro.core.o2 import O2Config
 from repro.index.workloads import StreamConfig, stream_windows
-from repro.launch.tune_serve import O2ServiceConfig, TuningService
+from repro.launch.serving import O2ServiceConfig, TuningService
 
 
 def main():

@@ -19,7 +19,7 @@ from repro.core.ddpg import DDPGConfig
 from repro.core.litune import LITune, LITuneConfig
 from repro.core.maml import MetaConfig
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.tune_serve import TuningService
+from repro.launch.serving import TuningService
 
 
 def small_cfg(index_type: str) -> LITuneConfig:

@@ -27,7 +27,7 @@ from repro.index import env as E
 def attach_best_params(summary: dict, env_cfg: E.EnvConfig) -> dict:
     """Decode the best-runtime step's action into raw index parameters —
     the summary shape shared by `LITune.tune` and the batched
-    `launch.tune_serve.TuningService` (host-side decode: no device
+    `launch.serving.TuningService` (host-side decode: no device
     dispatches per request)."""
     best_t = int(np.argmin(summary["runtimes"]))
     return env_cfg.space.decode_np(np.asarray(summary["actions"][best_t]))
@@ -99,12 +99,12 @@ class LITune:
     def tune_many(self, instances, slots: int = 4,
                   deterministic: bool = False, budget_steps: int | None = None):
         """Serve many tuning requests through the slot-batched
-        `launch.tune_serve.TuningService` (multi-tenant `tune`).
+        `launch.serving.TuningService` (multi-tenant `tune`).
 
         `instances` is an iterable of `(data_keys, workload, wr_ratio)`
         tuples; returns summaries in submission order.
         """
-        from repro.launch.tune_serve import TuningService
+        from repro.launch.serving import TuningService
         # advance our PRNG so repeated tune_many calls explore differently,
         # matching tune()'s per-request key splitting
         self.key, k = jax.random.split(self.key)
@@ -128,7 +128,7 @@ class LITune:
         With ``via_service=True`` the same stream is served through the
         batched `TuningService` with O2 enabled (one slot): same swap
         decisions as the serial loop, but on the engine that also serves
-        concurrent tenants (see launch/tune_serve.py)."""
+        concurrent tenants (see launch/serving/)."""
         if via_service:
             if not self.cfg.use_o2:
                 raise ValueError(
@@ -159,7 +159,7 @@ class LITune:
 
     def _stream_via_service(self, windows, max_steps: int):
         """O2 window stream through the batched serving engine."""
-        from repro.launch.tune_serve import O2ServiceConfig, TuningService
+        from repro.launch.serving import O2ServiceConfig, TuningService
         service = TuningService(
             self, slots=1, horizon_cap=max(256, max_steps),
             o2=O2ServiceConfig(enabled=True, o2=self.cfg.o2,

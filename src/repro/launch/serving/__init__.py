@@ -1,0 +1,97 @@
+"""Batched tuning-as-a-service: the layered serving stack for the
+online tuning stage (multi-tenant `LITune.tune`).
+
+`launch/serve.py` serves LM decode with fixed slots and per-request
+completion; this package applies the same shape to tuning requests.
+Many concurrent requests — heterogeneous `(data_keys, workload,
+wr_ratio, budget_steps)` across both `alex` and `carmi` spaces — fill
+slots in per-space pools; one jitted multi-step program advances all
+active episodes of a pool at once; a request that exhausts its budget
+(or ET-MDP-terminates) frees its slot mid-flight for the next queued
+request.
+
+CPU demo:
+    PYTHONPATH=src python -m repro.launch.tune_serve --requests 8 --slots 4
+Multi-core (slots shard over forced host devices):
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+        PYTHONPATH=src python -m repro.launch.tune_serve
+
+Layers (one module each, composed by `service.TuningService`):
+
+    scheduler.py   admission queue, request deadlines, slot policies
+    pools.py       slot-batched episode execution + pool resize
+    o2_runtime.py  continuous tuning (capture / learner / assessments)
+    slo.py         queue-wait & serve-time percentiles, breach handling
+    programs.py    process-wide compiled-program cache
+    service.py     the thin composition root
+
+Key properties:
+  * **parity** — every slot computes the *same traced per-step program*
+    as the serial `rollout_episode` (`lax.map` over slots, `lax.scan`
+    over steps of the whole map body), so per-request rewards/runtimes
+    are bitwise identical to a one-at-a-time `LITune.tune` with the same
+    PRNG key (tests/test_tune_service.py).
+  * **no recompiles on mixed streams** — compiled executables are cached
+    by `(index_type, array shapes, batch shape, scan length)`; an alex
+    request arriving after a carmi wave reuses the alex program.
+  * **host-side budgets** — `budget_steps` is enforced by the serving
+    loop, not baked into the program: each tick scans
+    K = largest power of two ≤ the smallest remaining budget among active
+    slots, so heterogeneous budgets share a small ladder of executables.
+  * **slot sharding** — when the host platform exposes multiple devices
+    (cores) and they divide the slot count, slots shard across them via
+    `shard_map`; sharding never changes per-slot math, so parity holds.
+  * **adaptive slot scheduling** — with an `AdaptiveSlotPolicy` the
+    scheduler sizes each pool by demand (active + queued), growing
+    immediately on a burst and shrinking with hysteresis when the queue
+    drains.  A resize is one cached gather program; re-entering a
+    previously-served width re-uses its resident executables, so a
+    grow→shrink cycle binds zero new programs
+    (tests/test_serving_layers.py).
+  * **request-level SLOs** — per-request wall-clock deadlines: a queued
+    breach drops before admission, a running breach truncates (best-so-
+    far summary, flagged) or drops per `on_breach`.  Queue-wait and
+    serve-time p50/p95/p99 surface in `stats()["slo"]`
+    (benchmarks/slo_serve.py races static vs adaptive under bursts).
+  * **continuous tuning (O2)** — with `O2ServiceConfig(enabled=True)` the
+    service stops serving a frozen agent: retired episodes stream their
+    transitions into a per-tenant replay, an offline DDPG learner
+    fine-tunes between ticks, and a divergence monitor (KS on key
+    quantiles + W/R drift, observed at admission) triggers assessments
+    that hot-swap pool params when the offline model wins.  The swap is a
+    pure buffer update — params are program *inputs*, so the K-ladder
+    compiled-program cache never re-traces.  A single-tenant strict-order
+    stream makes the same swap decisions as
+    `core.o2.O2System.tune_window` at any budget
+    (tests/test_o2_service.py).
+  * **near-zero O2 serving tax** — the three O2 phases stay off the
+    serving loop's critical path: (1) transition capture is
+    device-resident; (2) offline fine-tuning is one scanned,
+    state-donating program dispatched asynchronously with backpressure;
+    (3) divergence-triggered assessments run as pooled episodes through
+    the *same* cached K-ladder step programs, verdicts drained when
+    ready.  `strict_order` mode keeps the fully synchronous
+    serial-equivalent interleaving for parity.
+"""
+from repro.launch.serving.o2_runtime import O2Runtime, O2ServiceConfig
+from repro.launch.serving.pools import _SlotPool, summarize_episode
+from repro.launch.serving.scheduler import (AdaptiveSlotPolicy, Scheduler,
+                                            SlotPolicy, StaticSlotPolicy,
+                                            TuneRequest)
+from repro.launch.serving.service import TuningService
+from repro.launch.serving.slo import SLOConfig, SLOTracker
+
+__all__ = [
+    "AdaptiveSlotPolicy",
+    "O2Runtime",
+    "O2ServiceConfig",
+    "Scheduler",
+    "SLOConfig",
+    "SLOTracker",
+    "SlotPolicy",
+    "StaticSlotPolicy",
+    "summarize_episode",
+    "TuneRequest",
+    "TuningService",
+    "_SlotPool",
+]

@@ -1,0 +1,440 @@
+"""O2 runtime layer of the serving stack: continuous tuning off the
+serving critical path.
+
+Owns everything the frozen serving path does not need: per-tenant
+divergence monitors, the device-resident replay rings retired episodes
+stream into, the offline DDPG learners (dispatched onto the O2 annex
+device with backpressure), and the pooled divergence-triggered
+assessments whose verdicts hot-swap pool params.  The service hands this
+layer two things per tick — the episodes that retired, and a chance to
+drain finished verdicts — and the layer never blocks the serving loop:
+strict-order mode opts back into the serial loop's synchronous
+interleaving for parity, everything else trails the server and settles
+in `flush()` at the latest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.o2 import (DivergenceMonitor, O2Config, copy_state,
+                           make_replay, offline_finetune)
+from repro.core.replay import _pow2_pad
+
+from repro.launch.serving.programs import (_batched_admit_keys,
+                                           _build_carry_program,
+                                           _extract_episode_program,
+                                           _pow2_ladder, _reset_program,
+                                           _step_program)
+
+
+@dataclasses.dataclass(frozen=True)
+class O2ServiceConfig:
+    """Continuous tuning inside the service (the O2 loop, per tenant)."""
+    enabled: bool = False
+    o2: O2Config = O2Config()
+    # offline fine-tune steps dispatched after each tick that retires at
+    # least one of the tenant's episodes (ticks with no fresh transitions
+    # skip the learner: re-sampling an unchanged replay would add latency
+    # to every tick of a long episode and desync the per-window update
+    # count from the serial O2 loop).  None -> the O2Config's per-window
+    # count, which makes a strict-order single-tenant stream
+    # decision-identical to `O2System.tune_window` at any budget.  In
+    # concurrent (non-strict) mode the count is a per-tick *cap*: a round
+    # is skipped — and counted in `stats()["o2"][...]["finetune_skipped"]`
+    # — while the previous round is still executing, so the learner
+    # trails the server instead of serializing with it
+    offline_updates_per_tick: int | None = None
+    # one window in flight at a time, in submission order: trades the
+    # service's cross-pool concurrency for the serial O2 loop's exact
+    # observe->tune->assess interleaving (the parity mode LITune.stream
+    # uses when routed through the service).  Strict mode also awaits
+    # every assessment verdict inside its window's tick; concurrent mode
+    # drains verdicts when their device work completes (at the latest in
+    # `flush_o2`), so a hot-swap may land one or more ticks after the
+    # window that earned it
+    strict_order: bool = False
+    replay_seed: int = 0
+
+
+class _TenantO2:
+    """Per-tenant continuous-tuning state: the divergence monitor, the
+    device-resident replay ring the offline learner samples, and the
+    offline DDPG state that hot-swaps into the tenant's pools on
+    divergence + win.  The learner state and its update program live on
+    the service's O2 annex device when the host provides one, so their
+    execution never queues in front of the serving mesh's fetches; the
+    ring stays on the serving side (its writers and sampling readers run
+    in the post-fetch window when that queue is empty), with sampled
+    batches hopped to the annex per round."""
+
+    def __init__(self, tuner, svc_cfg: O2ServiceConfig, annex=None,
+                 ring_device=None):
+        self.cfg = svc_cfg.o2
+        self.net_cfg = tuner.cfg.net_cfg()
+        self.ddpg_cfg = tuner.cfg.ddpg
+        self.et_cfg = tuner.cfg.et_cfg()
+        self.env_cfg = tuner.cfg.env_cfg()
+        self.annex = annex
+        self.monitor = DivergenceMonitor(self.cfg)
+        # the ring lives on the serving side (its writers and sampling
+        # readers run there, right after the tick fetch when the queue is
+        # empty); only the learner state and its update program live on
+        # the annex, with sampled batches hopped across per round
+        self.replay = make_replay(self.net_cfg, self.ddpg_cfg, self.env_cfg,
+                                  seed=svc_cfg.replay_seed, device=True,
+                                  place_on=ring_device)
+        # real copies (not aliases): the scanned fine-tune program donates
+        # its input state, so the tuner's pretrained tree and the online
+        # model must own their buffers
+        self.online = copy_state(tuner.state)
+        self.offline = self._place(copy_state(tuner.state))
+        # the assessment-facing snapshot: params of the latest *completed*
+        # fine-tune round (concurrent mode never blocks on a pending one)
+        self.ready_params = self._place(copy_state(tuner.state["params"]))
+        self.offline_updates = 0
+        self.finetune_skipped = 0
+        self._inflight = None       # marker array of the pending round
+        self._round_dirty = False   # a round completed but isn't published
+        self.swaps = 0
+        self.swap_times_s: list[float] = []
+
+    def _place(self, tree):
+        return tree if self.annex is None else jax.device_put(tree,
+                                                              self.annex)
+
+    def learner_free(self) -> bool:
+        return self._inflight is None or bool(self._inflight.is_ready())
+
+    def publish_ready(self):
+        """Expose the latest completed round's params to assessments —
+        bounded staleness, never a block on a pending round (the copy
+        also shields them from the next round's donation off-CPU)."""
+        if self._round_dirty and self.learner_free():
+            self.ready_params = copy_state(self.offline["params"])
+            self._round_dirty = False
+
+    def finetune(self, n_updates: int, strict: bool):
+        """Dispatch one offline fine-tune round.  Strict mode always runs
+        it (serial-equivalent update counts); concurrent mode applies
+        backpressure — if the previous round hasn't finished executing,
+        the round is skipped and counted rather than queued behind."""
+        if n_updates <= 0:
+            return
+        if not strict and not self.learner_free():
+            self.finetune_skipped += n_updates
+            return
+        self.offline, done = offline_finetune(
+            self.offline, self.replay, self.net_cfg, self.ddpg_cfg,
+            n_updates, place_on=self.annex)
+        self.offline_updates += done
+        if done:
+            self._inflight = self.offline["updates"]
+            self._round_dirty = True
+
+
+def _pooled_best(r0: float, runtimes: np.ndarray) -> float:
+    """Best runtime of one pooled assessment episode — min over the
+    request's step prefix and the default-config runtime, exactly the
+    ``best_runtime_ns`` `core.o2.assess_offline` reports for the same key
+    (the hot-swap comparison's left-hand side, and the seam tests patch
+    to force a verdict)."""
+    return min(r0, float(np.min(runtimes)))
+
+
+@dataclasses.dataclass
+class _PendingAssess:
+    """One dispatched pooled assessment awaiting its verdict: up to
+    2*slots diverged windows of a single tenant, rolled out as one batch
+    through the resident step programs.  Holds only device references —
+    nothing crosses to the host until `ready()` (or a blocking drain).
+    `params` is the exact tree the episodes ran under: a winning verdict
+    promotes *those* params, not whatever the learner has advanced to by
+    drain time."""
+    index_type: str
+    items: list          # [(req, summary, pend)] per occupied slot column
+    r0: object           # [B] device: r_best at reset
+    outs: list           # [(k, runtime_ns [k, B], early [k, B]) ...]
+    params: object       # the judged param tree
+
+    def ready(self) -> bool:
+        return bool(self.outs[-1][1].is_ready())
+
+
+class O2Runtime:
+    """The between-ticks half of the O2 loop, composed into the service.
+
+    Shares the service's pools dict (hot-swaps update every pool of a
+    tenant in place) and its device/annex ids; owns the tenants, the
+    admission-verdict map, the assessment backlog/in-flight queues, and
+    the per-phase host-time accounting.
+    """
+
+    def __init__(self, agents: dict, svc_cfg: O2ServiceConfig, pools: dict,
+                 annex, ring_device, device_ids: tuple, annex_ids: tuple,
+                 horizon_cap: int, max_assess_width: int):
+        self.cfg = svc_cfg
+        self.pools = pools              # shared with the service
+        self.annex = annex
+        self.device_ids = device_ids
+        self.annex_ids = annex_ids
+        self.horizon_cap = horizon_cap
+        self.max_assess_width = max_assess_width
+        self.tenants: dict[str, _TenantO2] = {
+            it: _TenantO2(tuner, svc_cfg, annex=annex,
+                          ring_device=ring_device)
+            for it, tuner in agents.items()}
+        self.pending: dict[int, dict] = {}      # rid -> admission verdict
+        self.backlog: list[tuple] = []          # (pk, req, summary, pend)
+        self.inflight: deque[_PendingAssess] = deque()
+        self._assess_noise: dict[int, jax.Array] = {}  # width -> zeros
+        self.pending_missing = 0        # retired without admission verdict
+        self.assessments = 0            # pooled assessment episodes judged
+        self.phase_ms = {"capture": 0.0, "finetune": 0.0, "assess": 0.0}
+
+    # --------------------------------------------------------- admission
+    def admit_keys(self, keys: np.ndarray):
+        """One batched split per admission wave: window key -> (episode
+        key, assessment key), the same bits as the serial loop's
+        per-window jax.random.split chain."""
+        k_on, k_off = _batched_admit_keys(keys)
+        return np.asarray(k_on), np.asarray(k_off)
+
+    def observe_admission(self, req, assess_key):
+        """Each admitted request is one window of the tenant's stream:
+        observe divergence now (against the reference distribution),
+        assess after the episode retires."""
+        tenant = self.tenants[req.index_type]
+        div = tenant.monitor.observe(req.data_keys, req.wr_ratio)
+        self.pending[req.rid] = {
+            "div": div, "window": tenant.monitor.windows_seen,
+            "assess_key": assess_key}
+
+    # ----------------------------------------------------------- capture
+    def ingest_retired(self, pool, slot: int, req, narrow: dict):
+        """Extract the retired episode's capture rows (small gather on
+        the serving mesh) into the tenant's ring — the wide fields never
+        visit the host."""
+        t0 = time.perf_counter()
+        T = len(narrow["reward"])
+        src = np.minimum(np.arange(_pow2_pad(T)), T - 1).astype(np.int32)
+        values = _extract_episode_program(self.device_ids)(
+            pool.cap, np.int32(slot), src)
+        self.tenants[req.index_type].replay.add_episode_values(
+            values, T, **narrow)
+        self.phase_ms["capture"] += 1e3 * (time.perf_counter() - t0)
+
+    # -------------------------------------------------------------- tick
+    def tick(self, retired: list, pool_key):
+        """The between-ticks half of the O2 loop.  Strict mode keeps the
+        serial interleaving: fine-tune, assess against the fresh offline
+        tail, await the verdict.  Concurrent mode inverts it for the
+        annex's FIFO: assessments dispatch first (against the last
+        *completed* round's published params, so they never chain behind
+        a pending one), the fine-tune round queues after them, and
+        verdicts land on a later tick's drain."""
+        strict = self.cfg.strict_order
+        if strict:
+            t0 = time.perf_counter()
+            self._finetune_retired(retired, strict)
+            self.phase_ms["finetune"] += 1e3 * (time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for req, summary in retired:
+            tenant = self.tenants[req.index_type]
+            pend = self.pending.pop(req.rid, None)
+            if pend is None:
+                # admitted before O2 tracked this tenant (or replayed
+                # after a config swap): skip the window verdict instead
+                # of raising mid-tick, and count it
+                self.pending_missing += 1
+                continue
+            # annotate the request's result with its window verdict, in
+            # the exact shape O2System.tune_window returns; `swapped`
+            # flips in the drain if the assessment wins
+            summary["divergence"] = pend["div"]
+            summary["swapped"] = False
+            if pend["div"]["diverged"] and \
+                    pend["window"] % tenant.cfg.assess_every == 0:
+                self.backlog.append((pool_key(req), req, summary, pend))
+        self._pump_assessments()
+        self.phase_ms["assess"] += 1e3 * (time.perf_counter() - t0)
+        if strict:
+            # serial-equivalent interleaving: the verdict (and any swap)
+            # lands before the next window is admitted
+            self.drain(block=True)
+        else:
+            t0 = time.perf_counter()
+            self._finetune_retired(retired, strict)
+            self.phase_ms["finetune"] += 1e3 * (time.perf_counter() - t0)
+
+    def _pump_assessments(self):
+        """Move backlog windows into pooled assessment dispatches, widest
+        chunks first, with at most two chunks in flight — the annex's
+        admission control.  A saturated annex (many diverged windows,
+        long budgets) grows the backlog instead of the device queue, and
+        `flush` settles whatever is left."""
+        while self.backlog and len(self.inflight) < 2:
+            pk = self.backlog[0][0]
+            chunk = [item for item in self.backlog
+                     if item[0] == pk][:self.max_assess_width]
+            for item in chunk:
+                self.backlog.remove(item)
+            pool, tenant = self.pools[pk], self.tenants[pk[0]]
+            if not self.cfg.strict_order:
+                tenant.publish_ready()
+            self.inflight.append(self._dispatch_assess(
+                pk, pool, tenant, [item[1:] for item in chunk]))
+
+    def _finetune_retired(self, retired: list, strict: bool):
+        for index_type in {req.index_type for req, _ in retired}:
+            n = (self.cfg.offline_updates_per_tick
+                 if self.cfg.offline_updates_per_tick is not None
+                 else self.tenants[index_type].cfg
+                 .offline_updates_per_window)
+            self.tenants[index_type].finetune(n, strict)
+
+    def _assess_noise_dev(self, width: int):
+        if width not in self._assess_noise:
+            zeros = jnp.zeros((width,), jnp.float32)
+            self._assess_noise[width] = (
+                zeros if self.annex is None
+                else jax.device_put(zeros, self.annex))
+        return self._assess_noise[width]
+
+    def _dispatch_assess(self, pk: tuple, pool,
+                         tenant: _TenantO2, chunk: list) -> _PendingAssess:
+        """Launch one pooled assessment on the O2 annex: up to B diverged
+        windows of one tenant reset and roll out as a single batch
+        through the K-ladder step-program cache (zero-noise inputs — the
+        deterministic branch for the tanh-bounded actor), in place of
+        len(chunk) serial `rollout_episode` calls.  Strict mode assesses
+        the offline tail (serial semantics); concurrent mode the
+        published ready params.  Nothing is fetched here; the verdict
+        scalars cross to the host in `drain` once the device work
+        completes."""
+        ids = self.annex_ids
+        m = len(chunk)
+        width = _pow2_pad(m)
+        reqs = [item[0] for item in chunk]
+        rpad = reqs + [reqs[0]] * (width - m)
+        data = np.stack([r.data_keys for r in rpad])
+        reads = np.stack([r.workload["reads"] for r in rpad])
+        ins = np.stack([r.workload["inserts"] for r in rpad])
+        wr = np.asarray([r.wr_ratio for r in rpad], np.float32)
+        # the assessment keys were derived in the admission wave's
+        # batched split (same bits as the serial loop's chain)
+        k_offs = np.stack([item[2]["assess_key"] for item in chunk])
+        keys = np.concatenate(
+            [k_offs, np.broadcast_to(k_offs[:1], (width - m, 2))])
+        env_states, obs = _reset_program(ids, pool.env_cfg)(
+            data, reads, ins, wr)
+        carry = _build_carry_program(ids, pool.net_cfg, width)(
+            keys, env_states, obs)
+        params = (tenant.offline["params"] if self.cfg.strict_order
+                  else tenant.ready_params)
+        outs = []
+        remaining = max(r.budget_steps for r in reqs)
+        while remaining > 0:
+            k = max(w for w in _pow2_ladder(self.horizon_cap)
+                    if w <= remaining)
+            program = _step_program(ids, pool.net_cfg, pool.env_cfg,
+                                    pool.et_cfg, k)
+            carry, out = program(params, carry,
+                                 self._assess_noise_dev(width))
+            outs.append((k, out["runtime_ns"], out["early"]))
+            remaining -= k
+        return _PendingAssess(pk[0], list(chunk), env_states["r_best"],
+                              outs, params)
+
+    def drain(self, block: bool = False):
+        """Judge every in-flight pooled assessment whose device work has
+        completed (all of them when `block`), in dispatch order: fetch
+        the per-slot runtime scalars, compare each window's offline best
+        against its online summary, and hot-swap winners."""
+        while self.inflight:
+            entry = self.inflight[0]
+            if not block and not entry.ready():
+                break
+            self.inflight.popleft()
+            t0 = time.perf_counter()
+            r0s = np.asarray(jax.device_get(entry.r0))
+            rts = np.concatenate(
+                [np.asarray(jax.device_get(r)) for _, r, _ in entry.outs])
+            earls = np.concatenate(
+                [np.asarray(jax.device_get(e)) for _, _, e in entry.outs])
+            for j, (req, summary, pend) in enumerate(entry.items):
+                T = req.budget_steps
+                hit = np.flatnonzero(earls[:T, j])
+                stop = int(hit[0]) + 1 if hit.size else T
+                best = _pooled_best(float(r0s[j]), rts[:stop, j])
+                self.assessments += 1
+                if best < summary["best_runtime_ns"]:
+                    self.hot_swap(entry.index_type, req,
+                                  window=pend["window"] - 1,
+                                  params=entry.params)
+                    summary["swapped"] = True
+            self.phase_ms["assess"] += 1e3 * (time.perf_counter() - t0)
+
+    def hot_swap(self, index_type: str, req,
+                 window: int | None = None, params=None):
+        """Promote the offline model to online: a pure buffer update on
+        every pool of the tenant.  Params are program *inputs*, not traced
+        constants, so the K-ladder compiled-program cache is untouched —
+        no re-trace, no re-compile (asserted in tests/test_o2_service.py).
+        `params` is the judged tree an assessment verdict promotes (the
+        concurrent learner may have advanced past it by drain time);
+        None — the strict/serial case and direct callers — promotes the
+        offline tail.  `window` is the retired window whose data
+        re-anchors the monitor (under concurrent serving it may not be
+        the latest one observed)."""
+        t0 = time.perf_counter()
+        tenant = self.tenants[index_type]
+        # real copies: the next fine-tune round donates the offline
+        # tree's buffers, and the promoted online model must outlive that
+        tenant.online = copy_state(tenant.offline)
+        if params is not None:
+            tenant.online["params"] = copy_state(params)
+        for pk, pool in self.pools.items():
+            if pk[0] == index_type:
+                pool.params = jax.device_put(tenant.online["params"],
+                                             pool.replicated)
+        tenant.monitor.re_anchor(req.data_keys, req.wr_ratio,
+                                 window=window)
+        tenant.swaps += 1
+        tenant.swap_times_s.append(time.perf_counter() - t0)
+
+    def flush(self):
+        """Settle all in-flight O2 work: the assessment backlog drains
+        through the annex, every verdict lands (hot-swaps applied), and
+        the trailing offline learner catches up.  Blocks; callers that
+        only need serving results never have to."""
+        while self.backlog or self.inflight:
+            self._pump_assessments()
+            self.drain(block=True)
+        for tenant in self.tenants.values():
+            jax.block_until_ready(tenant.offline["params"])
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        st = {
+            it: {"windows": t.monitor.windows_seen,
+                 "diverged": t.monitor.diverged_count,
+                 "swaps": t.swaps,
+                 "offline_updates": t.offline_updates,
+                 "finetune_skipped": t.finetune_skipped,
+                 "replay_size": t.replay.size,
+                 "mean_swap_ms": (1e3 * float(np.mean(t.swap_times_s))
+                                  if t.swap_times_s else 0.0)}
+            for it, t in self.tenants.items()}
+        # host-side time spent driving each O2 phase (dispatch + verdict
+        # fetches — device execution overlaps serving)
+        st["phase_ms"] = {k: round(v, 3) for k, v in self.phase_ms.items()}
+        st["assessments"] = self.assessments
+        st["inflight_assessments"] = len(self.inflight)
+        st["pending_missing"] = self.pending_missing
+        return st

@@ -1,0 +1,214 @@
+"""Execution layer of the serving stack: fixed-width slot pools.
+
+A `_SlotPool` is one (index space, array-shape) group's batch of episode
+lanes: a slot-batched device carry advanced K steps per tick by the
+process-wide step programs (`programs.py`), plus the host-side
+bookkeeping of which request occupies which lane.  The pool knows
+nothing about queues, deadlines, or O2 — the scheduler decides what
+enters it, the O2 runtime consumes what leaves it.
+
+Pool *resize* (the adaptive-scheduling seam): `resize()` re-gathers the
+device carry (and capture buffers) through a new→old slot index map —
+growth appends fresh lanes seeded with slot 0's rows (valid, ignored
+state that the next admission scatter overwrites), shrink compacts the
+active lanes to the front.  Per-lane math is a `lax.map` over slots, so
+moving a lane never changes its per-step outputs: a request's results
+are bitwise identical whatever widths its pool passed through while it
+ran.  Re-entering a previously-served width re-uses the resident
+compiled programs (zero re-traces — tests/test_serving_layers.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.etmdp import transition_view
+from repro.core.litune import attach_best_params
+from repro.core.replay import wide_dim
+from repro.index import env as E
+
+from repro.launch.serving.programs import _capture_write, _resize_program
+from repro.launch.serving.scheduler import TuneRequest
+
+
+def summarize_episode(env_cfg: E.EnvConfig, r0: float, rewards, runtimes,
+                      actions, costs, terminated: bool) -> dict:
+    """Assemble the per-request summary in the exact `LITune.tune` shape
+    (shared decode via `attach_best_params`)."""
+    summary = {
+        "episode_return": float(np.sum(rewards)),
+        "best_runtime_ns": min(r0, float(np.min(runtimes))),
+        "r0_ns": r0,
+        "violations": float(np.sum(costs)),
+        "terminated_early": terminated,
+        "runtimes": [float(r) for r in runtimes],
+        "actions": [np.asarray(a) for a in actions],
+        "steps": len(runtimes),
+    }
+    summary["best_params"] = attach_best_params(summary, env_cfg)
+    return summary
+
+
+class _SlotPool:
+    """B-slot episode pool for one (index space, array-shape) group.
+
+    Device state: a slot-batched episode carry (sharded over the mesh), a
+    [B] per-slot noise vector, and — under O2 — per-slot `[B, H, ...]`
+    transition capture buffers appended in place by each tick's program
+    outputs.  Host state: which request occupies which slot, steps taken,
+    and the per-step narrow records streamed back each tick.
+    """
+
+    def __init__(self, env_cfg: E.EnvConfig, net_cfg, et_cfg, params,
+                 slots: int, mesh: Mesh, capture: bool = False):
+        self.env_cfg = env_cfg
+        self.net_cfg = net_cfg
+        self.et_cfg = et_cfg
+        self.slots = slots
+        self.mesh = mesh
+        self.capture = capture          # device-resident transitions (O2)
+        self.replicated = NamedSharding(mesh, P())
+        self.sharded = NamedSharding(mesh, P("slots"))
+        self.params = jax.device_put(params, self.replicated)
+        self.carry = None                       # batched pytree, lazy init
+        self.cap = None                         # capture buffers, lazy
+        self.noise = np.zeros((slots,), np.float32)
+        self._noise_dev = None                  # placed copy, lazy
+        self.requests: list[TuneRequest | None] = [None] * slots
+        self.steps_taken = np.zeros((slots,), np.int64)
+        self.records: list[dict | None] = [None] * slots
+        self.r0: list[float] = [0.0] * slots
+        self.resizes = {"grow": 0, "shrink": 0}
+        self.peak_slots = slots
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.requests)
+
+    def free_slots(self):
+        return [i for i, r in enumerate(self.requests) if r is None]
+
+    def remaining(self):
+        return [r.budget_steps - int(self.steps_taken[i])
+                for i, r in enumerate(self.requests) if r is not None]
+
+    def noise_dev(self):
+        if self._noise_dev is None:
+            self._noise_dev = jax.device_put(jnp.asarray(self.noise),
+                                             self.sharded)
+        return self._noise_dev
+
+    # ------------------------------------------------------------ resize
+    def resize(self, new_slots: int, device_ids: tuple):
+        """Grow or shrink the pool to `new_slots` lanes in place.  The
+        device carry and capture buffers are re-gathered through a
+        new→old index map; host mirrors follow the same map.  Shrink
+        requires the active lanes to fit (the scheduler guarantees it).
+        """
+        old = self.slots
+        if new_slots == old:
+            return
+        if new_slots < old:
+            keep = [i for i, r in enumerate(self.requests) if r is not None]
+            if len(keep) > new_slots:
+                raise ValueError(
+                    f"cannot shrink pool to {new_slots} slots with "
+                    f"{len(keep)} active episodes")
+            idle = [i for i, r in enumerate(self.requests) if r is None]
+            idx = (keep + idle)[:new_slots]
+            self.resizes["shrink"] += 1
+        else:
+            idx = list(range(old)) + [0] * (new_slots - old)
+            self.resizes["grow"] += 1
+        ai = np.asarray(idx, np.int32)
+        if self.carry is not None:
+            self.carry = _resize_program(device_ids)(self.carry, ai)
+        if self.cap is not None:
+            self.cap = _resize_program(device_ids)(self.cap, ai)
+        self.requests = [self.requests[i] for i in idx]
+        self.records = [self.records[i] for i in idx]
+        self.r0 = [self.r0[i] for i in idx]
+        self.steps_taken = self.steps_taken[ai].copy()
+        self.noise = self.noise[ai].copy()
+        if new_slots > old:
+            # grown lanes are empty, not clones of lane 0 (the gather
+            # only seeded their device rows with valid ignored state)
+            for j in range(old, new_slots):
+                self.requests[j] = None
+                self.records[j] = None
+                self.r0[j] = 0.0
+                self.steps_taken[j] = 0
+                self.noise[j] = 0.0
+        self._noise_dev = None
+        self.slots = new_slots
+        self.peak_slots = max(self.peak_slots, new_slots)
+
+    # ----------------------------------------------------------- capture
+    def capture_tick(self, out: dict):
+        """Append this tick's `[K, B, ...]` transition view into the
+        capture buffers (on the serving mesh, next to their producer and
+        their extract readers) at each slot's pre-tick episode offset.
+        Called after the tick's narrow-field fetch — the serving queue is
+        drained then, so the donated in-place append costs its own
+        microseconds, not a wait — and before `collect` advances
+        `steps_taken`."""
+        if self.cap is None:
+            self.cap = jax.device_put(
+                jnp.zeros((self.slots, self.env_cfg.episode_len,
+                           wide_dim(self.net_cfg.obs_dim,
+                                    self.net_cfg.lstm_hidden)),
+                          jnp.float32), self.sharded)
+        self.cap = _capture_write(self.cap, transition_view(out),
+                                  self.steps_taken.astype(np.int32))
+
+    # --------------------------------------------------------- lifecycle
+    def mark_admitted(self, slot: int, req: TuneRequest, r0: float):
+        self.noise[slot] = req.noise_scale
+        self._noise_dev = None
+        self.requests[slot] = req
+        self.steps_taken[slot] = 0
+        self.r0[slot] = r0
+        self.records[slot] = {"rewards": [], "runtimes": [], "actions": [],
+                              "costs": []}
+
+    def collect(self, slot: int, out_host: dict, step: int,
+                early: bool = False) -> bool:
+        """Record one step for `slot`; returns whether the episode is done
+        (early exit or budget exhausted).  `done` is computed host-side
+        against the request budget — the program's own horizon flag tracks
+        the pool's horizon_cap, not the per-request episode length."""
+        rec = self.records[slot]
+        rec["rewards"].append(float(out_host["reward"][step, slot]))
+        rec["runtimes"].append(float(out_host["runtime_ns"][step, slot]))
+        rec["actions"].append(np.asarray(out_host["action"][step, slot]))
+        rec["costs"].append(float(out_host["cost"][step, slot]))
+        self.steps_taken[slot] += 1
+        return early or \
+            self.steps_taken[slot] >= self.requests[slot].budget_steps
+
+    def retire(self, slot: int,
+               terminated: bool) -> tuple[TuneRequest, dict, dict | None]:
+        """Free the slot; returns the request, its summary, and — under
+        capture — the episode's narrow fields (`[T]` host arrays) for ring
+        ingestion alongside the slot's device capture rows.  The wide
+        fields never left the device: they ride `self.cap`."""
+        req, rec = self.requests[slot], self.records[slot]
+        summary = summarize_episode(
+            self.env_cfg, self.r0[slot], rec["rewards"], rec["runtimes"],
+            rec["actions"], rec["costs"], terminated)
+        narrow = None
+        if self.capture:
+            T = len(rec["rewards"])
+            done = np.zeros((T,), np.float32)
+            done[-1] = 1.0      # retire only happens at the done step
+            narrow = {
+                "action": np.stack(rec["actions"]).astype(np.float32),
+                "reward": np.asarray(rec["rewards"], np.float32),
+                "done": done,
+                "cost": np.asarray(rec["costs"], np.float32),
+            }
+        self.requests[slot] = None
+        self.records[slot] = None
+        return req, summary, narrow

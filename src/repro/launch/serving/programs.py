@@ -1,0 +1,207 @@
+"""Process-wide compiled-program cache for the serving stack.
+
+Every jitted program the serving layers dispatch lives here, keyed on
+(device ids, frozen configs, shapes) so every `TuningService` instance —
+and every pool within one — shares the same jitted callables and their
+compiled executables.  A per-service dict on top of this would recompile
+per instance, which is exactly the recompile-on-mixed-streams failure
+this engine exists to avoid.
+
+The same cache is what makes **pool resizing** cheap: a pool growing
+from B to B' slots re-enters the *same* `_step_program` callable with a
+wider carry — jax traces the new shape once, and shrinking back to a
+previously-served width re-uses its resident executable, so a
+grow→shrink cycle after warmup binds zero new programs
+(tests/test_serving_layers.py asserts this).
+
+Buffer donation (the slot carry, capture buffers, learner state — the
+largest live trees, all rebound every tick) is gated off the CPU
+backend via `repro.core.replay.donate_argnums`: the CPU PJRT donation
+hand-off synchronizes with pending readers (~6-70 ms per dispatch,
+measured on jax 0.4.37) for no memory win.  The helper probes the
+backend lazily at program-build time, so importing this module never
+initializes jax before the operator's XLA_FLAGS are set.
+tests/test_o2_service.py asserts the donating programs stay
+re-trace-free either way.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import networks as nets
+from repro.core.etmdp import batched_episode_scan
+from repro.core.parallel import mapped_reset
+from repro.core.replay import donate_argnums
+from repro.runtime.mesh_utils import shard_map_compat
+
+
+def _pow2_ladder(n: int) -> list[int]:
+    out, k = [], 1
+    while k <= n:
+        out.append(k)
+        k *= 2
+    return out
+
+
+def _admit_key_chain(window_key):
+    """O2System.tune_window's PRNG discipline for one window key: the
+    episode runs on the second split (k_on) and a diverged window's
+    assessment on the second split of the remainder (k_off)."""
+    remainder, k_on = jax.random.split(window_key)
+    k_off = jax.random.split(remainder)[1]
+    return k_on, k_off
+
+
+# one dispatch derives a whole admission wave's episode + assessment keys
+# (vmap over the integer threefry core is bitwise the per-key splits)
+_batched_admit_keys = jax.jit(jax.vmap(_admit_key_chain))
+
+
+def _mesh_for(device_ids: tuple) -> Mesh:
+    by_id = {d.id: d for d in jax.devices()}
+    return Mesh(np.array([by_id[i] for i in device_ids]), ("slots",))
+
+
+@lru_cache(maxsize=None)
+def _step_program(device_ids: tuple, net_cfg, env_cfg, et_cfg, k: int):
+    """K-step slot program: scan over K ticks of the bitwise-stable
+    one-tick map body, slots sharded over the mesh.  The carry is donated
+    — every caller rebinds it to the program's output, and the donation
+    lets XLA write the new carry into the old one's buffers instead of
+    allocating a fresh slot-state tree per tick."""
+    mesh = _mesh_for(device_ids)
+
+    def core(p, c, n):
+        return batched_episode_scan(p, c, n, k, net_cfg, env_cfg, et_cfg,
+                                    False)
+
+    return jax.jit(shard_map_compat(
+        core, mesh, in_specs=(P(), P("slots"), P("slots")),
+        out_specs=(P("slots"), P(None, "slots"))),
+        donate_argnums=donate_argnums(1))
+
+
+@lru_cache(maxsize=None)
+def _reset_program(device_ids: tuple, env_cfg):
+    """Batched admission: reset a wave of episodes in one (sharded when
+    the wave divides the mesh) program."""
+    mesh = _mesh_for(device_ids)
+
+    def core(d, r, i, wr):
+        return mapped_reset(env_cfg, d, {"reads": r, "inserts": i}, wr)
+
+    return jax.jit(shard_map_compat(
+        core, mesh,
+        in_specs=(P("slots"), P("slots"), P("slots"), P("slots")),
+        out_specs=P("slots")))
+
+
+@lru_cache(maxsize=None)
+def _admit_scatter_program(device_ids: tuple, net_cfg, slots: int):
+    """Scatter freshly-reset episodes into their slots (padded entries
+    target slot index B and are dropped)."""
+    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
+
+    def scatter(carry, idx, keys, env_states, obs):
+        def upd(buf, x):
+            return buf.at[idx].set(x, mode="drop")
+        zero_h = nets.zero_hidden(net_cfg, (idx.shape[0],))
+        return {
+            "key": upd(carry["key"], keys),
+            "env": jax.tree.map(upd, carry["env"], env_states),
+            "obs": upd(carry["obs"], obs),
+            "h_a": tuple(upd(c, z) for c, z in zip(carry["h_a"], zero_h)),
+            "h_q": tuple(upd(c, z) for c, z in zip(carry["h_q"], zero_h)),
+            "b_t": upd(carry["b_t"],
+                       jnp.zeros((idx.shape[0],), jnp.float32)),
+        }
+
+    # the carry is rebound to the output on every admission — donate it
+    return jax.jit(scatter, out_shardings=sharded,
+                   donate_argnums=donate_argnums(0))
+
+
+@lru_cache(maxsize=None)
+def _build_carry_program(device_ids: tuple, net_cfg, slots: int):
+    """Initial-wave fast path: construct the whole B-slot carry from a
+    full batch of resets (no scatter)."""
+    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
+
+    def build(keys, env_states, obs):
+        return {
+            "key": keys,
+            "env": env_states,
+            "obs": obs,
+            "h_a": nets.zero_hidden(net_cfg, (slots,)),
+            "h_q": nets.zero_hidden(net_cfg, (slots,)),
+            "b_t": jnp.zeros((slots,), jnp.float32),
+        }
+
+    return jax.jit(build, out_shardings=sharded)
+
+
+def _extract_episode_core(cap, slot, src_idx):
+    """One retired slot's capture rows, compacted to the episode's padded
+    length: the small packed `[Tp, wide]` array the ring ingests (pure
+    gather — indices are inputs)."""
+    return cap[slot][src_idx]
+
+
+@lru_cache(maxsize=None)
+def _extract_episode_program(device_ids: tuple):
+    """Replicated-output extract: every serving device holds the episode
+    rows, so the ring's single-device `_place` resolves to a local copy
+    instead of a cross-device reshard the next gather would wait on."""
+    sharding = NamedSharding(_mesh_for(device_ids), P())
+    return jax.jit(_extract_episode_core, out_shardings=sharding)
+
+
+def _capture_write_core(cap, new, offsets):
+    """Append one tick's transition view into the `[B, H, wide]` packed
+    capture buffer at each slot's episode offset.  The six wide fields
+    pack into one feature axis inside the program (`WIDE_FIELDS` order),
+    so the whole capture path moves one operand per program.  Pure data
+    movement (offsets are array inputs): compiles once per (K, shape)
+    pair and never re-traces on admissions or swaps."""
+    packed = jnp.concatenate(
+        [new[f] for f in ("obs", "next_obs", "h_a", "c_a", "h_q", "c_q")],
+        axis=-1)                                # [K, B, wide]
+    packed = jnp.moveaxis(packed, 0, 1)         # [B, K, wide]
+
+    def one(b, n_, off):
+        return jax.lax.dynamic_update_slice(b, n_, (off, 0))
+
+    return jax.vmap(one)(cap, packed, offsets)
+
+
+@lru_cache(maxsize=None)
+def _capture_write_program():
+    # built lazily (donate_argnums probes the backend) so importing this
+    # module keeps the no-jax-init contract of the docstring above
+    return jax.jit(_capture_write_core, donate_argnums=donate_argnums(0))
+
+
+def _capture_write(cap, new, offsets):
+    return _capture_write_program()(cap, new, offsets)
+
+
+@lru_cache(maxsize=None)
+def _resize_program(device_ids: tuple):
+    """Slot-count resize: gather a pool's device state (the episode carry
+    or the capture buffers) through a new→old slot index map, sharded
+    over the mesh at the new width.  Growth pads fresh slots with slot
+    0's rows (valid, ignored state — the admission scatter overwrites
+    them); shrink compacts the active slots to the front.  Pure gather:
+    indices are array inputs, so resizing never re-traces on the request
+    stream — only the first visit to a new width traces its shape."""
+    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
+
+    def gather(tree, idx):
+        return jax.tree.map(lambda x: x[idx], tree)
+
+    return jax.jit(gather, out_shardings=sharded)

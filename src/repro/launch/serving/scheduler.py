@@ -1,0 +1,186 @@
+"""Admission layer of the serving stack: the request queue, per-request
+deadlines, and the pluggable slot-scheduling policy.
+
+This layer owns *which* requests enter *which* pool *when* — and how
+many slots each pool should hold — without touching any device state.
+The policy seam is `SlotPolicy.desired_slots`, consulted once per
+service tick per pool:
+
+  * `StaticSlotPolicy` — fixed per-pool slot counts (PR 1–3 behavior,
+    and the parity mode: a static pool never resizes, so strict-order O2
+    streams stay tick-for-tick identical to the serial loop);
+  * `AdaptiveSlotPolicy` — sizes pools by demand (active episodes +
+    queued requests), growing immediately on a burst and shrinking only
+    after `shrink_patience` consecutive low-demand ticks (hysteresis, so
+    a jittery queue doesn't thrash the pool width).  Candidate widths
+    come from the service's size ladder (multiples of the mesh width, so
+    resized pools still shard), and the K-ladder program cache makes the
+    reshape itself cheap: re-entering a previously-served width binds
+    zero new programs.
+
+Deadline handling (the request-level SLO seam) splits by request state:
+a *queued* request past its deadline is dropped before admission — it
+never occupies a slot; a *running* request past its deadline is retired
+at the end of the breaching tick, either truncated (its best-so-far
+summary is returned, flagged) or dropped, per its `on_breach`.  Both
+paths free capacity without perturbing the surviving slots' math: slots
+are independent lanes of the same mapped program, so retiring one early
+never changes another's per-step outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import ClassVar
+
+import jax
+
+
+@dataclasses.dataclass
+class TuneRequest:
+    """One tuning-as-a-service request (the unit of multi-tenancy)."""
+    rid: int
+    data_keys: jax.Array
+    workload: dict                 # {"reads": [r], "inserts": [i]}
+    wr_ratio: float
+    budget_steps: int
+    index_type: str = "alex"       # alex | carmi
+    key: jax.Array | None = None   # episode/window PRNG key (parity handle)
+    noise_scale: float = 0.05
+    # ------------------------------------------------------------- SLO
+    deadline_s: float | None = None   # wall-clock budget from submission
+    on_breach: str = "truncate"       # truncate | drop (running breaches)
+    submitted_at: float = 0.0         # service clock at submit()
+
+
+class SlotPolicy:
+    """Pluggable per-pool slot-count policy, consulted before each
+    tick's admissions.  `ladder` is the service's list of shardable pool
+    widths (ascending); the returned width must come from it."""
+
+    name: ClassVar[str] = "static"
+
+    def desired_slots(self, *, slots: int, active: int, queued: int,
+                      ladder: list[int]) -> int:
+        return slots
+
+
+class StaticSlotPolicy(SlotPolicy):
+    """Fixed pool widths: the PR 1–3 behavior and the parity default."""
+
+
+@dataclasses.dataclass
+class AdaptiveSlotPolicy(SlotPolicy):
+    """Demand-driven pool widths: grow to the smallest ladder width that
+    covers `active + queued`, shrink (with hysteresis, applied by the
+    scheduler) when demand stays below the current width."""
+
+    min_slots: int = 1
+    max_slots: int = 16
+    # consecutive low-demand ticks before a shrink is applied
+    shrink_patience: int = 2
+
+    name: ClassVar[str] = "adaptive"
+
+    def desired_slots(self, *, slots: int, active: int, queued: int,
+                      ladder: list[int]) -> int:
+        fit = [s for s in ladder
+               if self.min_slots <= s <= self.max_slots] or ladder[:1]
+        demand = active + queued
+        return next((s for s in fit if s >= demand), fit[-1])
+
+
+class Scheduler:
+    """FIFO admission queue + deadline drops + resize planning.
+
+    Host-only bookkeeping: the scheduler never touches device state.  The
+    service asks it, each tick, (1) which queued requests breached their
+    deadline while waiting, (2) what width each pool should be, and
+    (3) which requests to admit into which pool's free slots.
+    """
+
+    def __init__(self, policy: SlotPolicy, strict_order: bool = False):
+        self.policy = policy
+        self.strict_order = strict_order
+        self.queue: deque[TuneRequest] = deque()
+        self._shrink_streak: dict[tuple, int] = {}
+        self.resize_events = 0
+
+    def submit(self, req: TuneRequest):
+        self.queue.append(req)
+
+    # ------------------------------------------------------------- SLO
+    def drop_breached(self, now: float) -> list[TuneRequest]:
+        """Remove (and return) queued requests whose deadline passed
+        while they waited — they never occupy a slot."""
+        kept, dropped = deque(), []
+        for req in self.queue:
+            if req.deadline_s is not None and \
+                    now - req.submitted_at > req.deadline_s:
+                dropped.append(req)
+            else:
+                kept.append(req)
+        self.queue = kept
+        return dropped
+
+    # ---------------------------------------------------------- resize
+    def plan_resize(self, pk: tuple, pool, queued: int,
+                    ladder: list[int]) -> int | None:
+        """Desired width for `pool` this tick, or None to keep it.
+        Growth applies immediately (a burst should not wait out the
+        hysteresis); shrink waits for `shrink_patience` consecutive
+        low-demand ticks and for the active episodes to fit."""
+        desired = self.policy.desired_slots(
+            slots=pool.slots, active=pool.n_active, queued=queued,
+            ladder=ladder)
+        if desired > pool.slots:
+            self._shrink_streak[pk] = 0
+            self.resize_events += 1
+            return desired
+        if desired < pool.slots:
+            streak = self._shrink_streak.get(pk, 0) + 1
+            self._shrink_streak[pk] = streak
+            patience = getattr(self.policy, "shrink_patience", 0)
+            if streak >= patience and pool.n_active <= desired:
+                self._shrink_streak[pk] = 0
+                self.resize_events += 1
+                return desired
+            return None
+        self._shrink_streak[pk] = 0
+        return None
+
+    # ------------------------------------------------------- admission
+    def select(self, pools: dict, pool_for, pool_key,
+               any_active: bool) -> dict[tuple, list[TuneRequest]]:
+        """Pick this tick's admissions: FIFO per pool group, bounded by
+        each pool's free slots.  In strict-order O2 mode a single window
+        is admitted at a time, in submission order."""
+        if self.strict_order:
+            if not self.queue or any_active:
+                return {}
+            req = self.queue.popleft()
+            pool_for(req)           # ensure the pool exists
+            return {pool_key(req): [req]}
+        per_pool: dict[tuple, list[TuneRequest]] = {}
+        still_queued = deque()
+        free_left: dict[tuple, int] = {}
+        while self.queue:
+            req = self.queue.popleft()
+            pool = pool_for(req)
+            pk = pool_key(req)
+            if pk not in free_left:
+                free_left[pk] = len(pool.free_slots())
+            if free_left[pk] > 0:
+                per_pool.setdefault(pk, []).append(req)
+                free_left[pk] -= 1
+            else:
+                still_queued.append(req)
+        self.queue = still_queued
+        return per_pool
+
+    def queued_by_pool(self, pool_key) -> dict[tuple, int]:
+        counts: dict[tuple, int] = {}
+        for req in self.queue:
+            pk = pool_key(req)
+            counts[pk] = counts.get(pk, 0) + 1
+        return counts

@@ -1,0 +1,111 @@
+"""Request-level SLO layer: per-request deadlines and latency tracking.
+
+The service retires strictly by budget/ET-MDP; this layer adds the
+serving contract on top — how long a request may wait and run before the
+service gives up on it, and the percentile evidence that the contract is
+being met.
+
+Two knobs, both per-request (with service-level defaults via
+`SLOConfig`):
+
+  * ``deadline_s`` — wall-clock budget measured from submission.  A
+    queued request past its deadline is dropped before it ever occupies
+    a slot; a running request past its deadline is retired at the end of
+    the breaching tick.
+  * ``on_breach`` — what a *running* breach does: ``"truncate"`` returns
+    the best-so-far summary (flagged ``slo_breached``/``truncated``) —
+    the tuned parameters found within the deadline are still useful;
+    ``"drop"`` abandons the episode (the result records only the drop).
+
+Every request is timed regardless of deadlines: queue-wait (submit →
+admit) and serve-time (admit → retire) feed the p50/p95/p99 percentiles
+`TuningService.stats()["slo"]` reports, which is also what
+`benchmarks/slo_serve.py` compares across scheduling policies.
+
+The clock is injectable (`TuningService(clock=...)`) so deadline
+behavior is deterministic under test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Service-level SLO defaults; per-request submit() kwargs override."""
+    default_deadline_s: float | None = None
+    on_breach: str = "truncate"         # truncate | drop
+
+
+_PCTS = (50, 95, 99)
+
+
+def _percentiles_ms(samples_s) -> dict:
+    if not samples_s:
+        return {f"p{p}": 0.0 for p in _PCTS}
+    arr = 1e3 * np.asarray(samples_s)
+    return {f"p{p}": round(float(np.percentile(arr, p)), 3) for p in _PCTS}
+
+
+class SLOTracker:
+    """Per-request latency bookkeeping: queue-wait and serve-time
+    samples, breach counters, and the percentile summary for stats().
+
+    Samples live in a bounded window (`window` most recent requests) so
+    a long-lived service neither grows without bound nor reports
+    percentiles frozen by day-one traffic; `tracked` counts every
+    request ever timed."""
+
+    def __init__(self, clock, window: int = 4096):
+        self.clock = clock
+        self.queue_wait_s: deque[float] = deque(maxlen=window)
+        self.serve_s: deque[float] = deque(maxlen=window)
+        self.tracked = 0
+        self.truncated = 0
+        self.dropped_queued = 0
+        self.dropped_running = 0
+        self._admitted_at: dict[int, float] = {}
+
+    # ------------------------------------------------------- lifecycle
+    def on_admit(self, req, now: float):
+        self.tracked += 1
+        self.queue_wait_s.append(now - req.submitted_at)
+        self._admitted_at[req.rid] = now
+
+    def on_retire(self, rid: int, now: float):
+        t_admit = self._admitted_at.pop(rid, None)
+        if t_admit is not None:
+            self.serve_s.append(now - t_admit)
+
+    # --------------------------------------------------------- breaches
+    def on_drop_queued(self, req, now: float):
+        self.tracked += 1
+        self.dropped_queued += 1
+        # the wait it accrued before the drop still counts against the SLO
+        self.queue_wait_s.append(now - req.submitted_at)
+
+    def on_breach_running(self, req, now: float, dropped: bool):
+        if dropped:
+            self.dropped_running += 1
+            self._admitted_at.pop(req.rid, None)
+        else:
+            self.truncated += 1
+            self.on_retire(req.rid, now)
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        # percentiles cover the bounded recent window; `tracked` and the
+        # breach counters are cumulative
+        return {
+            "queue_wait_ms": _percentiles_ms(self.queue_wait_s),
+            "serve_ms": _percentiles_ms(self.serve_s),
+            "breaches": {
+                "dropped_queued": self.dropped_queued,
+                "dropped_running": self.dropped_running,
+                "truncated": self.truncated,
+            },
+            "tracked": self.tracked,
+        }

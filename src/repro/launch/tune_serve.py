@@ -1,1141 +1,54 @@
-"""Batched tuning-as-a-service: slot-based continuous batching for the
-online tuning stage (multi-tenant `LITune.tune`).
+"""Compatibility shim: the tuning service now lives in the layered
+`repro.launch.serving` package (scheduler / pools / O2 runtime / SLO
+layers behind a thin `service.TuningService`).
 
-`launch/serve.py` serves LM decode with fixed slots and per-request
-completion; this driver applies the same shape to tuning requests.  Many
-concurrent requests — heterogeneous `(data_keys, workload, wr_ratio,
-budget_steps)` across both `alex` and `carmi` spaces — fill fixed slots in
-per-space pools; one jitted multi-step program advances all active
-episodes of a pool at once; a request that exhausts its budget (or
-ET-MDP-terminates) frees its slot mid-flight for the next queued request.
+Everything this module used to define is re-exported here — the same
+objects, not copies — so `from repro.launch.tune_serve import
+TuningService` and `python -m repro.launch.tune_serve` keep working
+(tests/test_serving_layers.py pins the identity).  New code should
+import from `repro.launch.serving` directly.
 
-CPU demo:
-    PYTHONPATH=src python -m repro.launch.tune_serve --requests 8 --slots 4
-Multi-core (slots shard over forced host devices):
-    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
-        PYTHONPATH=src python -m repro.launch.tune_serve
-
-Key properties:
-  * **parity** — every slot computes the *same traced per-step program*
-    as the serial `rollout_episode` (`lax.map` over slots, `lax.scan`
-    over steps of the whole map body), so per-request rewards/runtimes
-    are bitwise identical to a one-at-a-time `LITune.tune` with the same
-    PRNG key (tests/test_tune_service.py).
-  * **no recompiles on mixed streams** — compiled executables are cached
-    by `(index_type, array shapes, batch shape, scan length)`; an alex
-    request arriving after a carmi wave reuses the alex program.
-  * **host-side budgets** — `budget_steps` is enforced by the serving
-    loop, not baked into the program: each tick scans
-    K = largest power of two ≤ the smallest remaining budget among active
-    slots, so heterogeneous budgets share a small ladder of executables.
-  * **slot sharding** — when the host platform exposes multiple devices
-    (cores) and they divide the slot count, slots shard across them via
-    `shard_map`; sharding never changes per-slot math, so parity holds.
-  * **continuous tuning (O2)** — with `O2ServiceConfig(enabled=True)` the
-    service stops serving a frozen agent: retired episodes stream their
-    transitions into a per-tenant replay, an offline DDPG learner
-    fine-tunes between ticks, and a divergence monitor (KS on key
-    quantiles + W/R drift, observed at admission) triggers assessments
-    that hot-swap pool params when the offline model wins.  The swap is a
-    pure buffer update — params are program *inputs*, so the K-ladder
-    compiled-program cache never re-traces.  A single-tenant strict-order
-    stream makes the same swap decisions as
-    `core.o2.O2System.tune_window` at any budget
-    (tests/test_o2_service.py).
-  * **near-zero O2 serving tax** — the three O2 phases stay off the
-    serving loop's critical path: (1) transition capture is
-    device-resident — each tick appends its transition view into per-slot
-    capture buffers and retirement moves the episode into a
-    `DeviceSequenceReplay` ring without the wide fields ever crossing to
-    the host, so an O2 tick fetches exactly the five narrow fields the
-    frozen service fetches; (2) offline fine-tuning is one scanned,
-    state-donating program dispatched asynchronously after a retiring
-    tick, with backpressure — a round is skipped (and counted) while the
-    previous round is still executing, so the learner trails the server
-    instead of stalling it; (3) divergence-triggered assessments run as
-    pooled episodes through the *same* cached K-ladder step programs
-    (zero-noise inputs, full slot width), and their verdicts are drained
-    when ready — a tick later under load — rather than awaited.
-    `strict_order` mode keeps the fully synchronous serial-equivalent
-    interleaving for parity.
+Note the one thing a re-export cannot preserve: monkeypatching *this*
+module's attributes (e.g. `tune_serve._pooled_best`) only rebinds the
+shim's name — the serving layers resolve their internals from their own
+module globals.  Patch the owning module instead
+(`repro.launch.serving.o2_runtime._pooled_best`,
+`repro.launch.serving.programs._step_program`, ...), as the test suite
+now does.
 """
-from __future__ import annotations
-
-import argparse
-import dataclasses
-import time
-from collections import deque
-from functools import lru_cache
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.core import networks as nets
-from repro.runtime.mesh_utils import shard_map_compat
-from repro.core.etmdp import batched_episode_scan, transition_view
-from repro.core.litune import attach_best_params
-from repro.core.o2 import (DivergenceMonitor, O2Config, copy_state,
-                           make_replay, offline_finetune)
-from repro.core.parallel import mapped_reset
-from repro.core.replay import _pow2_pad, donate_argnums, wide_dim
-from repro.index import env as E
-
-# Buffer donation (the slot carry, capture buffers, learner state — the
-# largest live trees, all rebound every tick) is gated off the CPU
-# backend via `repro.core.replay.donate_argnums`: the CPU PJRT donation
-# hand-off synchronizes with pending readers (~6-70 ms per dispatch,
-# measured on jax 0.4.37) for no memory win.  The helper probes the
-# backend lazily at program-build time, so importing this module never
-# initializes jax before the operator's XLA_FLAGS are set.
-# tests/test_o2_service.py asserts the donating programs stay
-# re-trace-free either way.
-
-
-@dataclasses.dataclass
-class TuneRequest:
-    """One tuning-as-a-service request (the unit of multi-tenancy)."""
-    rid: int
-    data_keys: jax.Array
-    workload: dict                 # {"reads": [r], "inserts": [i]}
-    wr_ratio: float
-    budget_steps: int
-    index_type: str = "alex"       # alex | carmi
-    key: jax.Array | None = None   # episode/window PRNG key (parity handle)
-    noise_scale: float = 0.05
-
-
-@dataclasses.dataclass(frozen=True)
-class O2ServiceConfig:
-    """Continuous tuning inside the service (the O2 loop, per tenant)."""
-    enabled: bool = False
-    o2: O2Config = O2Config()
-    # offline fine-tune steps dispatched after each tick that retires at
-    # least one of the tenant's episodes (ticks with no fresh transitions
-    # skip the learner: re-sampling an unchanged replay would add latency
-    # to every tick of a long episode and desync the per-window update
-    # count from the serial O2 loop).  None -> the O2Config's per-window
-    # count, which makes a strict-order single-tenant stream
-    # decision-identical to `O2System.tune_window` at any budget.  In
-    # concurrent (non-strict) mode the count is a per-tick *cap*: a round
-    # is skipped — and counted in `stats()["o2"][...]["finetune_skipped"]`
-    # — while the previous round is still executing, so the learner
-    # trails the server instead of serializing with it
-    offline_updates_per_tick: int | None = None
-    # one window in flight at a time, in submission order: trades the
-    # service's cross-pool concurrency for the serial O2 loop's exact
-    # observe->tune->assess interleaving (the parity mode LITune.stream
-    # uses when routed through the service).  Strict mode also awaits
-    # every assessment verdict inside its window's tick; concurrent mode
-    # drains verdicts when their device work completes (at the latest in
-    # `flush_o2`), so a hot-swap may land one or more ticks after the
-    # window that earned it
-    strict_order: bool = False
-    replay_seed: int = 0
-
-
-class _TenantO2:
-    """Per-tenant continuous-tuning state: the divergence monitor, the
-    device-resident replay ring the offline learner samples, and the
-    offline DDPG state that hot-swaps into the tenant's pools on
-    divergence + win.  The learner state and its update program live on
-    the service's O2 annex device when the host provides one, so their
-    execution never queues in front of the serving mesh's fetches; the
-    ring stays on the serving side (its writers and sampling readers run
-    in the post-fetch window when that queue is empty), with sampled
-    batches hopped to the annex per round."""
-
-    def __init__(self, tuner, svc_cfg: O2ServiceConfig, annex=None,
-                 ring_device=None):
-        self.cfg = svc_cfg.o2
-        self.net_cfg = tuner.cfg.net_cfg()
-        self.ddpg_cfg = tuner.cfg.ddpg
-        self.et_cfg = tuner.cfg.et_cfg()
-        self.env_cfg = tuner.cfg.env_cfg()
-        self.annex = annex
-        self.monitor = DivergenceMonitor(self.cfg)
-        # the ring lives on the serving side (its writers and sampling
-        # readers run there, right after the tick fetch when the queue is
-        # empty); only the learner state and its update program live on
-        # the annex, with sampled batches hopped across per round
-        self.replay = make_replay(self.net_cfg, self.ddpg_cfg, self.env_cfg,
-                                  seed=svc_cfg.replay_seed, device=True,
-                                  place_on=ring_device)
-        # real copies (not aliases): the scanned fine-tune program donates
-        # its input state, so the tuner's pretrained tree and the online
-        # model must own their buffers
-        self.online = copy_state(tuner.state)
-        self.offline = self._place(copy_state(tuner.state))
-        # the assessment-facing snapshot: params of the latest *completed*
-        # fine-tune round (concurrent mode never blocks on a pending one)
-        self.ready_params = self._place(copy_state(tuner.state["params"]))
-        self.offline_updates = 0
-        self.finetune_skipped = 0
-        self._inflight = None       # marker array of the pending round
-        self._round_dirty = False   # a round completed but isn't published
-        self.swaps = 0
-        self.swap_times_s: list[float] = []
-
-    def _place(self, tree):
-        return tree if self.annex is None else jax.device_put(tree,
-                                                              self.annex)
-
-    def learner_free(self) -> bool:
-        return self._inflight is None or bool(self._inflight.is_ready())
-
-    def publish_ready(self):
-        """Expose the latest completed round's params to assessments —
-        bounded staleness, never a block on a pending round (the copy
-        also shields them from the next round's donation off-CPU)."""
-        if self._round_dirty and self.learner_free():
-            self.ready_params = copy_state(self.offline["params"])
-            self._round_dirty = False
-
-    def finetune(self, n_updates: int, strict: bool):
-        """Dispatch one offline fine-tune round.  Strict mode always runs
-        it (serial-equivalent update counts); concurrent mode applies
-        backpressure — if the previous round hasn't finished executing,
-        the round is skipped and counted rather than queued behind."""
-        if n_updates <= 0:
-            return
-        if not strict and not self.learner_free():
-            self.finetune_skipped += n_updates
-            return
-        self.offline, done = offline_finetune(
-            self.offline, self.replay, self.net_cfg, self.ddpg_cfg,
-            n_updates, place_on=self.annex)
-        self.offline_updates += done
-        if done:
-            self._inflight = self.offline["updates"]
-            self._round_dirty = True
-
-
-def summarize_episode(env_cfg: E.EnvConfig, r0: float, rewards, runtimes,
-                      actions, costs, terminated: bool) -> dict:
-    """Assemble the per-request summary in the exact `LITune.tune` shape
-    (shared decode via `attach_best_params`)."""
-    summary = {
-        "episode_return": float(np.sum(rewards)),
-        "best_runtime_ns": min(r0, float(np.min(runtimes))),
-        "r0_ns": r0,
-        "violations": float(np.sum(costs)),
-        "terminated_early": terminated,
-        "runtimes": [float(r) for r in runtimes],
-        "actions": [np.asarray(a) for a in actions],
-        "steps": len(runtimes),
-    }
-    summary["best_params"] = attach_best_params(summary, env_cfg)
-    return summary
-
-
-def _pow2_ladder(n: int) -> list[int]:
-    out, k = [], 1
-    while k <= n:
-        out.append(k)
-        k *= 2
-    return out
-
-
-def _admit_key_chain(window_key):
-    """O2System.tune_window's PRNG discipline for one window key: the
-    episode runs on the second split (k_on) and a diverged window's
-    assessment on the second split of the remainder (k_off)."""
-    remainder, k_on = jax.random.split(window_key)
-    k_off = jax.random.split(remainder)[1]
-    return k_on, k_off
-
-
-# one dispatch derives a whole admission wave's episode + assessment keys
-# (vmap over the integer threefry core is bitwise the per-key splits)
-_batched_admit_keys = jax.jit(jax.vmap(_admit_key_chain))
-
-
-def _pooled_best(r0: float, runtimes: np.ndarray) -> float:
-    """Best runtime of one pooled assessment episode — min over the
-    request's step prefix and the default-config runtime, exactly the
-    ``best_runtime_ns`` `core.o2.assess_offline` reports for the same key
-    (the hot-swap comparison's left-hand side, and the seam tests patch
-    to force a verdict)."""
-    return min(r0, float(np.min(runtimes)))
-
-
-@dataclasses.dataclass
-class _PendingAssess:
-    """One dispatched pooled assessment awaiting its verdict: up to
-    2*slots diverged windows of a single tenant, rolled out as one batch
-    through the resident step programs.  Holds only device references —
-    nothing crosses to the host until `ready()` (or a blocking drain).
-    `params` is the exact tree the episodes ran under: a winning verdict
-    promotes *those* params, not whatever the learner has advanced to by
-    drain time."""
-    index_type: str
-    items: list          # [(req, summary, pend)] per occupied slot column
-    r0: object           # [B] device: r_best at reset
-    outs: list           # [(k, runtime_ns [k, B], early [k, B]) ...]
-    params: object       # the judged param tree
-
-    def ready(self) -> bool:
-        return bool(self.outs[-1][1].is_ready())
-
-
-# --------------------------------------------------------------- programs
-# Process-wide program cache: builders are keyed on (device ids, frozen
-# configs, shapes) so every TuningService instance — and every pool within
-# one — shares the same jitted callables and their compiled executables.
-# A per-service dict on top of this would recompile per instance, which is
-# exactly the recompile-on-mixed-streams failure this engine exists to
-# avoid.
-
-def _mesh_for(device_ids: tuple) -> Mesh:
-    by_id = {d.id: d for d in jax.devices()}
-    return Mesh(np.array([by_id[i] for i in device_ids]), ("slots",))
-
-
-@lru_cache(maxsize=None)
-def _step_program(device_ids: tuple, net_cfg, env_cfg, et_cfg, k: int):
-    """K-step slot program: scan over K ticks of the bitwise-stable
-    one-tick map body, slots sharded over the mesh.  The carry is donated
-    — every caller rebinds it to the program's output, and the donation
-    lets XLA write the new carry into the old one's buffers instead of
-    allocating a fresh slot-state tree per tick."""
-    mesh = _mesh_for(device_ids)
-
-    def core(p, c, n):
-        return batched_episode_scan(p, c, n, k, net_cfg, env_cfg, et_cfg,
-                                    False)
-
-    return jax.jit(shard_map_compat(
-        core, mesh, in_specs=(P(), P("slots"), P("slots")),
-        out_specs=(P("slots"), P(None, "slots"))),
-        donate_argnums=donate_argnums(1))
-
-
-@lru_cache(maxsize=None)
-def _reset_program(device_ids: tuple, env_cfg):
-    """Batched admission: reset a wave of episodes in one (sharded when
-    the wave divides the mesh) program."""
-    mesh = _mesh_for(device_ids)
-
-    def core(d, r, i, wr):
-        return mapped_reset(env_cfg, d, {"reads": r, "inserts": i}, wr)
-
-    return jax.jit(shard_map_compat(
-        core, mesh,
-        in_specs=(P("slots"), P("slots"), P("slots"), P("slots")),
-        out_specs=P("slots")))
-
-
-@lru_cache(maxsize=None)
-def _admit_scatter_program(device_ids: tuple, net_cfg, slots: int):
-    """Scatter freshly-reset episodes into their slots (padded entries
-    target slot index B and are dropped)."""
-    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
-
-    def scatter(carry, idx, keys, env_states, obs):
-        def upd(buf, x):
-            return buf.at[idx].set(x, mode="drop")
-        zero_h = nets.zero_hidden(net_cfg, (idx.shape[0],))
-        return {
-            "key": upd(carry["key"], keys),
-            "env": jax.tree.map(upd, carry["env"], env_states),
-            "obs": upd(carry["obs"], obs),
-            "h_a": tuple(upd(c, z) for c, z in zip(carry["h_a"], zero_h)),
-            "h_q": tuple(upd(c, z) for c, z in zip(carry["h_q"], zero_h)),
-            "b_t": upd(carry["b_t"],
-                       jnp.zeros((idx.shape[0],), jnp.float32)),
-        }
-
-    # the carry is rebound to the output on every admission — donate it
-    return jax.jit(scatter, out_shardings=sharded,
-                   donate_argnums=donate_argnums(0))
-
-
-@lru_cache(maxsize=None)
-def _build_carry_program(device_ids: tuple, net_cfg, slots: int):
-    """Initial-wave fast path: construct the whole B-slot carry from a
-    full batch of resets (no scatter)."""
-    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
-
-    def build(keys, env_states, obs):
-        return {
-            "key": keys,
-            "env": env_states,
-            "obs": obs,
-            "h_a": nets.zero_hidden(net_cfg, (slots,)),
-            "h_q": nets.zero_hidden(net_cfg, (slots,)),
-            "b_t": jnp.zeros((slots,), jnp.float32),
-        }
-
-    return jax.jit(build, out_shardings=sharded)
-
-
-def _extract_episode_core(cap, slot, src_idx):
-    """One retired slot's capture rows, compacted to the episode's padded
-    length: the small packed `[Tp, wide]` array the ring ingests (pure
-    gather — indices are inputs)."""
-    return cap[slot][src_idx]
-
-
-@lru_cache(maxsize=None)
-def _extract_episode_program(device_ids: tuple):
-    """Replicated-output extract: every serving device holds the episode
-    rows, so the ring's single-device `_place` resolves to a local copy
-    instead of a cross-device reshard the next gather would wait on."""
-    sharding = NamedSharding(_mesh_for(device_ids), P())
-    return jax.jit(_extract_episode_core, out_shardings=sharding)
-
-
-def _capture_write_core(cap, new, offsets):
-    """Append one tick's transition view into the `[B, H, wide]` packed
-    capture buffer at each slot's episode offset.  The six wide fields
-    pack into one feature axis inside the program (`WIDE_FIELDS` order),
-    so the whole capture path moves one operand per program.  Pure data
-    movement (offsets are array inputs): compiles once per (K, shape)
-    pair and never re-traces on admissions or swaps."""
-    packed = jnp.concatenate(
-        [new[f] for f in ("obs", "next_obs", "h_a", "c_a", "h_q", "c_q")],
-        axis=-1)                                # [K, B, wide]
-    packed = jnp.moveaxis(packed, 0, 1)         # [B, K, wide]
-
-    def one(b, n_, off):
-        return jax.lax.dynamic_update_slice(b, n_, (off, 0))
-
-    return jax.vmap(one)(cap, packed, offsets)
-
-
-_capture_write = jax.jit(_capture_write_core, donate_argnums=donate_argnums(0))
-
-
-class _SlotPool:
-    """Fixed B-slot episode pool for one (index space, array-shape) group.
-
-    Device state: a slot-batched episode carry (sharded over the mesh), a
-    [B] per-slot noise vector, and — under O2 — per-slot `[B, H, ...]`
-    transition capture buffers appended in place by each tick's program
-    outputs.  Host state: which request occupies which slot, steps taken,
-    and the per-step narrow records streamed back each tick.
-    """
-
-    def __init__(self, env_cfg: E.EnvConfig, net_cfg, et_cfg, params,
-                 slots: int, mesh: Mesh, capture: bool = False):
-        self.env_cfg = env_cfg
-        self.net_cfg = net_cfg
-        self.et_cfg = et_cfg
-        self.slots = slots
-        self.mesh = mesh
-        self.capture = capture          # device-resident transitions (O2)
-        self.replicated = NamedSharding(mesh, P())
-        self.sharded = NamedSharding(mesh, P("slots"))
-        self.params = jax.device_put(params, self.replicated)
-        self.carry = None                       # batched pytree, lazy init
-        self.cap = None                         # capture buffers, lazy
-        self.noise = np.zeros((slots,), np.float32)
-        self._noise_dev = None                  # placed copy, lazy
-        self.requests: list[TuneRequest | None] = [None] * slots
-        self.steps_taken = np.zeros((slots,), np.int64)
-        self.records: list[dict | None] = [None] * slots
-        self.r0: list[float] = [0.0] * slots
-
-    @property
-    def n_active(self) -> int:
-        return sum(r is not None for r in self.requests)
-
-    def free_slots(self):
-        return [i for i, r in enumerate(self.requests) if r is None]
-
-    def remaining(self):
-        return [r.budget_steps - int(self.steps_taken[i])
-                for i, r in enumerate(self.requests) if r is not None]
-
-    def noise_dev(self):
-        if self._noise_dev is None:
-            self._noise_dev = jax.device_put(jnp.asarray(self.noise),
-                                             self.sharded)
-        return self._noise_dev
-
-    def capture_tick(self, out: dict):
-        """Append this tick's `[K, B, ...]` transition view into the
-        capture buffers (on the serving mesh, next to their producer and
-        their extract readers) at each slot's pre-tick episode offset.
-        Called after the tick's narrow-field fetch — the serving queue is
-        drained then, so the donated in-place append costs its own
-        microseconds, not a wait — and before `collect` advances
-        `steps_taken`."""
-        if self.cap is None:
-            self.cap = jax.device_put(
-                jnp.zeros((self.slots, self.env_cfg.episode_len,
-                           wide_dim(self.net_cfg.obs_dim,
-                                    self.net_cfg.lstm_hidden)),
-                          jnp.float32), self.sharded)
-        self.cap = _capture_write(self.cap, transition_view(out),
-                                  self.steps_taken.astype(np.int32))
-
-    def mark_admitted(self, slot: int, req: TuneRequest, r0: float):
-        self.noise[slot] = req.noise_scale
-        self._noise_dev = None
-        self.requests[slot] = req
-        self.steps_taken[slot] = 0
-        self.r0[slot] = r0
-        self.records[slot] = {"rewards": [], "runtimes": [], "actions": [],
-                              "costs": []}
-
-    def collect(self, slot: int, out_host: dict, step: int,
-                early: bool = False) -> bool:
-        """Record one step for `slot`; returns whether the episode is done
-        (early exit or budget exhausted).  `done` is computed host-side
-        against the request budget — the program's own horizon flag tracks
-        the pool's horizon_cap, not the per-request episode length."""
-        rec = self.records[slot]
-        rec["rewards"].append(float(out_host["reward"][step, slot]))
-        rec["runtimes"].append(float(out_host["runtime_ns"][step, slot]))
-        rec["actions"].append(np.asarray(out_host["action"][step, slot]))
-        rec["costs"].append(float(out_host["cost"][step, slot]))
-        self.steps_taken[slot] += 1
-        return early or \
-            self.steps_taken[slot] >= self.requests[slot].budget_steps
-
-    def retire(self, slot: int,
-               terminated: bool) -> tuple[TuneRequest, dict, dict | None]:
-        """Free the slot; returns the request, its summary, and — under
-        capture — the episode's narrow fields (`[T]` host arrays) for ring
-        ingestion alongside the slot's device capture rows.  The wide
-        fields never left the device: they ride `self.cap`."""
-        req, rec = self.requests[slot], self.records[slot]
-        summary = summarize_episode(
-            self.env_cfg, self.r0[slot], rec["rewards"], rec["runtimes"],
-            rec["actions"], rec["costs"], terminated)
-        narrow = None
-        if self.capture:
-            T = len(rec["rewards"])
-            done = np.zeros((T,), np.float32)
-            done[-1] = 1.0      # retire only happens at the done step
-            narrow = {
-                "action": np.stack(rec["actions"]).astype(np.float32),
-                "reward": np.asarray(rec["rewards"], np.float32),
-                "done": done,
-                "cost": np.asarray(rec["costs"], np.float32),
-            }
-        self.requests[slot] = None
-        self.records[slot] = None
-        return req, summary, narrow
-
-
-class TuningService:
-    """Multi-tenant tuning engine over pretrained LITune agents.
-
-    `agents` maps index_type -> a `core.litune.LITune` (or anything with
-    `.cfg` and `.state`); a single LITune is accepted and keyed by its own
-    `cfg.index_type`.  Submit requests, then `run()` — per-request
-    summaries come back keyed by request id.
-    """
-
-    def __init__(self, agents, slots: int = 4, horizon_cap: int = 256,
-                 seed: int = 0, o2: O2ServiceConfig | None = None):
-        if not isinstance(agents, dict):
-            agents = {agents.cfg.index_type: agents}
-        self.agents = agents
-        self.slots = slots
-        self.horizon_cap = horizon_cap
-        self.o2 = o2 if o2 is not None else O2ServiceConfig()
-        self.key = jax.random.PRNGKey(seed)
-        devices = jax.devices()
-        # largest device subset whose count divides the slots, so e.g.
-        # slots=4 on a 16-device host shards over 4 devices, and slots=2
-        # on a 3-device host still shards over 2 (the old gcd rule
-        # collapsed that to 1)
-        nserve = max(d for d in range(1, len(devices) + 1)
-                     if slots % d == 0)
-        self.mesh = Mesh(np.array(devices[:nserve]), ("slots",))
-        # O2 annex: the first device beyond the serving mesh, when the
-        # host offers one — the stand-in for the learner executor a
-        # production deployment provisions beside the serving pod.  The
-        # learner state, replay ring, and assessment episodes all run
-        # there, so their device work never queues in front of the
-        # serving mesh's fetches.  With no spare device they share
-        # device 0 (correct, just without the overlap).
-        self.annex = None
-        if self.o2.enabled:
-            self.annex = (devices[nserve] if len(devices) > nserve
-                          else devices[0])
-        self.tenants: dict[str, _TenantO2] = {}
-        if self.o2.enabled:
-            for it, tuner in agents.items():
-                self.tenants[it] = _TenantO2(
-                    tuner, self.o2, annex=self.annex,
-                    ring_device=self.mesh.devices.flat[0])
-        self._o2_pending: dict[int, dict] = {}  # rid -> admission verdict
-        self._assess_backlog: list[tuple] = []  # (pk, req, summary, pend)
-        self._assess_inflight: deque[_PendingAssess] = deque()
-        self._assess_noise: dict[int, jax.Array] = {}  # width -> zeros
-        self.o2_pending_missing = 0     # retired without admission verdict
-        self.assessments = 0            # pooled assessment episodes judged
-        self._phase_ms = {"capture": 0.0, "finetune": 0.0, "assess": 0.0}
-        self.queue: deque[TuneRequest] = deque()
-        self.results: dict[int, dict] = {}
-        self.pools: dict[tuple, _SlotPool] = {}
-        self._programs: dict[tuple, object] = {}   # compiled-program cache
-        self.program_misses = 0
-        self.program_hits = 0
-        self.service_steps = 0
-        self.episode_steps = 0
-        self._next_rid = 0
-
-    # ------------------------------------------------------------ intake
-    def submit(self, data_keys, workload, wr_ratio: float,
-               budget_steps: int | None = None, index_type: str | None = None,
-               noise_scale: float | None = None,
-               deterministic: bool = False, key=None) -> int:
-        """Enqueue one tuning request; returns its request id."""
-        if index_type is None:
-            index_type = next(iter(self.agents))
-        if index_type not in self.agents:
-            raise KeyError(f"no agent for index_type={index_type!r} "
-                           f"(have {sorted(self.agents)})")
-        tuner = self.agents[index_type]
-        if budget_steps is None:
-            budget_steps = tuner.cfg.episode_len
-        if budget_steps > self.horizon_cap:
-            raise ValueError(f"budget_steps={budget_steps} exceeds "
-                             f"horizon_cap={self.horizon_cap}")
-        if budget_steps < 1:
-            raise ValueError(f"budget_steps={budget_steps} must be >= 1")
-        # `deterministic` is served as noise_scale=0.0 through the shared
-        # stochastic program (a per-request static branch would split the
-        # pool's executable): for the tanh-bounded actor, a + 0*noise
-        # clipped to [-1,1] equals the deterministic branch's raw output,
-        # so recommendations match LITune.tune(deterministic=True)
-        if noise_scale is None:
-            noise_scale = 0.0 if deterministic else 0.05
-        if key is None:
-            self.key, key = jax.random.split(self.key)
-        # under O2 the submitted key is the *window* key: admission
-        # batch-splits it into the episode key (k_on) and the assessment
-        # remainder, mirroring O2System.tune_window's PRNG discipline so
-        # decisions line up with the serial O2 loop
-        rid = self._next_rid
-        self._next_rid += 1
-        # numpy (uncommitted) on purpose: admission programs place these
-        # per the pool's mesh; committed jax arrays would pin device 0
-        self.queue.append(TuneRequest(
-            rid=rid, data_keys=np.asarray(data_keys),
-            workload={"reads": np.asarray(workload["reads"]),
-                      "inserts": np.asarray(workload["inserts"])},
-            wr_ratio=float(wr_ratio), budget_steps=int(budget_steps),
-            index_type=index_type, key=key,
-            noise_scale=float(noise_scale)))
-        return rid
-
-    # ------------------------------------------------------------ pools
-    def _pool_key(self, req: TuneRequest) -> tuple:
-        return (req.index_type, int(req.data_keys.shape[0]),
-                int(req.workload["reads"].shape[0]),
-                int(req.workload["inserts"].shape[0]))
-
-    def _pool_for(self, req: TuneRequest) -> _SlotPool:
-        pk = self._pool_key(req)
-        if pk not in self.pools:
-            tuner = self.agents[req.index_type]
-            env_cfg = tuner.cfg.env_cfg().with_episode_len(self.horizon_cap)
-            # under O2, pools serve the tenant's (possibly already swapped)
-            # online model rather than the agent's frozen pretrained state
-            params = (self.tenants[req.index_type].online["params"]
-                      if self.o2.enabled else tuner.state["params"])
-            self.pools[pk] = _SlotPool(env_cfg, tuner.cfg.net_cfg(),
-                                       tuner.cfg.et_cfg(), params,
-                                       self.slots, self.mesh,
-                                       capture=self.o2.enabled)
-        return self.pools[pk]
-
-    # --------------------------------------------------------- programs
-    @property
-    def _device_ids(self) -> tuple:
-        return tuple(d.id for d in self.mesh.devices.flat)
-
-    @property
-    def _annex_ids(self) -> tuple:
-        """Single-device mesh ids for annex-side programs (assessments);
-        identical to the serving ids on one-device hosts, so the program
-        cache is shared there."""
-        return ((self.annex.id,) if self.annex is not None
-                else self._device_ids[:1])
-
-    def _pool_step_program(self, pk: tuple, pool: _SlotPool, k: int):
-        """K-step slot program, cached process-wide on
-        (devices, frozen configs, K) so mixed alex/carmi request streams —
-        and successive service instances — alternate between resident
-        executables, never re-tracing."""
-        prog_key = ("step", pk, self.slots, k)
-        if prog_key not in self._programs:
-            self.program_misses += 1
-            self._programs[prog_key] = _step_program(
-                self._device_ids, pool.net_cfg, pool.env_cfg, pool.et_cfg,
-                k)
-        else:
-            self.program_hits += 1
-        return self._programs[prog_key]
-
-    def _pool_reset_program(self, pool: _SlotPool, width: int):
-        ids = self._device_ids
-        if width % len(ids) != 0:
-            ids = ids[:1]               # narrow wave: single-device mesh
-        return _reset_program(ids, pool.env_cfg)
-
-    # ------------------------------------------------------------ serving
-    def _admit(self, pk: tuple, pool: _SlotPool, admits: list[TuneRequest]):
-        """Admit up to `len(free slots)` requests into `pool` with one
-        batched reset (padded to a power-of-two width)."""
-        free = pool.free_slots()
-        assert len(admits) <= len(free)
-        m = len(admits)
-        widths = sorted(set(_pow2_ladder(self.slots) + [self.slots]))
-        width = next(w for w in widths if w >= m)
-        pad = width - m
-        reqs = admits + [admits[0]] * pad
-        data = np.stack([r.data_keys for r in reqs])
-        reads = np.stack([r.workload["reads"] for r in reqs])
-        ins = np.stack([r.workload["inserts"] for r in reqs])
-        wr = np.asarray([r.wr_ratio for r in reqs], np.float32)
-        keys = np.stack([np.asarray(r.key) for r in reqs])
-        assess_keys = None
-        if self.o2.enabled:
-            # one batched split per wave: window key -> (episode key,
-            # assessment key), the same bits as the serial loop's
-            # per-window jax.random.split chain
-            k_on, k_off = _batched_admit_keys(keys)
-            keys = np.asarray(k_on)
-            assess_keys = np.asarray(k_off)
-        env_states, obs = self._pool_reset_program(pool, width)(
-            data, reads, ins, wr)
-        ndev = len(self._device_ids)
-        if ndev > 1 and width % ndev != 0:
-            # narrow reset ran on a single-device mesh; rehome to host so
-            # the scatter (placed on the pool mesh) accepts it
-            env_states, obs = jax.device_get((env_states, obs))
-
-        if m == self.slots and pool.carry is None:
-            pool.carry = _build_carry_program(
-                self._device_ids, pool.net_cfg, self.slots)(
-                keys, env_states, obs)
-            slots_used = list(range(self.slots))
-        else:
-            if pool.carry is None:
-                # first admission with a partial wave: seed every slot with
-                # episode 0 so idle slots hold valid (ignored) state
-                es0, obs0 = jax.device_get(
-                    (jax.tree.map(lambda x: x[:1], env_states), obs[:1]))
-                full = jax.tree.map(
-                    lambda x: np.broadcast_to(x, (self.slots,)
-                                              + x.shape[1:]),
-                    (es0, obs0))
-                pool.carry = _build_carry_program(
-                    self._device_ids, pool.net_cfg, self.slots)(
-                    np.broadcast_to(keys[:1], (self.slots,)
-                                    + keys.shape[1:]), full[0], full[1])
-            slots_used = free[:m]
-            idx = np.asarray(slots_used + [self.slots] * pad, np.int32)
-            pool.carry = _admit_scatter_program(
-                self._device_ids, pool.net_cfg, self.slots)(
-                pool.carry, idx, keys, env_states, obs)
-        r0s = np.asarray(jax.device_get(env_states["r_best"]))
-        for j, (slot, req) in enumerate(zip(slots_used, admits)):
-            pool.mark_admitted(slot, req, float(r0s[j]))
-            if self.o2.enabled:
-                # each admitted request is one window of the tenant's
-                # stream: observe divergence now (against the reference
-                # distribution), assess after the episode retires
-                tenant = self.tenants[req.index_type]
-                div = tenant.monitor.observe(req.data_keys, req.wr_ratio)
-                self._o2_pending[req.rid] = {
-                    "div": div, "window": tenant.monitor.windows_seen,
-                    "assess_key": assess_keys[j]}
-
-    def _admit_from_queue(self):
-        """Fill free slots with queued requests (FIFO per pool group),
-        one batched reset per pool per tick.  In strict-order O2 mode a
-        single window is admitted at a time, in submission order."""
-        if self.o2.enabled and self.o2.strict_order:
-            if not self.queue or \
-                    any(p.n_active for p in self.pools.values()):
-                return
-            req = self.queue.popleft()
-            self._admit(self._pool_key(req), self._pool_for(req), [req])
-            return
-        per_pool: dict[tuple, list[TuneRequest]] = {}
-        still_queued = deque()
-        free_left: dict[tuple, int] = {}
-        while self.queue:
-            req = self.queue.popleft()
-            pool = self._pool_for(req)
-            pk = self._pool_key(req)
-            if pk not in free_left:
-                free_left[pk] = len(pool.free_slots())
-            if free_left[pk] > 0:
-                per_pool.setdefault(pk, []).append(req)
-                free_left[pk] -= 1
-            else:
-                still_queued.append(req)
-        self.queue = still_queued
-        for pk, admits in per_pool.items():
-            self._admit(pk, self.pools[pk], admits)
-
-    def step(self) -> int:
-        """One service tick: drain any ready assessment verdicts, admit
-        queued requests, advance every active pool by a K-step jitted
-        program, retire finished episodes (streaming their transitions
-        into the tenant's device replay ring), then — under O2 — dispatch
-        the offline learners and the retired windows' assessments.
-        Returns the number of episode-steps of useful work."""
-        if self.o2.enabled:
-            self._drain_assessments()
-        self._admit_from_queue()
-        work = 0
-        retired: list[tuple[TuneRequest, dict]] = []
-        for pk, pool in self.pools.items():
-            if pool.n_active == 0 or pool.carry is None:
-                continue
-            min_rem = min(pool.remaining())
-            k = max(w for w in _pow2_ladder(self.horizon_cap)
-                    if w <= max(min_rem, 1))
-            program = self._pool_step_program(pk, pool, k)
-            pool.carry, out = program(pool.params, pool.carry,
-                                      pool.noise_dev())
-            # only the narrow fields the serving loop reads cross to the
-            # host — the same five the frozen service transfers
-            fields = ["reward", "runtime_ns", "action", "cost", "early"]
-            out_host = jax.device_get({f: out[f] for f in fields})
-            if pool.capture:
-                # wide fields stay on device: append them to the annex
-                # capture buffers (the view is materialized now, so the
-                # hop is a pure copy) before collect() advances offsets
-                t0 = time.perf_counter()
-                pool.capture_tick(out)
-                self._phase_ms["capture"] += \
-                    1e3 * (time.perf_counter() - t0)
-            for slot, req in enumerate(pool.requests):
-                if req is None:
-                    continue
-                for j in range(k):
-                    early = bool(out_host["early"][j, slot])
-                    done = pool.collect(slot, out_host, j, early)
-                    work += 1
-                    if done:
-                        rreq, summary, narrow = pool.retire(slot, early)
-                        self.results[rreq.rid] = summary
-                        if self.o2.enabled and narrow is not None:
-                            # extract the episode's capture rows (small
-                            # gather on the serving mesh) into the ring —
-                            # the wide fields never visit the host
-                            t0 = time.perf_counter()
-                            T = len(narrow["reward"])
-                            src = np.minimum(
-                                np.arange(_pow2_pad(T)), T - 1) \
-                                .astype(np.int32)
-                            values = _extract_episode_program(
-                                self._device_ids)(
-                                pool.cap, np.int32(slot), src)
-                            self.tenants[rreq.index_type].replay \
-                                .add_episode_values(values, T, **narrow)
-                            self._phase_ms["capture"] += \
-                                1e3 * (time.perf_counter() - t0)
-                            retired.append((rreq, summary))
-                        break
-        if self.o2.enabled:
-            self._o2_tick(retired)
-        self.service_steps += 1
-        self.episode_steps += work
-        return work
-
-    # --------------------------------------------------------------- O2
-    def _o2_tick(self, retired: list):
-        """The between-ticks half of the O2 loop.  Strict mode keeps the
-        serial interleaving: fine-tune, assess against the fresh offline
-        tail, await the verdict.  Concurrent mode inverts it for the
-        annex's FIFO: assessments dispatch first (against the last
-        *completed* round's published params, so they never chain behind
-        a pending one), the fine-tune round queues after them, and
-        verdicts land on a later tick's drain."""
-        strict = self.o2.strict_order
-        if strict:
-            t0 = time.perf_counter()
-            self._finetune_retired(retired, strict)
-            self._phase_ms["finetune"] += 1e3 * (time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        for req, summary in retired:
-            tenant = self.tenants[req.index_type]
-            pend = self._o2_pending.pop(req.rid, None)
-            if pend is None:
-                # admitted before O2 tracked this tenant (or replayed
-                # after a config swap): skip the window verdict instead
-                # of raising mid-tick, and count it
-                self.o2_pending_missing += 1
-                continue
-            # annotate the request's result with its window verdict, in
-            # the exact shape O2System.tune_window returns; `swapped`
-            # flips in the drain if the assessment wins
-            summary["divergence"] = pend["div"]
-            summary["swapped"] = False
-            if pend["div"]["diverged"] and \
-                    pend["window"] % tenant.cfg.assess_every == 0:
-                self._assess_backlog.append(
-                    (self._pool_key(req), req, summary, pend))
-        self._pump_assessments()
-        self._phase_ms["assess"] += 1e3 * (time.perf_counter() - t0)
-        if strict:
-            # serial-equivalent interleaving: the verdict (and any swap)
-            # lands before the next window is admitted
-            self._drain_assessments(block=True)
-        else:
-            t0 = time.perf_counter()
-            self._finetune_retired(retired, strict)
-            self._phase_ms["finetune"] += 1e3 * (time.perf_counter() - t0)
-
-    def _pump_assessments(self):
-        """Move backlog windows into pooled assessment dispatches, widest
-        chunks first, with at most two chunks in flight — the annex's
-        admission control.  A saturated annex (many diverged windows,
-        long budgets) grows the backlog instead of the device queue, and
-        `flush_o2` settles whatever is left."""
-        max_width = 2 * self.slots
-        while self._assess_backlog and len(self._assess_inflight) < 2:
-            pk = self._assess_backlog[0][0]
-            chunk = [item for item in self._assess_backlog
-                     if item[0] == pk][:max_width]
-            for item in chunk:
-                self._assess_backlog.remove(item)
-            pool, tenant = self.pools[pk], self.tenants[pk[0]]
-            if not self.o2.strict_order:
-                tenant.publish_ready()
-            self._assess_inflight.append(self._dispatch_assess(
-                pk, pool, tenant, [item[1:] for item in chunk]))
-
-    def _finetune_retired(self, retired: list, strict: bool):
-        for index_type in {req.index_type for req, _ in retired}:
-            n = (self.o2.offline_updates_per_tick
-                 if self.o2.offline_updates_per_tick is not None
-                 else self.tenants[index_type].cfg
-                 .offline_updates_per_window)
-            self.tenants[index_type].finetune(n, strict)
-
-    def _assess_noise_dev(self, width: int):
-        if width not in self._assess_noise:
-            zeros = jnp.zeros((width,), jnp.float32)
-            self._assess_noise[width] = (
-                zeros if self.annex is None
-                else jax.device_put(zeros, self.annex))
-        return self._assess_noise[width]
-
-    def _dispatch_assess(self, pk: tuple, pool: _SlotPool,
-                         tenant: _TenantO2, chunk: list) -> "_PendingAssess":
-        """Launch one pooled assessment on the O2 annex: up to B diverged
-        windows of one tenant reset and roll out as a single batch
-        through the K-ladder step-program cache (zero-noise inputs — the
-        deterministic branch for the tanh-bounded actor), in place of
-        len(chunk) serial `rollout_episode` calls.  Strict mode assesses
-        the offline tail (serial semantics); concurrent mode the
-        published ready params.  Nothing is fetched here; the verdict
-        scalars cross to the host in `_drain_assessments` once the
-        device work completes."""
-        ids = self._annex_ids
-        m = len(chunk)
-        width = _pow2_pad(m)
-        reqs = [item[0] for item in chunk]
-        rpad = reqs + [reqs[0]] * (width - m)
-        data = np.stack([r.data_keys for r in rpad])
-        reads = np.stack([r.workload["reads"] for r in rpad])
-        ins = np.stack([r.workload["inserts"] for r in rpad])
-        wr = np.asarray([r.wr_ratio for r in rpad], np.float32)
-        # the assessment keys were derived in the admission wave's
-        # batched split (same bits as the serial loop's chain)
-        k_offs = np.stack([item[2]["assess_key"] for item in chunk])
-        keys = np.concatenate(
-            [k_offs, np.broadcast_to(k_offs[:1], (width - m, 2))])
-        env_states, obs = _reset_program(ids, pool.env_cfg)(
-            data, reads, ins, wr)
-        carry = _build_carry_program(ids, pool.net_cfg, width)(
-            keys, env_states, obs)
-        params = (tenant.offline["params"] if self.o2.strict_order
-                  else tenant.ready_params)
-        outs = []
-        remaining = max(r.budget_steps for r in reqs)
-        while remaining > 0:
-            k = max(w for w in _pow2_ladder(self.horizon_cap)
-                    if w <= remaining)
-            program = _step_program(ids, pool.net_cfg, pool.env_cfg,
-                                    pool.et_cfg, k)
-            carry, out = program(params, carry,
-                                 self._assess_noise_dev(width))
-            outs.append((k, out["runtime_ns"], out["early"]))
-            remaining -= k
-        return _PendingAssess(pk[0], list(chunk), env_states["r_best"],
-                              outs, params)
-
-    def _drain_assessments(self, block: bool = False):
-        """Judge every in-flight pooled assessment whose device work has
-        completed (all of them when `block`), in dispatch order: fetch
-        the per-slot runtime scalars, compare each window's offline best
-        against its online summary, and hot-swap winners."""
-        while self._assess_inflight:
-            entry = self._assess_inflight[0]
-            if not block and not entry.ready():
-                break
-            self._assess_inflight.popleft()
-            t0 = time.perf_counter()
-            r0s = np.asarray(jax.device_get(entry.r0))
-            rts = np.concatenate(
-                [np.asarray(jax.device_get(r)) for _, r, _ in entry.outs])
-            earls = np.concatenate(
-                [np.asarray(jax.device_get(e)) for _, _, e in entry.outs])
-            for j, (req, summary, pend) in enumerate(entry.items):
-                T = req.budget_steps
-                hit = np.flatnonzero(earls[:T, j])
-                stop = int(hit[0]) + 1 if hit.size else T
-                best = _pooled_best(float(r0s[j]), rts[:stop, j])
-                self.assessments += 1
-                if best < summary["best_runtime_ns"]:
-                    self._hot_swap(entry.index_type, req,
-                                   window=pend["window"] - 1,
-                                   params=entry.params)
-                    summary["swapped"] = True
-            self._phase_ms["assess"] += 1e3 * (time.perf_counter() - t0)
-
-    def _hot_swap(self, index_type: str, req: TuneRequest,
-                  window: int | None = None, params=None):
-        """Promote the offline model to online: a pure buffer update on
-        every pool of the tenant.  Params are program *inputs*, not traced
-        constants, so the K-ladder compiled-program cache is untouched —
-        no re-trace, no re-compile (asserted in tests/test_o2_service.py).
-        `params` is the judged tree an assessment verdict promotes (the
-        concurrent learner may have advanced past it by drain time);
-        None — the strict/serial case and direct callers — promotes the
-        offline tail.  `window` is the retired window whose data
-        re-anchors the monitor (under concurrent serving it may not be
-        the latest one observed)."""
-        t0 = time.perf_counter()
-        tenant = self.tenants[index_type]
-        # real copies: the next fine-tune round donates the offline
-        # tree's buffers, and the promoted online model must outlive that
-        tenant.online = copy_state(tenant.offline)
-        if params is not None:
-            tenant.online["params"] = copy_state(params)
-        for pk, pool in self.pools.items():
-            if pk[0] == index_type:
-                pool.params = jax.device_put(tenant.online["params"],
-                                             pool.replicated)
-        tenant.monitor.re_anchor(req.data_keys, req.wr_ratio,
-                                 window=window)
-        tenant.swaps += 1
-        tenant.swap_times_s.append(time.perf_counter() - t0)
-
-    def flush_o2(self):
-        """Settle all in-flight O2 work: the assessment backlog drains
-        through the annex, every verdict lands (hot-swaps applied), and
-        the trailing offline learner catches up.  Blocks; callers that
-        only need serving results never have to."""
-        if not self.o2.enabled:
-            return
-        while self._assess_backlog or self._assess_inflight:
-            self._pump_assessments()
-            self._drain_assessments(block=True)
-        for tenant in self.tenants.values():
-            jax.block_until_ready(tenant.offline["params"])
-
-    def run(self, max_service_steps: int | None = None) -> dict[int, dict]:
-        """Serve until the queue and every slot drain; returns
-        {rid: summary} for everything completed so far.  In concurrent O2
-        mode, assessment verdicts that are still executing keep trailing:
-        their `swapped` annotations land on `flush_o2` (serving
-        throughput never waits for the annex).  Strict mode settled every
-        verdict inside its window's tick already."""
-        n = 0
-        while self.queue or any(p.n_active for p in self.pools.values()):
-            if max_service_steps is not None and n >= max_service_steps:
-                break
-            self.step()
-            n += 1
-        if self.o2.enabled:
-            self._drain_assessments()
-        return self.results
-
-    def stats(self) -> dict:
-        st = {
-            "service_steps": self.service_steps,
-            "episode_steps": self.episode_steps,
-            "completed": len(self.results),
-            "queued": len(self.queue),
-            "pools": len(self.pools),
-            "devices": len(self.mesh.devices),
-            # per-service binds: first/repeat use of a program key here
-            "program_misses": self.program_misses,
-            "program_hits": self.program_hits,
-            # actual process-wide compiled step programs (shared cache)
-            "programs_resident": _step_program.cache_info().currsize,
-        }
-        if self.o2.enabled:
-            st["o2"] = {
-                it: {"windows": t.monitor.windows_seen,
-                     "diverged": t.monitor.diverged_count,
-                     "swaps": t.swaps,
-                     "offline_updates": t.offline_updates,
-                     "finetune_skipped": t.finetune_skipped,
-                     "replay_size": t.replay.size,
-                     "mean_swap_ms": (1e3 * float(np.mean(t.swap_times_s))
-                                      if t.swap_times_s else 0.0)}
-                for it, t in self.tenants.items()}
-            # host-side time spent driving each O2 phase (dispatch +
-            # verdict fetches — device execution overlaps serving)
-            st["o2"]["phase_ms"] = {k: round(v, 3)
-                                    for k, v in self._phase_ms.items()}
-            st["o2"]["assessments"] = self.assessments
-            st["o2"]["inflight_assessments"] = len(self._assess_inflight)
-            st["o2"]["pending_missing"] = self.o2_pending_missing
-        return st
-
-
-# ---------------------------------------------------------------- driver
-def main():
-    from repro.core.litune import LITune, LITuneConfig
-    from repro.index.workloads import sample_keys, wr_workload
-
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--n-keys", type=int, default=2048)
-    ap.add_argument("--budget", type=int, default=10)
-    ap.add_argument("--index", default="alex", choices=["alex", "carmi"])
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = LITuneConfig(index_type=args.index, episode_len=args.budget,
-                       lstm_hidden=32, mlp_hidden=64)
-    tuner = LITune(cfg, seed=args.seed)
-    service = TuningService(tuner, slots=args.slots, seed=args.seed)
-
-    key = jax.random.PRNGKey(args.seed + 1)
-    for i in range(args.requests):
-        k = jax.random.fold_in(key, i)
-        wr = [0.33, 1.0, 3.0][i % 3]
-        data = sample_keys(k, args.n_keys, "mix")
-        wl, _ = wr_workload(jax.random.fold_in(k, 1), data, wr,
-                            total=args.n_keys, dist="mix")
-        service.submit(data, wl, wr, budget_steps=args.budget)
-
-    t0 = time.time()
-    results = service.run()
-    dt = time.time() - t0
-    for rid in sorted(results):
-        r = results[rid]
-        print(f"req {rid}: default {r['r0_ns']:9.1f} ns/op  best "
-              f"{r['best_runtime_ns']:9.1f}  steps {r['steps']:3d}  "
-              f"violations {r['violations']:.0f}")
-    st = service.stats()
-    print(f"\n{len(results)} requests in {dt:.2f}s "
-          f"({len(results) / max(dt, 1e-9):.2f} req/s)  "
-          f"ticks={st['service_steps']}  devices={st['devices']}  "
-          f"step programs bound={st['program_misses']} "
-          f"reused={st['program_hits']} "
-          f"resident={st['programs_resident']}")
-
+from repro.launch.serving import (  # noqa: F401
+    AdaptiveSlotPolicy,
+    O2Runtime,
+    O2ServiceConfig,
+    Scheduler,
+    SLOConfig,
+    SLOTracker,
+    SlotPolicy,
+    StaticSlotPolicy,
+    summarize_episode,
+    TuneRequest,
+    TuningService,
+    _SlotPool,
+)
+from repro.launch.serving.o2_runtime import (  # noqa: F401
+    _PendingAssess,
+    _TenantO2,
+    _pooled_best,
+)
+from repro.launch.serving.programs import (  # noqa: F401
+    _admit_key_chain,
+    _admit_scatter_program,
+    _batched_admit_keys,
+    _build_carry_program,
+    _capture_write,
+    _extract_episode_program,
+    _mesh_for,
+    _pow2_ladder,
+    _reset_program,
+    _resize_program,
+    _step_program,
+)
+from repro.launch.serving.service import main  # noqa: F401
 
 if __name__ == "__main__":
     main()

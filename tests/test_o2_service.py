@@ -1,4 +1,4 @@
-"""O2 continuous tuning inside the TuningService (launch/tune_serve.py).
+"""O2 continuous tuning inside the TuningService (launch/serving/).
 
 * single-tenant parity — a slots=1 O2-enabled service stream makes the
   same per-window divergence/swap decisions as `O2System.tune_window` on
@@ -17,13 +17,14 @@ import jax
 import numpy as np
 import pytest
 
-import repro.launch.tune_serve as tune_serve
+import repro.launch.serving.o2_runtime as o2_runtime
+import repro.launch.serving.programs as programs
 from repro.core.ddpg import DDPGConfig
 from repro.core.litune import LITune, LITuneConfig
 from repro.core.o2 import DivergenceMonitor, O2Config, O2System
 from repro.core.replay import SequenceReplay
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.tune_serve import O2ServiceConfig, TuningService
+from repro.launch.serving import O2ServiceConfig, TuningService
 
 
 _O2 = O2Config(divergence_threshold=0.05, offline_updates_per_window=2)
@@ -155,7 +156,7 @@ def test_forced_swap_parity_with_tune_window(monkeypatch):
     always_win = lambda *a, **k: {"best_runtime_ns": -1.0}  # noqa: E731
     monkeypatch.setattr(o2mod, "assess_offline", always_win)
     # the service's pooled assessments judge through `_pooled_best`
-    monkeypatch.setattr(tune_serve, "_pooled_best", lambda *a: -1.0)
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
 
     cfg = _cfg()
     budget = 4
@@ -194,7 +195,7 @@ def test_forced_swap_updates_pools_without_retrace(monkeypatch):
     the K-ladder compiled-program cache records zero re-traces across the
     swap (params are program inputs, not closure constants) — and the
     pooled assessments themselves bind zero new step programs."""
-    monkeypatch.setattr(tune_serve, "_pooled_best", lambda *a: -1.0)
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
     cfg = _cfg(safe_rl=False)   # no early exits: every window is one tick
     service = TuningService(LITune(cfg, seed=0), slots=1,
                             o2=O2ServiceConfig(enabled=True, o2=cfg.o2))
@@ -205,7 +206,7 @@ def test_forced_swap_updates_pools_without_retrace(monkeypatch):
     service.step()              # window 0 (reference) completes
     assert rids[0] in service.results
     misses0 = service.program_misses
-    resident0 = tune_serve._step_program.cache_info().currsize
+    resident0 = programs._step_program.cache_info().currsize
 
     results = service.run()     # windows 1..2 diverge -> forced swaps
     service.flush_o2()          # concurrent mode: verdicts settle here
@@ -222,7 +223,7 @@ def test_forced_swap_updates_pools_without_retrace(monkeypatch):
     # zero re-traces across the hot-swap: no new program binds, no new
     # compiled executables
     assert service.program_misses == misses0
-    assert tune_serve._step_program.cache_info().currsize == resident0
+    assert programs._step_program.cache_info().currsize == resident0
     assert service.stats()["o2"]["alex"]["swaps"] == tenant.swaps
 
 
@@ -235,7 +236,7 @@ def test_no_swap_when_offline_loses(monkeypatch):
         calls.append(1)
         return float("inf")
 
-    monkeypatch.setattr(tune_serve, "_pooled_best", losing_best)
+    monkeypatch.setattr(o2_runtime, "_pooled_best", losing_best)
     cfg = _cfg(safe_rl=False)
     tuner = LITune(cfg, seed=0)
     params0 = jax.device_get(tuner.state["params"])
@@ -360,14 +361,14 @@ def test_batched_assessment_matches_serial_assess_offline():
     wkeys = [jax.random.PRNGKey(70 + i) for i in range(len(wins))]
 
     recorded = []
-    real_best = tune_serve._pooled_best
+    real_best = o2_runtime._pooled_best
 
     def recording_best(r0, runtimes):
         best = real_best(r0, runtimes)
         recorded.append(best)
         return best
 
-    tune_serve._pooled_best = recording_best
+    o2_runtime._pooled_best = recording_best
     try:
         service = TuningService(
             LITune(cfg, seed=0), slots=2,
@@ -379,7 +380,7 @@ def test_batched_assessment_matches_serial_assess_offline():
         results = service.run()
         service.flush_o2()
     finally:
-        tune_serve._pooled_best = real_best
+        o2_runtime._pooled_best = real_best
 
     # serial reference: same PRNG chain (k_off is the second split of the
     # window-key remainder), same pretrained params, same windows
@@ -445,13 +446,13 @@ def test_concurrent_o2_backpressure_and_flush():
     # a second drifting wave re-uses every resident program: zero new
     # binds, zero new compiled step programs (the no-retrace guarantee
     # covers the assessment path too)
-    resident0 = tune_serve._step_program.cache_info().currsize
+    resident0 = programs._step_program.cache_info().currsize
     misses0 = service.program_misses
     for d, wl, wr in _windows(4, seed=11):
         service.submit(d, wl, wr, budget_steps=4)
     service.run()
     service.flush_o2()
-    assert tune_serve._step_program.cache_info().currsize == resident0
+    assert programs._step_program.cache_info().currsize == resident0
     assert service.program_misses == misses0
 
 

@@ -1,0 +1,313 @@
+"""The layered serving stack (launch/serving/): adaptive slot
+scheduling, request-level SLOs, per-pool observability, and the
+tune_serve re-export shim.
+
+* adaptive resize — a bursty queue grows its pool and a drained one
+  shrinks it, mid-flight episodes ride through the resize bitwise, and a
+  repeat grow→shrink cycle binds zero new programs (`programs_resident`
+  and the per-service binder both stay flat);
+* SLOs — queued breaches drop before admission, running breaches
+  truncate (best-so-far prefix summary) or drop per request, surviving
+  slots' decisions stay bitwise identical, and `stats()["slo"]` reports
+  queue-wait/serve-time percentiles + breach counts;
+* shim — `repro.launch.tune_serve` re-exports the same objects the
+  `serving` package defines.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.launch.serving.programs as programs
+from repro.core import etmdp
+from repro.core.litune import LITune, LITuneConfig
+from repro.index.workloads import sample_keys, wr_workload
+from repro.launch.serving import (AdaptiveSlotPolicy, SLOConfig,
+                                  StaticSlotPolicy, TuningService)
+from repro.launch.serving.scheduler import Scheduler
+
+
+def _cfg(index_type: str = "alex", **kw) -> LITuneConfig:
+    return LITuneConfig(index_type=index_type, episode_len=4,
+                        lstm_hidden=16, mlp_hidden=32, **kw)
+
+
+def _instances(n: int, n_keys: int = 512, seed: int = 5, wr: float = 1.0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        data = sample_keys(k, n_keys, "mix")
+        wl, _ = wr_workload(jax.random.fold_in(k, 1), data, wr,
+                            total=n_keys, dist="mix")
+        out.append((data, wl))
+    return out
+
+
+def _serial(tuner, cfg, data, wl, wr, budget, key, noise=0.05):
+    return etmdp.rollout_episode(
+        key, tuner.state, cfg.net_cfg(),
+        dataclasses.replace(cfg.env_cfg(), episode_len=budget),
+        cfg.et_cfg(), data, wl, wr, noise_scale=noise)
+
+
+class _FakeClock:
+    """Injectable service clock: time advances only when the test says."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ------------------------------------------------------------------- shim
+def test_tune_serve_shim_reexports_same_objects():
+    """`repro.launch.tune_serve` keeps working and hands out the *same*
+    objects as the layered package — external imports and `python -m
+    repro.launch.tune_serve` stay valid.  (Identity, not patchability:
+    monkeypatching a shim attribute rebinds only the shim's name — patch
+    the owning serving module instead, as tests/test_o2_service.py
+    does.)"""
+    import repro.launch.serving as serving
+    import repro.launch.serving.o2_runtime as o2_runtime
+    import repro.launch.serving.service as service_mod
+    import repro.launch.tune_serve as shim
+
+    assert shim.TuningService is serving.TuningService
+    assert shim.TuningService is service_mod.TuningService
+    assert shim.O2ServiceConfig is serving.O2ServiceConfig
+    assert shim.TuneRequest is serving.TuneRequest
+    assert shim.AdaptiveSlotPolicy is serving.AdaptiveSlotPolicy
+    assert shim.SLOConfig is serving.SLOConfig
+    assert shim._SlotPool is serving._SlotPool
+    assert shim.summarize_episode is serving.summarize_episode
+    # shared process-wide caches and seams are the same objects too
+    assert shim._step_program is programs._step_program
+    assert shim._pooled_best is o2_runtime._pooled_best
+    assert callable(shim.main)
+
+
+# -------------------------------------------------------- adaptive sizing
+def test_adaptive_policy_and_scheduler_hysteresis():
+    """Policy seam: growth tracks demand immediately, shrink waits out
+    the patience window and the active episodes."""
+    policy = AdaptiveSlotPolicy(min_slots=1, max_slots=8, shrink_patience=2)
+    ladder = [1, 2, 4, 8, 16]
+    assert policy.desired_slots(slots=1, active=0, queued=0,
+                                ladder=ladder) == 1
+    assert policy.desired_slots(slots=1, active=1, queued=2,
+                                ladder=ladder) == 4
+    assert policy.desired_slots(slots=4, active=0, queued=100,
+                                ladder=ladder) == 8      # capped
+
+    sched = Scheduler(policy)
+
+    class _Stub:
+        slots, n_active = 4, 1
+
+    pool = _Stub()
+    # growth is immediate
+    assert sched.plan_resize(("p",), pool, queued=7, ladder=ladder) == 8
+    # shrink needs `shrink_patience` consecutive low-demand ticks
+    assert sched.plan_resize(("p",), pool, queued=0, ladder=ladder) is None
+    assert sched.plan_resize(("p",), pool, queued=0, ladder=ladder) == 1
+    # a demand spike resets the streak
+    assert sched.plan_resize(("p",), pool, queued=0, ladder=ladder) is None
+    assert sched.plan_resize(("p",), pool, queued=5, ladder=ladder) == 8
+    assert sched.plan_resize(("p",), pool, queued=0, ladder=ladder) is None
+
+
+def test_adaptive_resize_bitwise_and_zero_retrace():
+    """A pool grows mid-flight under a burst and shrinks when the queue
+    drains; the episode that rode through both resizes stays bitwise
+    identical to its serial rollout, and a second identical grow→shrink
+    cycle binds zero new step programs (`programs_resident` flat, binder
+    misses flat — the K-ladder cache makes reshaping free)."""
+    cfg = _cfg(safe_rl=False)           # no early exits: deterministic
+    tuner = LITune(cfg, seed=0)
+    policy = AdaptiveSlotPolicy(min_slots=1, max_slots=4, shrink_patience=1)
+    service = TuningService(tuner, slots=1, policy=policy)
+    budget = 3                          # K2 + K1: episodes span two ticks
+
+    def one_cycle(seed):
+        inst = _instances(5, seed=seed)
+        keys = [jax.random.fold_in(jax.random.PRNGKey(900 + seed), i)
+                for i in range(5)]
+        rid0 = service.submit(*inst[0], 1.0, budget_steps=budget,
+                              key=keys[0])
+        service.step()                  # solo: pool stays at 1, K2 tick
+        pool = next(iter(service.pools.values()))
+        assert pool.slots == 1 and pool.steps_taken[0] == 2
+        rids = [service.submit(*inst[i], 1.0, budget_steps=budget,
+                               key=keys[i]) for i in range(1, 4)]
+        service.step()                  # burst: grow 1->4 MID-FLIGHT
+        assert pool.slots == 4
+        assert rid0 in service.results  # rid0 finished its K1 tick
+        results = service.run()         # drain the burst
+        rid4 = service.submit(*inst[4], 1.0, budget_steps=budget,
+                              key=keys[4])
+        results = service.run()         # low demand: shrink 4->1
+        assert pool.slots == 1
+        assert pool.resizes["grow"] >= 1 and pool.resizes["shrink"] >= 1
+        # every episode — including the one that spanned the grow and the
+        # one admitted after the shrink — matches its serial rollout
+        for rid, key, (data, wl) in zip([rid0] + rids + [rid4], keys, inst):
+            want = _serial(tuner, cfg, data, wl, 1.0, budget, key)
+            got = results[rid]
+            assert got["steps"] == want["steps"]
+            assert got["runtimes"] == want["runtimes"]
+            assert got["episode_return"] == want["episode_return"]
+
+    one_cycle(seed=21)
+    resident0 = programs._step_program.cache_info().currsize
+    misses0 = service.program_misses
+    resize_traces0 = programs._resize_program(
+        service._device_ids)._cache_size()
+    one_cycle(seed=22)                  # same widths, fresh requests
+    assert programs._step_program.cache_info().currsize == resident0
+    assert service.program_misses == misses0
+    # the resize gathers re-used their traced shapes too
+    assert programs._resize_program(
+        service._device_ids)._cache_size() == resize_traces0
+
+    st = service.stats()
+    pk = next(iter(st["per_pool"]))
+    assert st["per_pool"][pk]["resizes"]["grow"] >= 2
+    assert st["per_pool"][pk]["resizes"]["shrink"] >= 2
+    assert st["scheduler"]["policy"] == "adaptive"
+    assert st["scheduler"]["resize_events"] >= 4
+
+
+# ------------------------------------------------------------------- SLOs
+def test_deadline_truncate_preserves_survivors():
+    """A running request past its deadline is truncated — its summary is
+    the bitwise prefix of the no-deadline run — while the surviving
+    slot's decisions stay bitwise identical to a service with no
+    deadlines at all (slots are independent lanes)."""
+    cfg = _cfg(safe_rl=False)
+    tuner = LITune(cfg, seed=0)
+    (d0, w0), (d1, w1) = _instances(2)
+    k0, k1 = jax.random.PRNGKey(300), jax.random.PRNGKey(301)
+
+    ref = TuningService(tuner, slots=2)
+    ra = ref.submit(d0, w0, 1.0, budget_steps=12, key=k0)
+    rb = ref.submit(d1, w1, 1.0, budget_steps=16, key=k1)
+    ref_results = ref.run()
+
+    clock = _FakeClock()
+    service = TuningService(tuner, slots=2, clock=clock)
+    ta = service.submit(d0, w0, 1.0, budget_steps=12, key=k0,
+                        deadline_s=5.0, on_breach="truncate")
+    tb = service.submit(d1, w1, 1.0, budget_steps=16, key=k1)
+    service.step()                      # K8 tick: A at 8/12, B at 8/16
+    clock.t = 10.0                      # A's deadline (5s) passes
+    results = service.run()
+
+    got_a, want_a = results[ta], ref_results[ra]
+    assert got_a["slo_breached"] and got_a["truncated"]
+    assert got_a["steps"] == 8          # truncated at the breaching tick
+    assert got_a["runtimes"] == want_a["runtimes"][:8]   # bitwise prefix
+    # the survivor is bitwise untouched by its neighbor's truncation
+    got_b, want_b = results[tb], ref_results[rb]
+    assert got_b["steps"] == want_b["steps"] == 16
+    assert got_b["runtimes"] == want_b["runtimes"]
+    assert "slo_breached" not in got_b
+
+    slo = service.stats()["slo"]
+    assert slo["breaches"] == {"dropped_queued": 0, "dropped_running": 0,
+                               "truncated": 1}
+    assert slo["tracked"] == 2
+    assert slo["serve_ms"]["p99"] >= slo["serve_ms"]["p50"] >= 0.0
+
+
+def test_deadline_drop_running_and_queued():
+    """`on_breach="drop"` abandons a breached running episode (the result
+    records only the drop), and a request whose deadline lapses while
+    queued is dropped before ever occupying a slot."""
+    cfg = _cfg(safe_rl=False)
+    tuner = LITune(cfg, seed=0)
+    (d0, w0), (d1, w1), (d2, w2) = _instances(3)
+
+    clock = _FakeClock()
+    service = TuningService(tuner, slots=1, clock=clock)
+    r_run = service.submit(d0, w0, 1.0, budget_steps=12,
+                           deadline_s=5.0, on_breach="drop")
+    r_q = service.submit(d1, w1, 1.0, budget_steps=4, deadline_s=5.0)
+    r_ok = service.submit(d2, w2, 1.0, budget_steps=4)
+    service.step()                      # r_run runs its K8 tick
+    clock.t = 10.0                      # both deadlines lapse
+    results = service.run()
+
+    assert results[r_run] == {"dropped": True, "slo_breached": True,
+                              "steps": 8, "terminated_early": False}
+    assert results[r_q]["dropped"] and results[r_q]["steps"] == 0
+    assert results[r_ok]["steps"] == 4 and "dropped" not in results[r_ok]
+    slo = service.stats()["slo"]
+    assert slo["breaches"]["dropped_running"] == 1
+    assert slo["breaches"]["dropped_queued"] == 1
+    assert slo["breaches"]["truncated"] == 0
+
+
+def test_slo_defaults_and_validation():
+    cfg = _cfg(safe_rl=False)
+    tuner = LITune(cfg, seed=0)
+    clock = _FakeClock()
+    service = TuningService(tuner, slots=1, clock=clock,
+                            slo=SLOConfig(default_deadline_s=5.0,
+                                          on_breach="drop"))
+    (d0, w0), = _instances(1)
+    rid = service.submit(d0, w0, 1.0, budget_steps=12)
+    req = service.queue[0]
+    assert req.deadline_s == 5.0 and req.on_breach == "drop"
+    with pytest.raises(ValueError, match="on_breach"):
+        service.submit(d0, w0, 1.0, budget_steps=4, on_breach="retry")
+    service.step()
+    clock.t = 6.0
+    results = service.run()
+    assert results[rid]["dropped"]
+
+
+# ----------------------------------------------------------- observability
+def test_stats_per_pool_breakdowns_and_slo_always_present():
+    """stats() exposes per-pool slots/occupancy/resize counters (the
+    adaptive scheduler's observability) and the SLO block even on a
+    plain static frozen service."""
+    agents = {"alex": LITune(_cfg("alex"), seed=0),
+              "carmi": LITune(_cfg("carmi"), seed=1)}
+    service = TuningService(agents, slots=2)
+    inst = _instances(4, n_keys=512)
+    for i, (d, w) in enumerate(inst):
+        service.submit(d, w, 1.0, budget_steps=2,
+                       index_type="alex" if i % 2 == 0 else "carmi")
+    results = service.run()
+    assert len(results) == 4
+
+    st = service.stats()
+    assert st["pools"] == 2             # the historical count, unchanged
+    assert len(st["per_pool"]) == 2
+    for pk, entry in st["per_pool"].items():
+        assert entry["slots"] == 2 and entry["active"] == 0
+        assert entry["peak_slots"] == 2
+        assert entry["resizes"] == {"grow": 0, "shrink": 0}
+    assert st["scheduler"] == {"policy": "static", "resize_events": 0}
+    slo = st["slo"]
+    assert set(slo) == {"queue_wait_ms", "serve_ms", "breaches", "tracked"}
+    assert slo["tracked"] == 4
+    assert set(slo["queue_wait_ms"]) == {"p50", "p95", "p99"}
+    assert slo["breaches"] == {"dropped_queued": 0, "dropped_running": 0,
+                               "truncated": 0}
+
+
+def test_static_policy_never_resizes():
+    """The default policy is the PR 1–3 behavior: pool widths are fixed
+    whatever the queue does."""
+    tuner = LITune(_cfg(safe_rl=False), seed=0)
+    service = TuningService(tuner, slots=1, policy=StaticSlotPolicy())
+    for d, w in _instances(5):
+        service.submit(d, w, 1.0, budget_steps=2)
+    service.run()
+    pool = next(iter(service.pools.values()))
+    assert pool.slots == 1
+    assert pool.resizes == {"grow": 0, "shrink": 0}

@@ -1,4 +1,4 @@
-"""Batched tuning-as-a-service engine (launch/tune_serve.py):
+"""Batched tuning-as-a-service engine (launch/serving/):
 
 * batched-vs-serial parity — a B-slot `TuningService` produces bitwise
   identical per-request runtimes/rewards to B independent
@@ -18,7 +18,7 @@ import pytest
 from repro.core import etmdp
 from repro.core.litune import LITune, LITuneConfig, attach_best_params
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.tune_serve import TuningService
+from repro.launch.serving import TuningService
 
 
 def _cfg(index_type: str, **kw) -> LITuneConfig:
