@@ -10,9 +10,12 @@ The guarded number is picked by the artifact's ``benchmark`` field:
 
   o2_serve  — the o2-vs-frozen throughput *ratio*;
   slo_serve — the static-over-adaptive p95 queue-wait *ratio* (>1 means
-              adaptive slot scheduling beats static pools under bursts).
+              adaptive slot scheduling beats static pools under bursts);
+  o2_annex  — the assessment-phase *speedup* of the widest annex slice
+              over the 1-device serial annex (>1 means pooled
+              assessments actually shard over the slice).
 
-Both are dimensionless on purpose, so the committed baselines survive
+All are dimensionless on purpose, so the committed baselines survive
 runner-hardware drift that absolute req/s or milliseconds would not.
 The gate fails when the current ratio falls more than
 ``--max-regression`` (relative) below the baseline's; a faster ratio
@@ -37,10 +40,15 @@ def slo_ratio(doc: dict) -> float:
     return float(doc["p95_wait_static_over_adaptive"])
 
 
+def annex_speedup(doc: dict) -> float:
+    return float(doc["assess_speedup"])
+
+
 # benchmark name -> (description of the guarded ratio, extractor)
 METRICS = {
     "o2_serve": ("o2-vs-frozen ratio", o2_ratio),
     "slo_serve": ("static/adaptive p95 queue-wait ratio", slo_ratio),
+    "o2_annex": ("annex-slice assessment speedup", annex_speedup),
 }
 
 

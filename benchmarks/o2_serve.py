@@ -32,16 +32,37 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
-# expose every core as an XLA host device — plus one spare that the O2
-# service adopts as its learner/assessment annex — before jax initializes
-# (no-op if the operator already set the flag)
+
+def _argv_value(flag: str, default: str) -> str:
+    """Peek one CLI value before argparse (and before jax initializes —
+    the sweep's annex widths size the forced device count).  Accepts
+    ``--flag value`` and ``--flag=value``; like argparse, the last
+    occurrence wins.  main() cross-checks the peek against argparse and
+    refuses forms the peek cannot see (abbreviated flags)."""
+    value = default
+    for i, arg in enumerate(sys.argv):
+        if arg == flag and i + 1 < len(sys.argv):
+            value = sys.argv[i + 1]
+        elif arg.startswith(flag + "="):
+            value = arg.split("=", 1)[1]
+    return value
+
+
+_ANNEX_WIDTHS = sorted(int(w) for w in
+                       _argv_value("--annex-width", "").split(",") if w)
+
+# expose every core as an XLA host device — plus the spare(s) the O2
+# service adopts as its learner/assessment annex slice — before jax
+# initializes (no-op if the operator already set the flag)
 if "xla_force_host_platform_device_count" not in os.environ.get(
         "XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={os.cpu_count() + 1}")
+        + " --xla_force_host_platform_device_count="
+        + str(os.cpu_count() + max(_ANNEX_WIDTHS, default=1)))
 
 import jax
 import numpy as np
@@ -50,7 +71,9 @@ from repro.core.ddpg import DDPGConfig
 from repro.core.litune import LITune, LITuneConfig
 from repro.core.o2 import O2Config
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.serving import O2ServiceConfig, TuningService
+from repro.launch.serving import (DeviceSlice, O2ServiceConfig,
+                                  ServingTopology, TuningService)
+from repro.launch.serving.topology import _largest_divisor_leq
 
 
 def make_requests(n: int, n_keys: int, seed: int = 1):
@@ -70,8 +93,8 @@ def make_requests(n: int, n_keys: int, seed: int = 1):
 
 
 def bench_once(tuner: LITune, requests, budget: int, slots: int,
-               o2: O2ServiceConfig | None):
-    service = TuningService(tuner, slots=slots, o2=o2)
+               o2: O2ServiceConfig | None, topology=None):
+    service = TuningService(tuner, slots=slots, o2=o2, topology=topology)
     t0 = time.perf_counter()
     for data, wl, wr in requests:
         service.submit(data, wl, wr, budget_steps=budget, noise_scale=0.02)
@@ -95,6 +118,49 @@ def bench(mk_tuner, requests, budget, slots, o2, repeats: int):
     return best, service
 
 
+def annex_sweep(mk_tuner, requests, budget: int, slots: int,
+                o2_cfg: O2ServiceConfig, widths: list[int],
+                repeats: int) -> list[dict]:
+    """Serve the same O2 stream once per annex slice width, keeping the
+    serving slice fixed, and report the host-side assessment phase time
+    (dispatch + blocking verdict fetches — the part of the O2 tax the
+    annex slice actually absorbs).  Widths shard the pooled assessment
+    waves across 1..w annex devices; per-lane math is identical, so the
+    verdicts are bitwise equal and the only thing that moves is time.
+    Min across `repeats` runs per width (noise floor)."""
+    import jax
+    ids = tuple(d.id for d in jax.devices())
+    # the serving slice stays fixed across the sweep (the comparison is
+    # annex-width-only): the largest divisor of `slots` that leaves the
+    # widest requested annex room
+    serve_n = _largest_divisor_leq(slots, len(ids) - max(widths))
+    if serve_n + max(widths) > len(ids):
+        raise SystemExit(
+            f"annex sweep needs {serve_n}+{max(widths)} devices but the "
+            f"host exposes {len(ids)} — unset any operator "
+            f"xla_force_host_platform_device_count or lower the widths")
+    serve = DeviceSlice(ids[:serve_n], name="serve")
+    rows = []
+    for w in widths:
+        topo = ServingTopology(
+            (serve,), DeviceSlice(ids[serve_n:serve_n + w], name="annex"),
+            name=f"host+annex{w}")
+        # one warm pass binds this width's programs outside the timing
+        bench_once(mk_tuner(), requests, budget, slots, o2_cfg,
+                   topology=topo)
+        best_assess, best_rps = float("inf"), 0.0
+        for _ in range(repeats):
+            rps, svc = bench_once(mk_tuner(), requests, budget, slots,
+                                  o2_cfg, topology=topo)
+            st = svc.stats()["o2"]
+            best_assess = min(best_assess, st["phase_ms"]["assess"])
+            best_rps = max(best_rps, rps)
+        rows.append({"annex_width": w, "assess_ms": round(best_assess, 3),
+                     "req_per_s": best_rps,
+                     "assessments": st["assessments"]})
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--requests", type=int, default=12)
@@ -110,6 +176,11 @@ def main():
     ap.add_argument("--swap-reps", type=int, default=20,
                     help="direct hot-swap latency measurements")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--annex-width", default=None, metavar="W1,W2,...",
+                    help="sweep the O2 annex slice width instead of the "
+                         "frozen-vs-o2 compare: serve the same stream "
+                         "once per width and report the assessment "
+                         "phase_ms scaling (JSON artifact: o2_annex)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as a JSON artifact (CI gate)")
     args = ap.parse_args()
@@ -126,6 +197,47 @@ def main():
         offline_updates_per_tick=args.updates_per_tick)
     requests = make_requests(args.requests, args.n_keys, seed=args.seed + 1)
     mk = lambda: LITune(cfg, seed=args.seed)  # noqa: E731
+
+    if args.annex_width:
+        widths = sorted(int(w) for w in args.annex_width.split(",") if w)
+        if widths != _ANNEX_WIDTHS:
+            # the pre-jax peek sized the forced device count; if argparse
+            # saw something else (abbreviated flag, exotic quoting), the
+            # device layout would not match the sweep — refuse instead
+            raise SystemExit(
+                f"--annex-width must be passed as the exact flag: the "
+                f"pre-jax device sizing saw {_ANNEX_WIDTHS or 'nothing'} "
+                f"but argparse parsed {widths}")
+        assert widths, "--annex-width needs at least one width"
+        rows = annex_sweep(mk, requests, args.budget, args.slots, o2_cfg,
+                           widths, args.repeats)
+        base = rows[0]["assess_ms"]
+        speedup = base / max(rows[-1]["assess_ms"], 1e-9)
+        print(f"# o2_annex  requests={args.requests} budget={args.budget} "
+              f"n_keys={args.n_keys} slots={args.slots} "
+              f"assess_every={args.assess_every} repeats={args.repeats} "
+              f"devices={len(jax.devices())} widths={widths}")
+        print("benchmark,annex_width,slots,assess_ms,speedup_vs_w"
+              + str(widths[0]))
+        for r in rows:
+            print(f"o2_annex,{r['annex_width']},{args.slots},"
+                  f"{r['assess_ms']:.2f},"
+                  f"{base / max(r['assess_ms'], 1e-9):.2f}")
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"benchmark": "o2_annex",
+                           "config": {"requests": args.requests,
+                                      "budget": args.budget,
+                                      "n_keys": args.n_keys,
+                                      "slots": args.slots,
+                                      "assess_every": args.assess_every,
+                                      "repeats": args.repeats,
+                                      "widths": widths,
+                                      "devices": len(jax.devices())},
+                           "rows": rows,
+                           "assess_speedup": speedup}, f, indent=2)
+            print(f"# wrote {args.json}")
+        return
 
     # warm both paths so compile time is excluded (programs are cached
     # process-wide; a real service binds them once at startup)

@@ -18,6 +18,12 @@ replayed against two services:
              per resize, zero program re-traces) and shrinks it back in
              the gaps.
 
+``--policy edf`` appends a third row: `EDFSlotPolicy` admission —
+tight-deadline requests enter free slots first and requests whose
+budget provably cannot fit their deadline at the measured tick rate are
+pre-dropped from the queue (arm ``--deadline-ms`` so deadlines exist;
+the `pre_dropped` breach count shows the feasibility cut working).
+
 Reported per mode: p50/p95/p99 queue-wait and serve-time from
 `stats()["slo"]`, plus breach counts when `--deadline-ms` arms
 per-request deadlines.  The headline number — static p95 queue-wait over
@@ -47,7 +53,8 @@ import numpy as np
 
 from repro.core.litune import LITune, LITuneConfig
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.serving import AdaptiveSlotPolicy, TuningService
+from repro.launch.serving import (AdaptiveSlotPolicy, EDFSlotPolicy,
+                                  TuningService)
 
 
 def make_arrivals(n_bursts: int, burst_mean: int, gap_s: float,
@@ -131,6 +138,9 @@ def main():
                          "size: wider pools pay idle-lane compute)")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="arm per-request deadlines (breaches reported)")
+    ap.add_argument("--policy", default=None, choices=["edf"],
+                    help="append an EDF admission row (earliest deadline "
+                         "first + feasibility pre-drops)")
     ap.add_argument("--repeats", type=int, default=2,
                     help="runs per mode; best p95 queue-wait is reported")
     ap.add_argument("--seed", type=int, default=0)
@@ -148,6 +158,7 @@ def main():
     static_policy = lambda: None  # noqa: E731  (service default: static)
     adaptive_policy = lambda: AdaptiveSlotPolicy(  # noqa: E731
         min_slots=args.slots, max_slots=args.max_slots, shrink_patience=2)
+    edf_policy = lambda: EDFSlotPolicy()  # noqa: E731
 
     def run_static():
         return bench_mode(mk, arrivals, args.budget, args.slots,
@@ -156,6 +167,10 @@ def main():
     def run_adaptive():
         return bench_mode(mk, arrivals, args.budget, args.slots,
                           adaptive_policy, deadline_s, args.repeats)
+
+    def run_edf():
+        return bench_mode(mk, arrivals, args.budget, args.slots,
+                          edf_policy, deadline_s, args.repeats)
 
     # warm both modes with the full trace so every pool width's programs
     # are resident before the timed runs (a real service binds them at
@@ -167,8 +182,11 @@ def main():
     bench_mode(mk, arrivals, args.budget, args.slots, adaptive_policy,
                deadline_s, 2)
 
+    modes = [("static", run_static), ("adaptive", run_adaptive)]
+    if args.policy == "edf":
+        modes.append(("edf", run_edf))
     rows = []
-    for mode, run in (("static", run_static), ("adaptive", run_adaptive)):
+    for mode, run in modes:
         best = run()
         slo = best["slo"]
         st = best["stats"]

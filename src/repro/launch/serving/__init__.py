@@ -18,6 +18,7 @@ Multi-core (slots shard over forced host devices):
 
 Layers (one module each, composed by `service.TuningService`):
 
+    topology.py    device placement: pool slices, annex slice, ring home
     scheduler.py   admission queue, request deadlines, slot policies
     pools.py       slot-batched episode execution + pool resize
     o2_runtime.py  continuous tuning (capture / learner / assessments)
@@ -41,6 +42,14 @@ Key properties:
   * **slot sharding** — when the host platform exposes multiple devices
     (cores) and they divide the slot count, slots shard across them via
     `shard_map`; sharding never changes per-slot math, so parity holds.
+  * **topology as a constructor argument** — a `ServingTopology` owns
+    every placement decision: the named device slices slot pools pin to
+    (one flat slice on hosts, one per mesh row on a carved production
+    mesh), the multi-device O2 annex slice pooled assessments shard
+    over, and the replay ring's home device.  The same request stream
+    is bitwise identical on any topology (tests/test_topology.py), and
+    program caches key on slices, so equal-shape topologies share every
+    resident executable.
   * **adaptive slot scheduling** — with an `AdaptiveSlotPolicy` the
     scheduler sizes each pool by demand (active + queued), growing
     immediately on a burst and shrinking with hysteresis when the queue
@@ -75,17 +84,22 @@ Key properties:
 """
 from repro.launch.serving.o2_runtime import O2Runtime, O2ServiceConfig
 from repro.launch.serving.pools import _SlotPool, summarize_episode
-from repro.launch.serving.scheduler import (AdaptiveSlotPolicy, Scheduler,
+from repro.launch.serving.scheduler import (AdaptiveSlotPolicy,
+                                            EDFSlotPolicy, Scheduler,
                                             SlotPolicy, StaticSlotPolicy,
                                             TuneRequest)
 from repro.launch.serving.service import TuningService
 from repro.launch.serving.slo import SLOConfig, SLOTracker
+from repro.launch.serving.topology import DeviceSlice, ServingTopology
 
 __all__ = [
     "AdaptiveSlotPolicy",
+    "DeviceSlice",
+    "EDFSlotPolicy",
     "O2Runtime",
     "O2ServiceConfig",
     "Scheduler",
+    "ServingTopology",
     "SLOConfig",
     "SLOTracker",
     "SlotPolicy",

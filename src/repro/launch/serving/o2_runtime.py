@@ -4,8 +4,15 @@ serving critical path.
 Owns everything the frozen serving path does not need: per-tenant
 divergence monitors, the device-resident replay rings retired episodes
 stream into, the offline DDPG learners (dispatched onto the O2 annex
-device with backpressure), and the pooled divergence-triggered
-assessments whose verdicts hot-swap pool params.  The service hands this
+slice with backpressure), and the pooled divergence-triggered
+assessments whose verdicts hot-swap pool params.  Placement comes from
+the service's `ServingTopology`: the annex is a multi-device *slice*,
+not a single device — pooled assessments `shard_map` across its width
+(each pow2-padded wave lowers onto the widest annex sub-slice it
+divides) instead of running `lax.map`-serial, bitwise-equal either way
+because per-lane math is mapped; the learner state lives on the slice's
+lead device, and can scale its round size to the slice width
+(`scale_rounds_to_annex`).  The service hands this
 layer two things per tick — the episodes that retired, and a chance to
 drain finished verdicts — and the layer never blocks the serving loop:
 strict-order mode opts back into the serial loop's synchronous
@@ -31,6 +38,7 @@ from repro.launch.serving.programs import (_batched_admit_keys,
                                            _extract_episode_program,
                                            _pow2_ladder, _reset_program,
                                            _step_program)
+from repro.launch.serving.topology import ServingTopology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +68,12 @@ class O2ServiceConfig:
     # window that earned it
     strict_order: bool = False
     replay_seed: int = 0
+    # scale each fine-tune round by the annex slice width: a w-wide annex
+    # runs w times the configured updates per round (the slice bought the
+    # assessment headroom; the learner may spend it too).  Off by default
+    # — scaling changes the update count and therefore the offline params,
+    # so every serial-parity guarantee keeps its exact round sizes
+    scale_rounds_to_annex: bool = False
 
 
 class _TenantO2:
@@ -176,23 +190,49 @@ class O2Runtime:
     """
 
     def __init__(self, agents: dict, svc_cfg: O2ServiceConfig, pools: dict,
-                 annex, ring_device, device_ids: tuple, annex_ids: tuple,
-                 horizon_cap: int, max_assess_width: int):
+                 topology: ServingTopology, horizon_cap: int,
+                 max_assess_width: int):
         self.cfg = svc_cfg
         self.pools = pools              # shared with the service
-        self.annex = annex
-        self.device_ids = device_ids
-        self.annex_ids = annex_ids
+        self.topology = topology
+        # the learner state and its scanned update program live on the
+        # annex slice's lead device; assessments spread over the slice
+        self.annex = topology.annex.device(0)
         self.horizon_cap = horizon_cap
         self.max_assess_width = max_assess_width
         self.tenants: dict[str, _TenantO2] = {
-            it: _TenantO2(tuner, svc_cfg, annex=annex,
-                          ring_device=ring_device)
+            it: _TenantO2(tuner, svc_cfg, annex=self.annex,
+                          ring_device=topology.ring.device())
             for it, tuner in agents.items()}
         self.pending: dict[int, dict] = {}      # rid -> admission verdict
         self.backlog: list[tuple] = []          # (pk, req, summary, pend)
         self.inflight: deque[_PendingAssess] = deque()
-        self._assess_noise: dict[int, jax.Array] = {}  # width -> zeros
+        # bind the assessment-side program wrappers for every annex
+        # sub-slice x K up front: which (wave width, K) pairs actually
+        # occur is drain-timing-dependent in concurrent mode, and the
+        # process-wide program accounting must not move after warmup
+        # (tests assert zero new binds across waves).  Binding is a
+        # cheap lru insert — XLA still traces lazily per shape, exactly
+        # as the single-device annex behaved
+        for tenant in self.tenants.values():
+            env_cfg = tenant.env_cfg.with_episode_len(horizon_cap)
+            # pad the top: a chunk of max_assess_width windows pads to
+            # the next power of two, and that width must be warm too
+            widths = _pow2_ladder(_pow2_pad(max_assess_width))
+            for sl in {topology.assess_slice(w) for w in widths}:
+                _reset_program(sl, env_cfg)
+                for w in widths:
+                    if w % sl.width == 0 and topology.assess_slice(w) == sl:
+                        _build_carry_program(sl, tenant.net_cfg, w)
+                for k in _pow2_ladder(horizon_cap):
+                    _step_program(sl, tenant.net_cfg, env_cfg,
+                                  tenant.et_cfg, k)
+        self._assess_noise: dict[tuple, jax.Array] = {}  # (slice,w) -> 0s
+        # (index_type, slice) -> (source tree, replicated copy): the
+        # broadcast onto the assess slice is paid once per params
+        # version, not once per wave (identity-compared — publish_ready
+        # and each fine-tune round rebind the source tree)
+        self._assess_params: dict[tuple, tuple] = {}
         self.pending_missing = 0        # retired without admission verdict
         self.assessments = 0            # pooled assessment episodes judged
         self.phase_ms = {"capture": 0.0, "finetune": 0.0, "assess": 0.0}
@@ -223,7 +263,7 @@ class O2Runtime:
         t0 = time.perf_counter()
         T = len(narrow["reward"])
         src = np.minimum(np.arange(_pow2_pad(T)), T - 1).astype(np.int32)
-        values = _extract_episode_program(self.device_ids)(
+        values = _extract_episode_program(pool.slice)(
             pool.cap, np.int32(slot), src)
         self.tenants[req.index_type].replay.add_episode_values(
             values, T, **narrow)
@@ -296,30 +336,34 @@ class O2Runtime:
                  if self.cfg.offline_updates_per_tick is not None
                  else self.tenants[index_type].cfg
                  .offline_updates_per_window)
+            if self.cfg.scale_rounds_to_annex:
+                n *= self.topology.annex.width
             self.tenants[index_type].finetune(n, strict)
 
-    def _assess_noise_dev(self, width: int):
-        if width not in self._assess_noise:
-            zeros = jnp.zeros((width,), jnp.float32)
-            self._assess_noise[width] = (
-                zeros if self.annex is None
-                else jax.device_put(zeros, self.annex))
-        return self._assess_noise[width]
+    def _assess_noise_dev(self, slice_, width: int):
+        key = (slice_, width)
+        if key not in self._assess_noise:
+            self._assess_noise[key] = jax.device_put(
+                jnp.zeros((width,), jnp.float32), slice_.sharded())
+        return self._assess_noise[key]
 
     def _dispatch_assess(self, pk: tuple, pool,
                          tenant: _TenantO2, chunk: list) -> _PendingAssess:
-        """Launch one pooled assessment on the O2 annex: up to B diverged
-        windows of one tenant reset and roll out as a single batch
-        through the K-ladder step-program cache (zero-noise inputs — the
-        deterministic branch for the tanh-bounded actor), in place of
-        len(chunk) serial `rollout_episode` calls.  Strict mode assesses
-        the offline tail (serial semantics); concurrent mode the
-        published ready params.  Nothing is fetched here; the verdict
-        scalars cross to the host in `drain` once the device work
-        completes."""
-        ids = self.annex_ids
+        """Launch one pooled assessment on the O2 annex slice: up to B
+        diverged windows of one tenant reset and roll out as a single
+        batch through the K-ladder step-program cache (zero-noise inputs
+        — the deterministic branch for the tanh-bounded actor), in place
+        of len(chunk) serial `rollout_episode` calls.  The pow2-padded
+        wave shards over the widest annex sub-slice it divides — lanes
+        split across annex devices instead of `lax.map`-serial on one,
+        bitwise-equal because the per-lane program is identical (the
+        1-device slice *is* the serial path).  Strict mode assesses the
+        offline tail (serial semantics); concurrent mode the published
+        ready params.  Nothing is fetched here; the verdict scalars cross
+        to the host in `drain` once the device work completes."""
         m = len(chunk)
         width = _pow2_pad(m)
+        sl = self.topology.assess_slice(width)
         reqs = [item[0] for item in chunk]
         rpad = reqs + [reqs[0]] * (width - m)
         data = np.stack([r.data_keys for r in rpad])
@@ -331,21 +375,31 @@ class O2Runtime:
         k_offs = np.stack([item[2]["assess_key"] for item in chunk])
         keys = np.concatenate(
             [k_offs, np.broadcast_to(k_offs[:1], (width - m, 2))])
-        env_states, obs = _reset_program(ids, pool.env_cfg)(
+        env_states, obs = _reset_program(sl, pool.env_cfg)(
             data, reads, ins, wr)
-        carry = _build_carry_program(ids, pool.net_cfg, width)(
+        carry = _build_carry_program(sl, pool.net_cfg, width)(
             keys, env_states, obs)
-        params = (tenant.offline["params"] if self.cfg.strict_order
-                  else tenant.ready_params)
+        # replicate the judged params over the assess slice (a local view
+        # on a 1-wide slice; a broadcast onto a wider one) so the sharded
+        # step program never mixes committed device sets; cached until
+        # the source tree is rebound (a completed round / publish)
+        src = (tenant.offline["params"] if self.cfg.strict_order
+               else tenant.ready_params)
+        ck = (pk[0], sl)
+        if ck not in self._assess_params or \
+                self._assess_params[ck][0] is not src:
+            self._assess_params[ck] = (src, jax.device_put(
+                src, sl.replicated()))
+        params = self._assess_params[ck][1]
         outs = []
         remaining = max(r.budget_steps for r in reqs)
         while remaining > 0:
             k = max(w for w in _pow2_ladder(self.horizon_cap)
                     if w <= remaining)
-            program = _step_program(ids, pool.net_cfg, pool.env_cfg,
+            program = _step_program(sl, pool.net_cfg, pool.env_cfg,
                                     pool.et_cfg, k)
             carry, out = program(params, carry,
-                                 self._assess_noise_dev(width))
+                                 self._assess_noise_dev(sl, width))
             outs.append((k, out["runtime_ns"], out["early"]))
             remaining -= k
         return _PendingAssess(pk[0], list(chunk), env_states["r_best"],
@@ -437,4 +491,8 @@ class O2Runtime:
         st["assessments"] = self.assessments
         st["inflight_assessments"] = len(self.inflight)
         st["pending_missing"] = self.pending_missing
+        # annex placement (the topology layer's verdict): a shared annex
+        # means learner/assessment work queues behind serving fetches
+        st["annex_width"] = self.topology.annex.width
+        st["annex_shared"] = self.topology.annex_shared
         return st

@@ -3,9 +3,13 @@
 A `_SlotPool` is one (index space, array-shape) group's batch of episode
 lanes: a slot-batched device carry advanced K steps per tick by the
 process-wide step programs (`programs.py`), plus the host-side
-bookkeeping of which request occupies which lane.  The pool knows
-nothing about queues, deadlines, or O2 — the scheduler decides what
-enters it, the O2 runtime consumes what leaves it.
+bookkeeping of which request occupies which lane.  Each pool is pinned
+to one `topology.DeviceSlice` — the flat host slice, or one named row of
+a carved production mesh — and every device buffer it owns (carry,
+capture, noise) shards over that slice.  The pool knows nothing about
+queues, deadlines, or O2 — the topology says where it runs, the
+scheduler decides what enters it, the O2 runtime consumes what leaves
+it.
 
 Pool *resize* (the adaptive-scheduling seam): `resize()` re-gathers the
 device carry (and capture buffers) through a new→old slot index map —
@@ -22,7 +26,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.etmdp import transition_view
 from repro.core.litune import attach_best_params
@@ -31,6 +34,7 @@ from repro.index import env as E
 
 from repro.launch.serving.programs import _capture_write, _resize_program
 from repro.launch.serving.scheduler import TuneRequest
+from repro.launch.serving.topology import DeviceSlice
 
 
 def summarize_episode(env_cfg: E.EnvConfig, r0: float, rewards, runtimes,
@@ -62,15 +66,15 @@ class _SlotPool:
     """
 
     def __init__(self, env_cfg: E.EnvConfig, net_cfg, et_cfg, params,
-                 slots: int, mesh: Mesh, capture: bool = False):
+                 slots: int, slice_: DeviceSlice, capture: bool = False):
         self.env_cfg = env_cfg
         self.net_cfg = net_cfg
         self.et_cfg = et_cfg
         self.slots = slots
-        self.mesh = mesh
+        self.slice = slice_             # topology slice the pool pins to
         self.capture = capture          # device-resident transitions (O2)
-        self.replicated = NamedSharding(mesh, P())
-        self.sharded = NamedSharding(mesh, P("slots"))
+        self.replicated = slice_.replicated()
+        self.sharded = slice_.sharded()
         self.params = jax.device_put(params, self.replicated)
         self.carry = None                       # batched pytree, lazy init
         self.cap = None                         # capture buffers, lazy
@@ -101,11 +105,12 @@ class _SlotPool:
         return self._noise_dev
 
     # ------------------------------------------------------------ resize
-    def resize(self, new_slots: int, device_ids: tuple):
-        """Grow or shrink the pool to `new_slots` lanes in place.  The
-        device carry and capture buffers are re-gathered through a
-        new→old index map; host mirrors follow the same map.  Shrink
-        requires the active lanes to fit (the scheduler guarantees it).
+    def resize(self, new_slots: int):
+        """Grow or shrink the pool to `new_slots` lanes in place, within
+        the pool's topology slice.  The device carry and capture buffers
+        are re-gathered through a new→old index map; host mirrors follow
+        the same map.  Shrink requires the active lanes to fit (the
+        scheduler guarantees it).
         """
         old = self.slots
         if new_slots == old:
@@ -124,9 +129,9 @@ class _SlotPool:
             self.resizes["grow"] += 1
         ai = np.asarray(idx, np.int32)
         if self.carry is not None:
-            self.carry = _resize_program(device_ids)(self.carry, ai)
+            self.carry = _resize_program(self.slice)(self.carry, ai)
         if self.cap is not None:
-            self.cap = _resize_program(device_ids)(self.cap, ai)
+            self.cap = _resize_program(self.slice)(self.cap, ai)
         self.requests = [self.requests[i] for i in idx]
         self.records = [self.records[i] for i in idx]
         self.r0 = [self.r0[i] for i in idx]

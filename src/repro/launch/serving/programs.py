@@ -1,11 +1,17 @@
 """Process-wide compiled-program cache for the serving stack.
 
 Every jitted program the serving layers dispatch lives here, keyed on
-(device ids, frozen configs, shapes) so every `TuningService` instance —
-and every pool within one — shares the same jitted callables and their
-compiled executables.  A per-service dict on top of this would recompile
-per instance, which is exactly the recompile-on-mixed-streams failure
-this engine exists to avoid.
+(`topology.DeviceSlice`, frozen configs, shapes) so every
+`TuningService` instance — and every pool within one — shares the same
+jitted callables and their compiled executables.  A per-service dict on
+top of this would recompile per instance, which is exactly the
+recompile-on-mixed-streams failure this engine exists to avoid.
+
+Slices hash by their device ids (display names excluded), so two
+topologies whose slices cover the same devices — a flat host layout and
+a carved pod mesh, say — alternate between the *same* resident
+executables (tests/test_topology.py asserts zero re-traces across
+equal-shape topologies).
 
 The same cache is what makes **pool resizing** cheap: a pool growing
 from B to B' slots re-enters the *same* `_step_program` callable with a
@@ -30,13 +36,13 @@ from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import networks as nets
 from repro.core.etmdp import batched_episode_scan
 from repro.core.parallel import mapped_reset
 from repro.core.replay import donate_argnums
+from repro.launch.serving.topology import DeviceSlice, _slice_mesh
 from repro.runtime.mesh_utils import shard_map_compat
 
 
@@ -62,50 +68,53 @@ def _admit_key_chain(window_key):
 _batched_admit_keys = jax.jit(jax.vmap(_admit_key_chain))
 
 
-def _mesh_for(device_ids: tuple) -> Mesh:
-    by_id = {d.id: d for d in jax.devices()}
-    return Mesh(np.array([by_id[i] for i in device_ids]), ("slots",))
+def _mesh_for(device_ids: tuple):
+    """Back-compat shim for raw-id callers (the tune_serve re-export):
+    the topology layer's slice mesh is the one source of truth now."""
+    return _slice_mesh(tuple(device_ids), "slots")
 
 
 @lru_cache(maxsize=None)
-def _step_program(device_ids: tuple, net_cfg, env_cfg, et_cfg, k: int):
+def _step_program(slice_: DeviceSlice, net_cfg, env_cfg, et_cfg, k: int):
     """K-step slot program: scan over K ticks of the bitwise-stable
-    one-tick map body, slots sharded over the mesh.  The carry is donated
-    — every caller rebinds it to the program's output, and the donation
-    lets XLA write the new carry into the old one's buffers instead of
-    allocating a fresh slot-state tree per tick."""
-    mesh = _mesh_for(device_ids)
+    one-tick map body, lanes sharded over the slice.  The carry is
+    donated — every caller rebinds it to the program's output, and the
+    donation lets XLA write the new carry into the old one's buffers
+    instead of allocating a fresh slot-state tree per tick."""
+    mesh = slice_.mesh()
+    ax = slice_.axis
 
     def core(p, c, n):
         return batched_episode_scan(p, c, n, k, net_cfg, env_cfg, et_cfg,
                                     False)
 
     return jax.jit(shard_map_compat(
-        core, mesh, in_specs=(P(), P("slots"), P("slots")),
-        out_specs=(P("slots"), P(None, "slots"))),
+        core, mesh, in_specs=(P(), P(ax), P(ax)),
+        out_specs=(P(ax), P(None, ax))),
         donate_argnums=donate_argnums(1))
 
 
 @lru_cache(maxsize=None)
-def _reset_program(device_ids: tuple, env_cfg):
-    """Batched admission: reset a wave of episodes in one (sharded when
-    the wave divides the mesh) program."""
-    mesh = _mesh_for(device_ids)
+def _reset_program(slice_: DeviceSlice, env_cfg):
+    """Batched admission: reset a wave of episodes in one (sharded over
+    the slice when the wave divides it) program."""
+    mesh = slice_.mesh()
+    ax = slice_.axis
 
     def core(d, r, i, wr):
         return mapped_reset(env_cfg, d, {"reads": r, "inserts": i}, wr)
 
     return jax.jit(shard_map_compat(
         core, mesh,
-        in_specs=(P("slots"), P("slots"), P("slots"), P("slots")),
-        out_specs=P("slots")))
+        in_specs=(P(ax), P(ax), P(ax), P(ax)),
+        out_specs=P(ax)))
 
 
 @lru_cache(maxsize=None)
-def _admit_scatter_program(device_ids: tuple, net_cfg, slots: int):
+def _admit_scatter_program(slice_: DeviceSlice, net_cfg, slots: int):
     """Scatter freshly-reset episodes into their slots (padded entries
     target slot index B and are dropped)."""
-    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
+    sharded = slice_.sharded()
 
     def scatter(carry, idx, keys, env_states, obs):
         def upd(buf, x):
@@ -127,10 +136,10 @@ def _admit_scatter_program(device_ids: tuple, net_cfg, slots: int):
 
 
 @lru_cache(maxsize=None)
-def _build_carry_program(device_ids: tuple, net_cfg, slots: int):
+def _build_carry_program(slice_: DeviceSlice, net_cfg, slots: int):
     """Initial-wave fast path: construct the whole B-slot carry from a
     full batch of resets (no scatter)."""
-    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
+    sharded = slice_.sharded()
 
     def build(keys, env_states, obs):
         return {
@@ -153,12 +162,15 @@ def _extract_episode_core(cap, slot, src_idx):
 
 
 @lru_cache(maxsize=None)
-def _extract_episode_program(device_ids: tuple):
-    """Replicated-output extract: every serving device holds the episode
-    rows, so the ring's single-device `_place` resolves to a local copy
-    instead of a cross-device reshard the next gather would wait on."""
-    sharding = NamedSharding(_mesh_for(device_ids), P())
-    return jax.jit(_extract_episode_core, out_shardings=sharding)
+def _extract_episode_program(slice_: DeviceSlice):
+    """Replicated-output extract: every device of the pool's slice holds
+    the episode rows, so when the ring home lives inside the slice (the
+    flat host layout, and `from_mesh` row 0) its single-device `_place`
+    resolves to a local copy instead of a cross-device reshard the next
+    gather would wait on.  Pools pinned to rows that exclude the ring
+    home still pay one cross-device hop per retired episode — a per-row
+    ring home is a ROADMAP follow-up."""
+    return jax.jit(_extract_episode_core, out_shardings=slice_.replicated())
 
 
 def _capture_write_core(cap, new, offsets):
@@ -191,15 +203,16 @@ def _capture_write(cap, new, offsets):
 
 
 @lru_cache(maxsize=None)
-def _resize_program(device_ids: tuple):
+def _resize_program(slice_: DeviceSlice):
     """Slot-count resize: gather a pool's device state (the episode carry
     or the capture buffers) through a new→old slot index map, sharded
-    over the mesh at the new width.  Growth pads fresh slots with slot
-    0's rows (valid, ignored state — the admission scatter overwrites
-    them); shrink compacts the active slots to the front.  Pure gather:
-    indices are array inputs, so resizing never re-traces on the request
-    stream — only the first visit to a new width traces its shape."""
-    sharded = NamedSharding(_mesh_for(device_ids), P("slots"))
+    over the pool's slice at the new width.  Growth pads fresh slots with
+    slot 0's rows (valid, ignored state — the admission scatter
+    overwrites them); shrink compacts the active slots to the front.
+    Pure gather: indices are array inputs, so resizing never re-traces on
+    the request stream — only the first visit to a new width traces its
+    shape."""
+    sharded = slice_.sharded()
 
     def gather(tree, idx):
         return jax.tree.map(lambda x: x[idx], tree)

@@ -13,10 +13,21 @@ service tick per pool:
     queued requests), growing immediately on a burst and shrinking only
     after `shrink_patience` consecutive low-demand ticks (hysteresis, so
     a jittery queue doesn't thrash the pool width).  Candidate widths
-    come from the service's size ladder (multiples of the mesh width, so
-    resized pools still shard), and the K-ladder program cache makes the
-    reshape itself cheap: re-entering a previously-served width binds
-    zero new programs.
+    come from the service's size ladder (multiples of the pool slice
+    width, so resized pools still shard), and the K-ladder program cache
+    makes the reshape itself cheap: re-entering a previously-served
+    width binds zero new programs;
+  * `EDFSlotPolicy` — earliest-deadline-first *admission ordering* on
+    top of either width rule: free slots go to the queued requests with
+    the tightest absolute deadlines first (deadline-less requests rank
+    last, FIFO among themselves), and requests whose remaining budget
+    provably cannot fit their deadline at the current measured tick rate
+    are pre-dropped from the queue — they were going to breach anyway,
+    so the slot- and queue-time they would have burned goes to requests
+    that can still make it.  The tick rate is an EWMA of
+    seconds-per-episode-step the scheduler observes from the service
+    (`note_tick`), so the estimate tracks the live machine, not a
+    config.
 
 Deadline handling (the request-level SLO seam) splits by request state:
 a *queued* request past its deadline is dropped before admission — it
@@ -54,15 +65,27 @@ class TuneRequest:
 
 
 class SlotPolicy:
-    """Pluggable per-pool slot-count policy, consulted before each
-    tick's admissions.  `ladder` is the service's list of shardable pool
-    widths (ascending); the returned width must come from it."""
+    """Pluggable per-pool slot-count + admission-ordering policy.
+    `desired_slots` is consulted before each tick's admissions (`ladder`
+    is the service's list of shardable pool widths, ascending; the
+    returned width must come from it); `admission_order` ranks the queue
+    for this tick's free slots (FIFO by default); `hopeless` marks
+    queued requests the service should pre-drop because their budget
+    cannot fit their deadline at the measured tick rate (never, by
+    default)."""
 
     name: ClassVar[str] = "static"
 
     def desired_slots(self, *, slots: int, active: int, queued: int,
                       ladder: list[int]) -> int:
         return slots
+
+    def admission_order(self, queue, now: float) -> list:
+        return list(queue)              # FIFO
+
+    def hopeless(self, req, now: float,
+                 s_per_step: float | None) -> bool:
+        return False
 
 
 class StaticSlotPolicy(SlotPolicy):
@@ -90,6 +113,41 @@ class AdaptiveSlotPolicy(SlotPolicy):
         return next((s for s in fit if s >= demand), fit[-1])
 
 
+def _abs_deadline(req) -> float:
+    return (req.submitted_at + req.deadline_s
+            if req.deadline_s is not None else float("inf"))
+
+
+@dataclasses.dataclass
+class EDFSlotPolicy(SlotPolicy):
+    """Earliest-deadline-first admission: free slots go to the tightest
+    absolute deadlines first (sorted stably, so deadline-less requests
+    stay FIFO at the back), and queued requests that provably cannot
+    finish inside their deadline at the current tick rate are
+    pre-dropped (`hopeless`) before they waste a slot.
+
+    `headroom` scales the feasibility estimate: a request is hopeless
+    when ``budget_steps * s_per_step * headroom`` exceeds the time left
+    to its deadline.  Headroom below 1 forgives estimate noise; above 1
+    drops earlier.  Pool widths stay static (compose with the service's
+    `slots`); the ordering seam is independent of the sizing seam.
+    """
+
+    headroom: float = 1.0
+
+    name: ClassVar[str] = "edf"
+
+    def admission_order(self, queue, now: float) -> list:
+        return sorted(queue, key=_abs_deadline)     # stable: FIFO ties
+
+    def hopeless(self, req, now: float,
+                 s_per_step: float | None) -> bool:
+        if req.deadline_s is None or not s_per_step:
+            return False
+        time_left = _abs_deadline(req) - now
+        return req.budget_steps * s_per_step * self.headroom > time_left
+
+
 class Scheduler:
     """FIFO admission queue + deadline drops + resize planning.
 
@@ -105,9 +163,22 @@ class Scheduler:
         self.queue: deque[TuneRequest] = deque()
         self._shrink_streak: dict[tuple, int] = {}
         self.resize_events = 0
+        # EWMA of seconds per episode-step, observed from served ticks
+        # (tick wall time / K steps scanned) — the live tick rate the
+        # EDF feasibility pre-drop reads
+        self.s_per_step: float | None = None
 
     def submit(self, req: TuneRequest):
         self.queue.append(req)
+
+    def note_tick(self, k_steps: int, dt_s: float):
+        """Fold one served tick (K scanned steps in `dt_s` wall seconds)
+        into the tick-rate estimate."""
+        if k_steps <= 0 or dt_s <= 0.0:
+            return
+        obs = dt_s / k_steps
+        self.s_per_step = (obs if self.s_per_step is None
+                           else 0.5 * self.s_per_step + 0.5 * obs)
 
     # ------------------------------------------------------------- SLO
     def drop_breached(self, now: float) -> list[TuneRequest]:
@@ -117,6 +188,20 @@ class Scheduler:
         for req in self.queue:
             if req.deadline_s is not None and \
                     now - req.submitted_at > req.deadline_s:
+                dropped.append(req)
+            else:
+                kept.append(req)
+        self.queue = kept
+        return dropped
+
+    def pre_drop_hopeless(self, now: float) -> list[TuneRequest]:
+        """Remove (and return) queued requests the policy deems hopeless
+        — their remaining budget cannot fit their deadline at the
+        measured tick rate (EDF's feasibility cut; the default policy
+        never pre-drops)."""
+        kept, dropped = deque(), []
+        for req in self.queue:
+            if self.policy.hopeless(req, now, self.s_per_step):
                 dropped.append(req)
             else:
                 kept.append(req)
@@ -151,10 +236,13 @@ class Scheduler:
 
     # ------------------------------------------------------- admission
     def select(self, pools: dict, pool_for, pool_key,
-               any_active: bool) -> dict[tuple, list[TuneRequest]]:
-        """Pick this tick's admissions: FIFO per pool group, bounded by
-        each pool's free slots.  In strict-order O2 mode a single window
-        is admitted at a time, in submission order."""
+               any_active: bool,
+               now: float = 0.0) -> dict[tuple, list[TuneRequest]]:
+        """Pick this tick's admissions in the policy's order (FIFO by
+        default, tightest-deadline-first under EDF) per pool group,
+        bounded by each pool's free slots.  Requests not admitted keep
+        their submission order in the queue.  In strict-order O2 mode a
+        single window is admitted at a time, in submission order."""
         if self.strict_order:
             if not self.queue or any_active:
                 return {}
@@ -162,20 +250,19 @@ class Scheduler:
             pool_for(req)           # ensure the pool exists
             return {pool_key(req): [req]}
         per_pool: dict[tuple, list[TuneRequest]] = {}
-        still_queued = deque()
+        admitted: set[int] = set()
         free_left: dict[tuple, int] = {}
-        while self.queue:
-            req = self.queue.popleft()
+        for req in self.policy.admission_order(self.queue, now):
             pool = pool_for(req)
             pk = pool_key(req)
             if pk not in free_left:
                 free_left[pk] = len(pool.free_slots())
             if free_left[pk] > 0:
                 per_pool.setdefault(pk, []).append(req)
+                admitted.add(req.rid)
                 free_left[pk] -= 1
-            else:
-                still_queued.append(req)
-        self.queue = still_queued
+        self.queue = deque(r for r in self.queue
+                           if r.rid not in admitted)
         return per_pool
 
     def queued_by_pool(self, pool_key) -> dict[tuple, int]:

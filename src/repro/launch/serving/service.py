@@ -2,6 +2,8 @@
 
 Layering (each layer a sibling module with an explicit seam):
 
+    topology.py    device placement: pool slices, annex slice, ring home
+        |  which devices serve, learn, and assess
     scheduler.py   admission queue, deadlines, slot-scheduling policy
         |  which requests enter which pool, at what pool width
     pools.py       slot-batched episode execution (device carries)
@@ -23,11 +25,11 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 from collections import deque
 
 import jax
 import numpy as np
-from jax.sharding import Mesh
 
 from repro.launch.serving import programs
 from repro.launch.serving.o2_runtime import O2Runtime, O2ServiceConfig
@@ -37,6 +39,7 @@ from repro.launch.serving.programs import (_pow2_ladder, _reset_program,
 from repro.launch.serving.scheduler import (Scheduler, SlotPolicy,
                                             StaticSlotPolicy, TuneRequest)
 from repro.launch.serving.slo import SLOConfig, SLOTracker
+from repro.launch.serving.topology import ServingTopology
 
 
 class TuningService:
@@ -48,16 +51,24 @@ class TuningService:
     summaries come back keyed by request id.
 
     `policy` selects the slot scheduler (static by default; pass an
-    `AdaptiveSlotPolicy` to size pools by queue depth), `slo` the
-    service-level deadline defaults, and `clock` the time source the
+    `AdaptiveSlotPolicy` to size pools by queue depth, or an
+    `EDFSlotPolicy` to admit tight deadlines first), `slo` the
+    service-level deadline defaults, `clock` the time source the
     deadline/latency machinery reads (injectable for deterministic
-    tests; defaults to `time.perf_counter`).
+    tests; defaults to `time.perf_counter`), and `topology` the
+    placement plan (`ServingTopology`): which devices the slot pools
+    shard over, where the O2 annex slice and replay ring live.  The
+    default is the flat host layout over `jax.devices()`; pass
+    `ServingTopology.from_mesh(make_production_mesh(), slots)` and one
+    service instance spans a pod — placement is a constructor argument,
+    not a rewrite.
     """
 
     def __init__(self, agents, slots: int = 4, horizon_cap: int = 256,
                  seed: int = 0, o2: O2ServiceConfig | None = None,
                  policy: SlotPolicy | None = None,
-                 slo: SLOConfig | None = None, clock=None):
+                 slo: SLOConfig | None = None, clock=None,
+                 topology: ServingTopology | None = None):
         if not isinstance(agents, dict):
             agents = {agents.cfg.index_type: agents}
         self.agents = agents
@@ -68,31 +79,28 @@ class TuningService:
         self.slo_cfg = slo if slo is not None else SLOConfig()
         self.clock = clock if clock is not None else time.perf_counter
         self.key = jax.random.PRNGKey(seed)
-        devices = jax.devices()
-        # largest device subset whose count divides the slots, so e.g.
-        # slots=4 on a 16-device host shards over 4 devices, and slots=2
-        # on a 3-device host still shards over 2 (the old gcd rule
-        # collapsed that to 1)
-        nserve = max(d for d in range(1, len(devices) + 1)
-                     if slots % d == 0)
-        self.mesh = Mesh(np.array(devices[:nserve]), ("slots",))
-        # O2 annex: the first device beyond the serving mesh, when the
-        # host offers one — the stand-in for the learner executor a
-        # production deployment provisions beside the serving pod.  The
-        # learner state, replay ring, and assessment episodes all run
-        # there, so their device work never queues in front of the
-        # serving mesh's fetches.  With no spare device they share
-        # device 0 (correct, just without the overlap).
-        self.annex = None
+        # every placement decision — serving slices, annex slice, ring
+        # home — is the topology layer's (topology.py); the service only
+        # consumes slices
+        self.topology = (topology if topology is not None
+                         else ServingTopology.host(slots))
+        self.topology.validate_slots(slots)
         self.pools: dict[tuple, _SlotPool] = {}
         self.o2rt: O2Runtime | None = None
         if self.o2.enabled:
-            self.annex = (devices[nserve] if len(devices) > nserve
-                          else devices[0])
+            if self.topology.annex_shared:
+                # single-device hosts (and annex_rows=0 carvings) run the
+                # learner and assessments on a serving device: correct,
+                # but the O2 work stops overlapping serving — say so once
+                # instead of silently co-locating
+                warnings.warn(
+                    f"O2 annex shares device(s) "
+                    f"{self.topology.annex.device_ids} with the serving "
+                    f"slice: learner and assessment work will queue "
+                    f"behind serving fetches (stats()['o2'] reports "
+                    f"annex_shared)", RuntimeWarning, stacklevel=2)
             self.o2rt = O2Runtime(
-                agents, self.o2, self.pools, self.annex,
-                ring_device=self.mesh.devices.flat[0],
-                device_ids=self._device_ids, annex_ids=self._annex_ids,
+                agents, self.o2, self.pools, self.topology,
                 horizon_cap=horizon_cap, max_assess_width=2 * slots)
         self.scheduler = Scheduler(self.policy,
                                    strict_order=(self.o2.enabled
@@ -218,18 +226,23 @@ class TuningService:
             # online model rather than the agent's frozen pretrained state
             params = (self.tenants[req.index_type].online["params"]
                       if self.o2.enabled else tuner.state["params"])
+            # pools pin to the topology's carved slices round-robin by
+            # creation order (one flat slice on hosts; one row per pool
+            # on a carved production mesh)
+            slice_ = self.topology.pool_slice(len(self.pools))
             self.pools[pk] = _SlotPool(env_cfg, tuner.cfg.net_cfg(),
                                        tuner.cfg.et_cfg(), params,
-                                       self.slots, self.mesh,
+                                       self.slots, slice_,
                                        capture=self.o2.enabled)
         return self.pools[pk]
 
-    def _size_ladder(self) -> list[int]:
+    def _size_ladder(self, pool: _SlotPool) -> list[int]:
         """Pool widths the policy may choose from: the initial width plus
-        mesh-width multiples doubling up to the policy cap — every entry
-        shards over the serving mesh, and the doubling keeps the set of
-        traced carry shapes (and therefore resident executables) small."""
-        nd = len(self._device_ids)
+        slice-width multiples doubling up to the policy cap — every entry
+        shards over the pool's topology slice, and the doubling keeps the
+        set of traced carry shapes (and therefore resident executables)
+        small."""
+        nd = pool.slice.width
         cap = max(getattr(self.policy, "max_slots", self.slots),
                   self.slots)
         sizes = {self.slots}
@@ -240,21 +253,9 @@ class TuningService:
         return sorted(s for s in sizes if s % nd == 0)
 
     # --------------------------------------------------------- programs
-    @property
-    def _device_ids(self) -> tuple:
-        return tuple(d.id for d in self.mesh.devices.flat)
-
-    @property
-    def _annex_ids(self) -> tuple:
-        """Single-device mesh ids for annex-side programs (assessments);
-        identical to the serving ids on one-device hosts, so the program
-        cache is shared there."""
-        return ((self.annex.id,) if self.annex is not None
-                else self._device_ids[:1])
-
     def _pool_step_program(self, pk: tuple, pool: _SlotPool, k: int):
         """K-step slot program, cached process-wide on
-        (devices, frozen configs, width, K) so mixed alex/carmi request
+        (slice, frozen configs, width, K) so mixed alex/carmi request
         streams — and successive service instances, and pools returning
         to a previously-served width — alternate between resident
         executables, never re-tracing."""
@@ -262,17 +263,15 @@ class TuningService:
         if prog_key not in self._programs:
             self.program_misses += 1
             self._programs[prog_key] = _step_program(
-                self._device_ids, pool.net_cfg, pool.env_cfg, pool.et_cfg,
-                k)
+                pool.slice, pool.net_cfg, pool.env_cfg, pool.et_cfg, k)
         else:
             self.program_hits += 1
         return self._programs[prog_key]
 
     def _pool_reset_program(self, pool: _SlotPool, width: int):
-        ids = self._device_ids
-        if width % len(ids) != 0:
-            ids = ids[:1]               # narrow wave: single-device mesh
-        return _reset_program(ids, pool.env_cfg)
+        # a wave that does not divide the pool's slice lowers onto the
+        # widest sub-slice it does divide (1-device at worst)
+        return _reset_program(pool.slice.narrow(width), pool.env_cfg)
 
     # ------------------------------------------------------------ serving
     def _admit(self, pk: tuple, pool: _SlotPool, admits: list[TuneRequest]):
@@ -295,15 +294,14 @@ class TuningService:
             keys, assess_keys = self.o2rt.admit_keys(keys)
         env_states, obs = self._pool_reset_program(pool, width)(
             data, reads, ins, wr)
-        ndev = len(self._device_ids)
-        if ndev > 1 and width % ndev != 0:
-            # narrow reset ran on a single-device mesh; rehome to host so
-            # the scatter (placed on the pool mesh) accepts it
+        if width % pool.slice.width != 0:
+            # narrow reset ran on a sub-slice mesh; rehome to host so the
+            # scatter (placed on the pool's slice) accepts it
             env_states, obs = jax.device_get((env_states, obs))
 
         if m == pool.slots and pool.carry is None:
             pool.carry = programs._build_carry_program(
-                self._device_ids, pool.net_cfg, pool.slots)(
+                pool.slice, pool.net_cfg, pool.slots)(
                 keys, env_states, obs)
             slots_used = list(range(pool.slots))
         else:
@@ -317,13 +315,13 @@ class TuningService:
                                               + x.shape[1:]),
                     (es0, obs0))
                 pool.carry = programs._build_carry_program(
-                    self._device_ids, pool.net_cfg, pool.slots)(
+                    pool.slice, pool.net_cfg, pool.slots)(
                     np.broadcast_to(keys[:1], (pool.slots,)
                                     + keys.shape[1:]), full[0], full[1])
             slots_used = free[:m]
             idx = np.asarray(slots_used + [pool.slots] * pad, np.int32)
             pool.carry = programs._admit_scatter_program(
-                self._device_ids, pool.net_cfg, pool.slots)(
+                pool.slice, pool.net_cfg, pool.slots)(
                 pool.carry, idx, keys, env_states, obs)
         r0s = np.asarray(jax.device_get(env_states["r_best"]))
         now = self.clock()
@@ -340,19 +338,28 @@ class TuningService:
         time in submission order)."""
         per_pool = self.scheduler.select(
             self.pools, self._pool_for, self._pool_key,
-            any_active=any(p.n_active for p in self.pools.values()))
+            any_active=any(p.n_active for p in self.pools.values()),
+            now=self.clock())
         for pk, admits in per_pool.items():
             self._admit(pk, self.pools[pk], admits)
 
     def _drop_breached_queued(self):
         """Queued requests past their deadline never occupy a slot: they
-        retire straight into a dropped result."""
+        retire straight into a dropped result; under an `EDFSlotPolicy`,
+        requests whose budget provably cannot fit their deadline at the
+        measured tick rate are pre-dropped the same way (flagged
+        `pre_dropped`), freeing their queue time for feasible work."""
         now = self.clock()
         for req in self.scheduler.drop_breached(now):
             self.results[req.rid] = {
                 "dropped": True, "slo_breached": True, "steps": 0,
                 "terminated_early": False}
             self.slo.on_drop_queued(req, now)
+        for req in self.scheduler.pre_drop_hopeless(now):
+            self.results[req.rid] = {
+                "dropped": True, "slo_breached": True, "pre_dropped": True,
+                "steps": 0, "terminated_early": False}
+            self.slo.on_drop_queued(req, now, pre=True)
 
     def _apply_slot_policy(self):
         """Consult the slot policy for every pool (pools for queued
@@ -364,12 +371,11 @@ class TuningService:
         for req in self.scheduler.queue:
             self._pool_for(req)
         queued = self.scheduler.queued_by_pool(self._pool_key)
-        ladder = self._size_ladder()
         for pk, pool in self.pools.items():
-            new = self.scheduler.plan_resize(pk, pool,
-                                             queued.get(pk, 0), ladder)
+            new = self.scheduler.plan_resize(pk, pool, queued.get(pk, 0),
+                                             self._size_ladder(pool))
             if new is not None:
-                pool.resize(new, self._device_ids)
+                pool.resize(new)
 
     def _enforce_running_deadlines(self, retired: list):
         """Running requests past their deadline retire before the next
@@ -431,6 +437,11 @@ class TuningService:
             min_rem = min(pool.remaining())
             k = max(w for w in _pow2_ladder(self.horizon_cap)
                     if w <= max(min_rem, 1))
+            t_tick = self.clock()
+            # a first-use bind traces/compiles inside the timed window;
+            # that sample would poison the EDF feasibility estimate, so
+            # only warm ticks feed it
+            warm = ("step", pk, pool.slots, k) in self._programs
             program = self._pool_step_program(pk, pool, k)
             pool.carry, out = program(pool.params, pool.carry,
                                       pool.noise_dev())
@@ -438,6 +449,10 @@ class TuningService:
             # host — the same five the frozen service transfers
             fields = ["reward", "runtime_ns", "action", "cost", "early"]
             out_host = jax.device_get({f: out[f] for f in fields})
+            # the narrow-field fetch bounds the tick: feed the EDF
+            # feasibility estimate (seconds per episode-step)
+            if warm:
+                self.scheduler.note_tick(k, self.clock() - t_tick)
             if pool.capture:
                 # wide fields stay on device: append them to the capture
                 # buffers (the view is materialized now, so the hop is a
@@ -492,7 +507,8 @@ class TuningService:
             "completed": len(self.results),
             "queued": len(self.queue),
             "pools": len(self.pools),
-            "devices": len(self.mesh.devices),
+            "devices": self.topology.serving.width,
+            "topology": self.topology.describe(),
             # per-service binds: first/repeat use of a program key here
             "program_misses": self.program_misses,
             "program_hits": self.program_hits,

@@ -67,6 +67,7 @@ class SLOTracker:
         self.truncated = 0
         self.dropped_queued = 0
         self.dropped_running = 0
+        self.pre_dropped = 0        # EDF feasibility cuts (never admitted)
         self._admitted_at: dict[int, float] = {}
 
     # ------------------------------------------------------- lifecycle
@@ -81,9 +82,14 @@ class SLOTracker:
             self.serve_s.append(now - t_admit)
 
     # --------------------------------------------------------- breaches
-    def on_drop_queued(self, req, now: float):
+    def on_drop_queued(self, req, now: float, pre: bool = False):
+        """A queued request leaves without a slot: its deadline lapsed
+        while waiting, or (`pre`) the EDF policy judged its budget
+        infeasible at the measured tick rate and cut it early."""
         self.tracked += 1
         self.dropped_queued += 1
+        if pre:
+            self.pre_dropped += 1
         # the wait it accrued before the drop still counts against the SLO
         self.queue_wait_s.append(now - req.submitted_at)
 
@@ -105,6 +111,7 @@ class SLOTracker:
             "breaches": {
                 "dropped_queued": self.dropped_queued,
                 "dropped_running": self.dropped_running,
+                "pre_dropped": self.pre_dropped,
                 "truncated": self.truncated,
             },
             "tracked": self.tracked,

@@ -1,0 +1,265 @@
+"""Device-topology layer of the serving stack: every placement decision
+in one object.
+
+Before this layer existed, placement was computed ad hoc three times
+over: `service.py` sliced `jax.devices()` into a flat 1-D `("slots",)`
+mesh with inline largest-divisor arithmetic, the O2 annex was "first
+spare device or device 0", and `programs.py` keyed every cached program
+on raw device-id tuples.  `ServingTopology` owns all of it, built once
+from the available devices (or an injected fake set):
+
+  * the **pool slices** — the named device subsets slot pools pin to.
+    A flat host topology has one (`serve`); a topology carved from a
+    real production mesh (`launch/mesh.py`) has one per mesh row, so one
+    service instance spans a pod with pools on disjoint rows;
+  * the **annex slice** — the learner/assessment executor beside the
+    serving pod.  A multi-device slice, not a single device: pooled
+    assessments `shard_map` across its width instead of running
+    `lax.map`-serial, and the offline learner can scale its round size
+    to the slice.  On hosts with no spare device it co-locates with
+    serving device 0 (`annex_shared`, surfaced in `stats()["o2"]` and
+    warned about at service construction);
+  * the **ring home** — the single device the replay ring's pages commit
+    to (the serving side: its writers and sampling readers run there).
+
+The unit of placement is a `DeviceSlice`: an ordered device-id tuple
+plus a 1-D mesh axis, hashable *by ids* (the display name is excluded),
+so it doubles as the process-wide program-cache key in `programs.py` —
+two topologies whose slices cover the same devices share every resident
+executable, whatever the slices are called (tests/test_topology.py
+asserts zero re-traces across equal-shape topologies).
+
+Parity contract: sharding a slice never changes per-lane math (the step
+programs are `lax.map` over lanes inside each shard), so the same
+request stream produces bitwise-identical summaries on any topology —
+1 device, forced host devices, or a carved pod mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@lru_cache(maxsize=None)
+def _slice_mesh(device_ids: tuple, axis: str) -> Mesh:
+    """The 1-D mesh over an ordered device-id tuple, built lazily (first
+    use, not import) and cached process-wide so every program lowered
+    onto the same slice shares one Mesh object."""
+    import jax
+    by_id = {d.id: d for d in jax.devices()}
+    return Mesh(np.array([by_id[i] for i in device_ids]), (axis,))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSlice:
+    """An ordered device subset with a named 1-D mesh axis — the unit of
+    placement, and (hashed by `device_ids`/`axis` only) the program-cache
+    key.  `name` is display-only metadata: two slices over the same
+    devices are the *same* slice to the compiled-program cache even if
+    one topology calls them "serve" and another "pod0/row0"."""
+
+    device_ids: tuple
+    axis: str = "slots"
+    name: str = dataclasses.field(default="", compare=False)
+
+    def __post_init__(self):
+        if not self.device_ids:
+            raise ValueError("a DeviceSlice needs at least one device")
+
+    @property
+    def width(self) -> int:
+        return len(self.device_ids)
+
+    def mesh(self) -> Mesh:
+        return _slice_mesh(self.device_ids, self.axis)
+
+    def sharded(self) -> NamedSharding:
+        return NamedSharding(self.mesh(), P(self.axis))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh(), P())
+
+    def device(self, i: int = 0):
+        return self.mesh().devices.flat[i]
+
+    def prefix(self, n: int) -> "DeviceSlice":
+        """The leading n-device sub-slice (same axis)."""
+        if n == self.width:
+            return self
+        return DeviceSlice(self.device_ids[:n], self.axis,
+                           name=f"{self.name}[:{n}]")
+
+    def narrow(self, batch: int) -> "DeviceSlice":
+        """The widest leading sub-slice whose width divides `batch` — the
+        slice a narrower-than-full wave lowers onto (a batch that does
+        not divide the slice cannot shard over all of it)."""
+        n = max(d for d in range(1, self.width + 1) if batch % d == 0)
+        return self.prefix(n)
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of `n` that is <= cap (>= 1)."""
+    return max(d for d in range(1, max(cap, 1) + 1) if n % d == 0)
+
+
+def _pow2_floor(n: int) -> int:
+    k = 1
+    while k * 2 <= n:
+        k *= 2
+    return k
+
+
+class ServingTopology:
+    """All placement decisions of one service instance, made once.
+
+    `pool_slices` are the slices slot pools pin to (round-robin by pool
+    creation order); `annex` is the learner/assessment slice; `ring` the
+    single-device home of the replay ring's pages.  Constructors:
+
+      * `ServingTopology.host(slots)` — the flat layout the service
+        computed inline before this layer: serving devices = the largest
+        divisor of `slots` the host offers, annex = the spare devices
+        beyond them (power-of-two width), device 0 when there are none;
+      * `ServingTopology.from_mesh(mesh, slots)` — carve a real N-D
+        production mesh: each row of the leading axis becomes one named
+        pool slice, the last `annex_rows` rows become the annex, so "one
+        service instance spans a pod" is a constructor argument.
+
+    Both accept an injected device list / mesh, so topologies are unit-
+    testable without touching jax device state (slices only *store* ids;
+    meshes build lazily on first program lowering).
+    """
+
+    def __init__(self, pool_slices, annex: DeviceSlice,
+                 ring: DeviceSlice | None = None, name: str = "custom"):
+        if not pool_slices:
+            raise ValueError("a topology needs at least one pool slice")
+        self.pool_slices = tuple(pool_slices)
+        self.name = name
+        serving_ids, seen = [], set()
+        for sl in self.pool_slices:
+            for i in sl.device_ids:
+                if i not in seen:
+                    seen.add(i)
+                    serving_ids.append(i)
+        self.serving = DeviceSlice(tuple(serving_ids), name="serve")
+        self.annex = annex
+        self.ring = ring if ring is not None else self.pool_slices[0].prefix(1)
+        # the annex is "shared" when it overlaps the serving devices — the
+        # single-host fallback where learner/assessment work queues behind
+        # serving fetches instead of overlapping them
+        self.annex_shared = bool(seen & set(annex.device_ids))
+
+    # ------------------------------------------------------- constructors
+    @classmethod
+    def host(cls, slots: int, devices=None,
+             annex_width: int | None = None) -> "ServingTopology":
+        """The flat host layout: one pool slice over the largest device
+        subset whose count divides `slots` (so e.g. slots=4 on a 16-way
+        host shards over 4, and slots=2 on a 3-way host over 2), the
+        annex over the spare devices beyond it.
+
+        `annex_width` pins the annex slice width (the `--annex-width`
+        knob): the requested number of spare devices must exist, except
+        width 1 which always resolves (to the shared device-0 fallback
+        when nothing is spare).  Default: every spare device, truncated
+        to a power of two so pow2-padded assessment waves divide it.
+        """
+        if devices is None:
+            import jax
+            devices = jax.devices()
+        ids = tuple(d.id for d in devices)
+        nserve = _largest_divisor_leq(slots, len(ids))
+        serve = DeviceSlice(ids[:nserve], name="serve")
+        spare = ids[nserve:]
+        if annex_width is None:
+            width = _pow2_floor(len(spare)) if spare else 1
+        else:
+            if annex_width < 1:
+                raise ValueError(f"annex_width={annex_width} must be >= 1")
+            if annex_width > max(len(spare), 1):
+                raise ValueError(
+                    f"annex_width={annex_width} exceeds the {len(spare)} "
+                    f"spare device(s) beyond the {nserve}-wide serving "
+                    f"slice")
+            width = annex_width
+        annex = (DeviceSlice(spare[:width], name="annex") if spare
+                 else DeviceSlice(ids[:1], name="annex"))
+        return cls((serve,), annex, ring=serve.prefix(1), name="host")
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh, slots: int,
+                  annex_rows: int = 1) -> "ServingTopology":
+        """Carve a production mesh (`launch/mesh.py`) into serving rows
+        plus an annex: each row of the *leading* mesh axis is one named
+        pool slice (its devices flattened row-major), and the last
+        `annex_rows` rows merge into the annex slice.  `annex_rows=0`
+        keeps every row serving and co-locates the annex on row 0
+        (shared).  `slots` must shard over a row."""
+        dev = np.asarray(mesh.devices)
+        rows = dev.reshape((dev.shape[0], -1))
+        n_rows, row_w = rows.shape
+        if annex_rows < 0 or annex_rows >= n_rows:
+            raise ValueError(
+                f"annex_rows={annex_rows} must leave at least one of the "
+                f"{n_rows} rows serving")
+        if slots % row_w != 0:
+            raise ValueError(
+                f"slots={slots} does not shard over the {row_w}-wide mesh "
+                f"rows (axis {mesh.axis_names[0]!r} slices)")
+        axis0 = mesh.axis_names[0]
+        serve_rows = n_rows - annex_rows
+        pool_slices = tuple(
+            DeviceSlice(tuple(int(d.id) for d in rows[r]),
+                        name=f"{axis0}{r}")
+            for r in range(serve_rows))
+        if annex_rows:
+            annex_ids = tuple(int(d.id) for r in range(serve_rows, n_rows)
+                              for d in rows[r])
+            annex = DeviceSlice(annex_ids, name="annex")
+        else:
+            annex = DeviceSlice(pool_slices[0].device_ids[:1], name="annex")
+        return cls(pool_slices, annex, ring=pool_slices[0].prefix(1),
+                   name=f"mesh{tuple(int(s) for s in dev.shape)}")
+
+    # ------------------------------------------------------------ queries
+    def pool_slice(self, pool_index: int) -> DeviceSlice:
+        """The slice the `pool_index`-th created pool pins to (round-robin
+        over the carved slices — deterministic, so identical request
+        streams land identical placements)."""
+        return self.pool_slices[pool_index % len(self.pool_slices)]
+
+    def validate_slots(self, slots: int):
+        for sl in self.pool_slices:
+            if slots % sl.width != 0:
+                raise ValueError(
+                    f"slots={slots} does not shard over pool slice "
+                    f"{sl.name!r} (width {sl.width})")
+
+    def assess_slice(self, batch: int) -> DeviceSlice:
+        """Where a pooled assessment of `batch` lanes runs: the widest
+        annex sub-slice the (pow2-padded) batch shards over."""
+        return self.annex.narrow(batch)
+
+    def describe(self) -> dict:
+        return {
+            "name": self.name,
+            "devices": len(set(self.serving.device_ids)
+                           | set(self.annex.device_ids)),
+            "pool_slices": {sl.name: list(sl.device_ids)
+                            for sl in self.pool_slices},
+            "annex": {"name": self.annex.name,
+                      "devices": list(self.annex.device_ids),
+                      "width": self.annex.width,
+                      "shared": self.annex_shared},
+            "ring_device": self.ring.device_ids[0],
+        }
+
+    def __repr__(self):
+        pools = ",".join(f"{sl.name}:{sl.width}" for sl in self.pool_slices)
+        return (f"ServingTopology({self.name}: pools[{pools}] "
+                f"annex:{self.annex.width}"
+                f"{'(shared)' if self.annex_shared else ''})")

@@ -18,9 +18,12 @@ now does.
 """
 from repro.launch.serving import (  # noqa: F401
     AdaptiveSlotPolicy,
+    DeviceSlice,
+    EDFSlotPolicy,
     O2Runtime,
     O2ServiceConfig,
     Scheduler,
+    ServingTopology,
     SLOConfig,
     SLOTracker,
     SlotPolicy,

@@ -1,0 +1,223 @@
+"""Subprocess probe for tests/test_topology.py.
+
+Runs a fixed, fully deterministic request stream through a
+`TuningService` under a *forced* host-device count (the flag must be set
+before jax initializes, which is why this is a subprocess and not a
+fixture) and prints a JSON report of everything the parity tests
+compare bitwise:
+
+  * per-request summaries (runtimes, returns, steps, divergence/swap
+    annotations under O2);
+  * the pooled-assessment verdict inputs (`_pooled_best` values) and the
+    widths of the annex sub-slices the assessment waves sharded over;
+  * compiled-program accounting (per-service binds, process-wide
+    resident step programs).
+
+`--mode o2` freezes the learner (`offline_updates_per_tick=0`) and
+serves zero-noise episodes, so every decision — divergence verdicts,
+assessment bests, swap outcomes — is a pure function of the stream, not
+of annex timing; that is what makes the cross-device-count comparison
+exact.
+
+`--compare-mesh` additionally re-runs the same stream through a
+`ServingTopology.from_mesh` carving of a real 2-row mesh over the same
+device ids and reports whether results matched bitwise and how many new
+programs the second topology bound (the equal-shape-topologies
+zero-re-trace guarantee).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _build_requests(n: int, n_keys: int, jax):
+    """The drifting window stream the O2 tests use: key distribution
+    cycles so the divergence monitor fires."""
+    from repro.index.workloads import sample_keys, wr_workload
+    dists = ["uniform", "books", "osm", "fb"]
+    wrs = [1.0, 1.0, 3.0, 0.33]
+    key = jax.random.PRNGKey(7)
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        data = sample_keys(k, n_keys, dists[i % len(dists)])
+        wl, _ = wr_workload(jax.random.fold_in(k, 1), data,
+                            wrs[i % len(wrs)], total=n_keys, dist="mix")
+        out.append((data, wl, wrs[i % len(wrs)]))
+    return out
+
+
+def _summaries(results: dict) -> dict:
+    out = {}
+    for rid, r in results.items():
+        entry = {"steps": r["steps"], "runtimes": r["runtimes"],
+                 "episode_return": r["episode_return"],
+                 "best_runtime_ns": r["best_runtime_ns"],
+                 "violations": r["violations"]}
+        if "divergence" in r:
+            entry["divergence"] = r["divergence"]
+            entry["swapped"] = r["swapped"]
+        out[str(rid)] = entry
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, required=True)
+    ap.add_argument("--mode", choices=["frozen", "o2"], default="frozen")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--budget", type=int, default=4)
+    ap.add_argument("--n-keys", type=int, default=256)
+    ap.add_argument("--annex-width", type=int, default=None)
+    ap.add_argument("--compare-mesh", action="store_true")
+    ap.add_argument("--mesh-rows", type=int, default=2,
+                    help="leading-axis rows of the --compare-mesh carve "
+                         "(2 keeps the host layout's slice ids; more "
+                         "rows pin pools to distinct row slices)")
+    args = ap.parse_args()
+
+    # force the host platform device count; the forced count *replaces*
+    # any count inherited from the environment (a CI job's 4-device flag
+    # must not leak into the 1-device parity run)
+    flags = [f for f in os.environ.get("XLA_FLAGS", "").split()
+             if "xla_force_host_platform_device_count" not in f]
+    flags.append(
+        f"--xla_force_host_platform_device_count={args.devices}")
+    os.environ["XLA_FLAGS"] = " ".join(flags)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    import jax
+
+    import repro.launch.serving.o2_runtime as o2_runtime
+    import repro.launch.serving.programs as programs
+    from repro.core.ddpg import DDPGConfig
+    from repro.core.litune import LITune, LITuneConfig
+    from repro.core.o2 import O2Config
+    from repro.launch.serving import (O2ServiceConfig, ServingTopology,
+                                      TuningService)
+
+    assert len(jax.devices()) == args.devices, jax.devices()
+
+    cfg = LITuneConfig(
+        index_type="alex", episode_len=args.budget, lstm_hidden=16,
+        mlp_hidden=32, safe_rl=False,
+        ddpg=DDPGConfig(seq_len=3, burn_in=1, batch_size=8),
+        o2=O2Config(divergence_threshold=0.05, assess_every=1,
+                    offline_updates_per_window=2))
+    o2_cfg = None
+    noise = 0.05
+    if args.mode == "o2":
+        # frozen learner + zero-noise episodes: every O2 decision is a
+        # pure function of the stream (see module docstring)
+        o2_cfg = O2ServiceConfig(enabled=True, o2=cfg.o2,
+                                 offline_updates_per_tick=0)
+        noise = 0.0
+
+    # record every pooled-assessment verdict input and the annex
+    # sub-slice widths the waves actually sharded over
+    pooled_bests: list[float] = []
+    assess_widths: list[int] = []
+    real_best = o2_runtime._pooled_best
+
+    def recording_best(r0, runtimes):
+        best = real_best(r0, runtimes)
+        pooled_bests.append(best)
+        return best
+
+    o2_runtime._pooled_best = recording_best
+    # O2Runtime's construction-time warm binding also calls
+    # assess_slice; only widths resolved *inside a dispatch* count as
+    # waves that actually sharded
+    in_dispatch: list[bool] = []
+    orig_dispatch = o2_runtime.O2Runtime._dispatch_assess
+    orig_assess_slice = ServingTopology.assess_slice
+
+    def recording_dispatch(self, pk, pool, tenant, chunk):
+        in_dispatch.append(True)
+        try:
+            return orig_dispatch(self, pk, pool, tenant, chunk)
+        finally:
+            in_dispatch.pop()
+
+    def recording_assess_slice(self, batch):
+        sl = orig_assess_slice(self, batch)
+        if in_dispatch:
+            assess_widths.append(sl.width)
+        return sl
+
+    o2_runtime.O2Runtime._dispatch_assess = recording_dispatch
+    ServingTopology.assess_slice = recording_assess_slice
+
+    requests = _build_requests(args.requests, args.n_keys, jax)
+    wkeys = [jax.random.PRNGKey(50 + i) for i in range(len(requests))]
+
+    def run_stream(topology):
+        service = TuningService(
+            LITune(cfg, seed=0), slots=args.slots, o2=o2_cfg,
+            topology=topology)
+        for i, (d, wl, wr) in enumerate(requests):
+            service.submit(d, wl, wr, budget_steps=args.budget,
+                           key=wkeys[i], noise_scale=noise)
+        results = service.run()
+        service.flush_o2()
+        return service, _summaries(results)
+
+    topo = ServingTopology.host(args.slots, annex_width=args.annex_width)
+    service, summaries = run_stream(topo)
+
+    report = {
+        "devices": args.devices,
+        "mode": args.mode,
+        "topology": topo.describe(),
+        "results": summaries,
+        "programs": {
+            "misses": service.program_misses,
+            "resident": programs._step_program.cache_info().currsize,
+        },
+    }
+    if args.mode == "o2":
+        st = service.stats()["o2"]
+        report["o2"] = {
+            "assessments": st["assessments"],
+            "annex_width": st["annex_width"],
+            "annex_shared": st["annex_shared"],
+            "pooled_bests": sorted(pooled_bests),
+            "assess_widths": sorted(assess_widths),
+            "swaps": st["alex"]["swaps"],
+        }
+
+    if args.compare_mesh:
+        # the same stream through a carved production-style mesh: with 2
+        # rows its slices cover the same device ids as the host layout
+        # (the zero-re-trace case); with more rows the stream's pools
+        # pin to *distinct* row slices (the pod-spanning case)
+        rows = args.mesh_rows
+        assert args.devices % rows == 0 and args.devices >= 2 * rows
+        mesh = jax.make_mesh((rows, args.devices // rows),
+                             ("data", "model"))
+        topo2 = ServingTopology.from_mesh(mesh, args.slots)
+        resident0 = programs._step_program.cache_info().currsize
+        misses0 = service.program_misses
+        pooled_bests.clear()
+        service2, summaries2 = run_stream(topo2)
+        report["mesh_compare"] = {
+            "topology": topo2.describe(),
+            "equal": summaries2 == summaries,
+            "new_resident": (programs._step_program.cache_info().currsize
+                             - resident0),
+            "binder_misses_delta": service2.program_misses - misses0,
+            "pool_slices_used": {
+                "/".join(str(x) for x in pk): pool.slice.name
+                for pk, pool in service2.pools.items()},
+        }
+
+    json.dump(report, sys.stdout)
+    print()
+
+
+if __name__ == "__main__":
+    main()

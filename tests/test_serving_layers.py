@@ -23,8 +23,9 @@ import repro.launch.serving.programs as programs
 from repro.core import etmdp
 from repro.core.litune import LITune, LITuneConfig
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.serving import (AdaptiveSlotPolicy, SLOConfig,
-                                  StaticSlotPolicy, TuningService)
+from repro.launch.serving import (AdaptiveSlotPolicy, EDFSlotPolicy,
+                                  SLOConfig, StaticSlotPolicy,
+                                  TuningService)
 from repro.launch.serving.scheduler import Scheduler
 
 
@@ -163,14 +164,14 @@ def test_adaptive_resize_bitwise_and_zero_retrace():
     one_cycle(seed=21)
     resident0 = programs._step_program.cache_info().currsize
     misses0 = service.program_misses
-    resize_traces0 = programs._resize_program(
-        service._device_ids)._cache_size()
+    pool_slice = next(iter(service.pools.values())).slice
+    resize_traces0 = programs._resize_program(pool_slice)._cache_size()
     one_cycle(seed=22)                  # same widths, fresh requests
     assert programs._step_program.cache_info().currsize == resident0
     assert service.program_misses == misses0
     # the resize gathers re-used their traced shapes too
-    assert programs._resize_program(
-        service._device_ids)._cache_size() == resize_traces0
+    assert programs._resize_program(pool_slice)._cache_size() == \
+        resize_traces0
 
     st = service.stats()
     pk = next(iter(st["per_pool"]))
@@ -217,7 +218,7 @@ def test_deadline_truncate_preserves_survivors():
 
     slo = service.stats()["slo"]
     assert slo["breaches"] == {"dropped_queued": 0, "dropped_running": 0,
-                               "truncated": 1}
+                               "pre_dropped": 0, "truncated": 1}
     assert slo["tracked"] == 2
     assert slo["serve_ms"]["p99"] >= slo["serve_ms"]["p50"] >= 0.0
 
@@ -247,6 +248,7 @@ def test_deadline_drop_running_and_queued():
     slo = service.stats()["slo"]
     assert slo["breaches"]["dropped_running"] == 1
     assert slo["breaches"]["dropped_queued"] == 1
+    assert slo["breaches"]["pre_dropped"] == 0
     assert slo["breaches"]["truncated"] == 0
 
 
@@ -297,7 +299,7 @@ def test_stats_per_pool_breakdowns_and_slo_always_present():
     assert slo["tracked"] == 4
     assert set(slo["queue_wait_ms"]) == {"p50", "p95", "p99"}
     assert slo["breaches"] == {"dropped_queued": 0, "dropped_running": 0,
-                               "truncated": 0}
+                               "pre_dropped": 0, "truncated": 0}
 
 
 def test_static_policy_never_resizes():
@@ -311,3 +313,89 @@ def test_static_policy_never_resizes():
     pool = next(iter(service.pools.values()))
     assert pool.slots == 1
     assert pool.resizes == {"grow": 0, "shrink": 0}
+
+
+# -------------------------------------------------------------------- EDF
+def test_edf_admission_orders_by_deadline():
+    """With one slot and three queued requests, the EDF policy admits
+    the tightest absolute deadline first (deadline-less requests rank
+    last, FIFO among themselves) — while the default policy would have
+    admitted in submission order."""
+    cfg = _cfg(safe_rl=False)
+    tuner = LITune(cfg, seed=0)
+    clock = _FakeClock()
+    service = TuningService(tuner, slots=1, policy=EDFSlotPolicy(),
+                            clock=clock)
+    (d0, w0), (d1, w1), (d2, w2) = _instances(3)
+    r_loose = service.submit(d0, w0, 1.0, budget_steps=2, deadline_s=60.0)
+    r_none = service.submit(d1, w1, 1.0, budget_steps=2)
+    r_tight = service.submit(d2, w2, 1.0, budget_steps=2, deadline_s=5.0)
+
+    admitted = []
+    orig = service.slo.on_admit
+
+    def spy(req, now):
+        admitted.append(req.rid)
+        orig(req, now)
+
+    service.slo.on_admit = spy
+    service.run()
+    assert admitted == [r_tight, r_loose, r_none]
+    assert service.stats()["scheduler"]["policy"] == "edf"
+
+
+def test_edf_pre_drops_hopeless_requests():
+    """A queued request whose budget cannot fit its deadline at the
+    measured tick rate is pre-dropped (flagged, counted) before it ever
+    occupies a slot; feasible requests are untouched."""
+    cfg = _cfg(safe_rl=False)
+    tuner = LITune(cfg, seed=0)
+    clock = _FakeClock()
+    service = TuningService(tuner, slots=1, policy=EDFSlotPolicy(),
+                            clock=clock)
+    # a measured tick rate of 1 s per episode-step (injected: the fake
+    # clock never advances through real ticks)
+    service.scheduler.s_per_step = 1.0
+    (d0, w0), (d1, w1) = _instances(2)
+    r_hopeless = service.submit(d0, w0, 1.0, budget_steps=12,
+                                deadline_s=5.0)      # needs ~12 s
+    r_fine = service.submit(d1, w1, 1.0, budget_steps=2,
+                            deadline_s=60.0)
+    results = service.run()
+
+    assert results[r_hopeless] == {
+        "dropped": True, "slo_breached": True, "pre_dropped": True,
+        "steps": 0, "terminated_early": False}
+    assert results[r_fine]["steps"] == 2
+    assert "dropped" not in results[r_fine]
+    slo = service.stats()["slo"]
+    assert slo["breaches"]["pre_dropped"] == 1
+    assert slo["breaches"]["dropped_queued"] == 1    # pre-drop is queued
+
+
+def test_edf_policy_unit():
+    """Policy seam: ordering is by absolute deadline with FIFO ties, and
+    hopelessness needs a measured rate plus an armed deadline."""
+    import dataclasses as dc
+
+    policy = EDFSlotPolicy()
+
+    @dc.dataclass
+    class R:
+        rid: int
+        submitted_at: float
+        deadline_s: float | None
+        budget_steps: int = 4
+
+    a = R(0, 0.0, 10.0)
+    b = R(1, 0.0, 2.0)
+    c = R(2, 0.0, None)
+    d = R(3, 1.0, None)
+    assert [r.rid for r in policy.admission_order([a, b, c, d], 0.0)] == \
+        [1, 0, 2, 3]
+    # no rate estimate or no deadline -> never hopeless
+    assert not policy.hopeless(b, 0.0, None)
+    assert not policy.hopeless(c, 0.0, 1.0)
+    # budget 4 steps at 1 s/step vs 2 s left -> hopeless
+    assert policy.hopeless(b, 0.0, 1.0)
+    assert not policy.hopeless(a, 0.0, 1.0)
