@@ -13,7 +13,14 @@ The guarded number is picked by the artifact's ``benchmark`` field:
               adaptive slot scheduling beats static pools under bursts);
   o2_annex  — the assessment-phase *speedup* of the widest annex slice
               over the 1-device serial annex (>1 means pooled
-              assessments actually shard over the slice).
+              assessments actually shard over the slice);
+  swap_safety — the poisoned-canary drill's pre/post probe *ratio*
+              (1.0 means the rollback restored the incumbent bitwise).
+              This gate also enforces hard invariants before comparing:
+              at least one rolled-back swap, zero pool-wide promotions
+              of the poisoned candidate, and zero new step-program
+              binds across the whole canary cycle — any violation fails
+              the gate outright, regardless of tolerance.
 
 All are dimensionless on purpose, so the committed baselines survive
 runner-hardware drift that absolute req/s or milliseconds would not.
@@ -44,11 +51,33 @@ def annex_speedup(doc: dict) -> float:
     return float(doc["assess_speedup"])
 
 
+def swap_safety(doc: dict) -> float:
+    """Validate the drill's hard invariants, then hand back the probe
+    ratio for the usual regression comparison.  A poisoned model that
+    promoted pool-wide — or a rollback that failed to fire, or a canary
+    cycle that re-traced programs — is a correctness failure, not a
+    perf regression; no tolerance applies."""
+    sw = doc["swaps"]
+    problems = []
+    if sw["rolled_back"] < 1:
+        problems.append("no swap was rolled back")
+    if sw["promoted"] != 0:
+        problems.append(f"{sw['promoted']} poisoned candidate(s) "
+                        f"promoted pool-wide")
+    if doc["new_binds"] != 0:
+        problems.append(f"{doc['new_binds']} new step-program bind(s) "
+                        f"during the canary cycle")
+    if problems:
+        raise ValueError("; ".join(problems))
+    return float(doc["post_rollback_ns_ratio"])
+
+
 # benchmark name -> (description of the guarded ratio, extractor)
 METRICS = {
     "o2_serve": ("o2-vs-frozen ratio", o2_ratio),
     "slo_serve": ("static/adaptive p95 queue-wait ratio", slo_ratio),
     "o2_annex": ("annex-slice assessment speedup", annex_speedup),
+    "swap_safety": ("post-rollback probe ratio", swap_safety),
 }
 
 
@@ -77,7 +106,12 @@ def main():
         sys.exit(2)
     label, extract = METRICS[name]
 
-    cur, base = extract(current), extract(baseline)
+    try:
+        cur, base = extract(current), extract(baseline)
+    except ValueError as e:
+        print(f"check_bench: {name} invariant violation: {e}",
+              file=sys.stderr)
+        sys.exit(1)
     floor = base * (1.0 - args.max_regression)
     verdict = "OK" if cur >= floor else "REGRESSION"
     print(f"check_bench: {label} current={cur:.3f} "

@@ -72,7 +72,8 @@ from repro.core.litune import LITune, LITuneConfig
 from repro.core.o2 import O2Config
 from repro.index.workloads import sample_keys, wr_workload
 from repro.launch.serving import (DeviceSlice, O2ServiceConfig,
-                                  ServingTopology, TuningService)
+                                  ServeConfig, ServingTopology,
+                                  TuningService)
 from repro.launch.serving.topology import _largest_divisor_leq
 
 
@@ -94,7 +95,9 @@ def make_requests(n: int, n_keys: int, seed: int = 1):
 
 def bench_once(tuner: LITune, requests, budget: int, slots: int,
                o2: O2ServiceConfig | None, topology=None):
-    service = TuningService(tuner, slots=slots, o2=o2, topology=topology)
+    service = TuningService(tuner, config=ServeConfig(
+        slots=slots, o2=o2 if o2 is not None else O2ServiceConfig(),
+        topology=topology))
     t0 = time.perf_counter()
     for data, wl, wr in requests:
         service.submit(data, wl, wr, budget_steps=budget, noise_scale=0.02)

@@ -32,6 +32,24 @@ the committed baseline survives runner-hardware drift; ``--json`` writes
 it for the CI gate (benchmarks/check_bench.py).  Best of ``--repeats``
 runs per mode (max ratio paired from per-mode minima) since CI hosts are
 noisy.
+
+``--scenario poisoned`` runs a different drill — the swap-safety smoke:
+
+    PYTHONPATH=src python -m benchmarks.slo_serve --scenario poisoned \
+        --json BENCH_swap_safety.json
+
+A canary-armed O2 service serves a steady stream (building the tenant's
+score baseline), then its offline learner is *poisoned* (params negated,
+fine-tuning frozen) while the verdict seam is patched to report the
+poisoned model winning every assessment — the exact failure mode the
+staged swap pipeline exists to contain.  Drifted waves then fire the
+divergence monitor; every forced win must die in the canary stage
+(`canary_tolerance` is pinned so promotion is impossible: the drill
+measures the containment machinery, not the scorer's judgment).  The
+artifact reports `stats()["swaps"]`, a deterministic pre/post probe
+ratio (1.0 — the incumbent was never touched), and the step-program
+bind delta across the whole cycle (0 — canary lanes ride resident
+executables).  check_bench.py gates all three as `swap_safety`.
 """
 from __future__ import annotations
 
@@ -54,7 +72,7 @@ import numpy as np
 from repro.core.litune import LITune, LITuneConfig
 from repro.index.workloads import sample_keys, wr_workload
 from repro.launch.serving import (AdaptiveSlotPolicy, EDFSlotPolicy,
-                                  TuningService)
+                                  ServeConfig, TuningService)
 
 
 def make_arrivals(n_bursts: int, burst_mean: int, gap_s: float,
@@ -110,8 +128,8 @@ def bench_mode(mk_tuner, arrivals, budget: int, slots: int,
     p95 queue-wait (CI hosts are noisy; the floor is the capability)."""
     best = None
     for _ in range(repeats):
-        service = TuningService(mk_tuner(), slots=slots,
-                                policy=policy_fn())
+        service = TuningService(mk_tuner(), config=ServeConfig(
+            slots=slots, policy=policy_fn()))
         span = drive(service, arrivals, budget, deadline_s)
         st = service.stats()
         slo = st["slo"]
@@ -120,6 +138,136 @@ def bench_mode(mk_tuner, arrivals, budget: int, slots: int,
                 best["slo"]["queue_wait_ms"]["p95"]:
             best = row
     return best
+
+
+def run_poisoned(args):
+    """The swap-safety drill: a poisoned offline model, a verdict seam
+    forced to declare it the winner, and a canary stage that must contain
+    it.  Every knob that decides an outcome is pinned so the run is
+    deterministic given `--seed` — the committed baseline is exact."""
+    import dataclasses
+
+    from repro.core.o2 import O2Config
+    from repro.index.workloads import StreamConfig, stream_windows
+    from repro.launch.serving import O2ServiceConfig, SwapConfig
+    from repro.launch.serving import o2_runtime as o2_mod
+
+    budget = args.budget
+    slots = max(args.slots, 4)           # >=4: a canary lane + controls
+    # 2048-key windows on a 64-point quantile grid separate steady from
+    # drifted KS cleanly (steady noise <= ~0.13, drift >= ~0.17); smaller
+    # windows drown the drift signal in sampling noise
+    n_keys = max(args.n_keys, 2048)
+    cfg = LITuneConfig(
+        index_type="alex", episode_len=budget,
+        lstm_hidden=32, mlp_hidden=64,
+        o2=O2Config(divergence_threshold=0.15, n_quantiles=64,
+                    assess_every=1,
+                    # the poison must persist: no fine-tune rounds may
+                    # move the offline tree off the negated params
+                    offline_updates_per_window=0))
+    service = TuningService(LITune(cfg, seed=args.seed), config=ServeConfig(
+        slots=slots, seed=args.seed,
+        o2=O2ServiceConfig(enabled=True, o2=cfg.o2,
+                           offline_updates_per_tick=0),
+        swap=SwapConfig(canary=True, canary_fraction=0.25,
+                        canary_min_episodes=1,
+                        # strictly negative tolerance: promotion would
+                        # need the canary mean <= 0 x control, impossible
+                        # for positive scores — the drill pins the
+                        # decision so only the containment machinery
+                        # (not the scorer's judgment) is under test
+                        canary_tolerance=-1.0,
+                        canary_timeout_ticks=64)))
+    key = jax.random.PRNGKey(args.seed + 1)
+    steady = StreamConfig(n_windows=2 * slots, base_per_window=n_keys,
+                          updates_per_window=n_keys, dist="mix",
+                          drift_per_window=0.0, wr_start=1.0, wr_end=1.0)
+    # constant wr on purpose: the workload split depends on it, and a
+    # second (reads, inserts) shape would open a second pool mid-drill
+    drifted = dataclasses.replace(steady, drift_per_window=1.0)
+
+    def serve_wave(stream_cfg, fold):
+        for _, data, wl, wr in stream_windows(jax.random.fold_in(key, fold),
+                                              stream_cfg):
+            service.submit(data, wl, wr, budget_steps=budget,
+                           noise_scale=0.02)
+        service.run()
+        service.flush_o2()
+
+    # the deterministic probe: a fixed steady window under a fixed key,
+    # zero noise — bitwise repeatable whenever the incumbent params are
+    # untouched (post-rollback it must reproduce the pre-poison result)
+    probe_cfg = dataclasses.replace(steady, n_windows=1)
+    _, pdata, pwl, pwr = next(iter(stream_windows(
+        jax.random.fold_in(key, 99), probe_cfg)))
+    probe_key = jax.random.PRNGKey(args.seed + 7)
+
+    def probe():
+        rid = service.submit(pdata, pwl, pwr, budget_steps=budget,
+                             deterministic=True, key=probe_key)
+        service.run()
+        return float(service.results[rid]["best_runtime_ns"])
+
+    # phase A: steady traffic, twice (program warmup: admission-wave
+    # widths are staggering-dependent, one pass can miss one), then the
+    # pre-poison probe and the bind-accounting snapshot
+    print("# swap_safety: steady warmup ...")
+    serve_wave(steady, fold=0)
+    serve_wave(steady, fold=1)
+    r_pre = probe()
+    st0 = service.stats()
+    binds0 = st0["program_misses"] + st0["programs_resident"]
+
+    # phase B: poison the offline model (a catastrophically bad
+    # fine-tune) and force every pooled assessment to declare it the
+    # winner; drifted waves fire the divergence monitor until the canary
+    # stage has rolled the candidate back
+    print("# swap_safety: poisoning offline model, serving drift ...")
+    tenant = service.tenants["alex"]
+    tenant.offline["params"] = jax.tree.map(lambda x: -x,
+                                            tenant.offline["params"])
+    tenant.ready_params = jax.tree.map(lambda x: -x, tenant.ready_params)
+    real_pooled_best = o2_mod._pooled_best
+    o2_mod._pooled_best = lambda r0, runtimes: 0.0
+    rounds = 0
+    try:
+        while service.stats()["swaps"]["rolled_back"] < 1 and rounds < 8:
+            serve_wave(drifted, fold=10 + rounds)
+            rounds += 1
+    finally:
+        o2_mod._pooled_best = real_pooled_best
+
+    # phase C: the post-rollback probe — same window, same key; a lane
+    # fraction carried the poison briefly, the incumbent never moved
+    r_post = probe()
+    st1 = service.stats()
+    new_binds = st1["program_misses"] + st1["programs_resident"] - binds0
+    sw = st1["swaps"]
+    ratio = r_pre / max(r_post, 1e-9)
+
+    print(f"# swap_safety  slots={slots} budget={budget} n_keys={n_keys} "
+          f"rounds={rounds} seed={args.seed}")
+    print("benchmark,candidates,canaried,rolled_back,promoted,deferred,"
+          "probe_ratio,new_binds")
+    print(f"swap_safety,{sw['candidates']},{sw['canaried']},"
+          f"{sw['rolled_back']},{sw['promoted']},{sw['deferred']},"
+          f"{ratio:.6f},{new_binds}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "swap_safety",
+                       "config": {"slots": slots, "budget": budget,
+                                  "n_keys": n_keys, "seed": args.seed,
+                                  "rounds": rounds,
+                                  "devices": len(jax.devices())},
+                       "swaps": sw,
+                       "o2": {"windows": st1["o2"]["alex"]["windows"],
+                              "diverged": st1["o2"]["alex"]["diverged"],
+                              "assessments": st1["o2"]["assessments"]},
+                       "r_pre_ns": r_pre, "r_post_ns": r_post,
+                       "post_rollback_ns_ratio": ratio,
+                       "new_binds": new_binds}, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 def main():
@@ -146,7 +294,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as a JSON artifact (CI gate)")
+    ap.add_argument("--scenario", default="bursts",
+                    choices=["bursts", "poisoned"],
+                    help="'bursts' races static vs adaptive scheduling; "
+                         "'poisoned' runs the swap-safety drill (a forced"
+                         "-win poisoned model must die in the canary "
+                         "stage; see module docstring)")
     args = ap.parse_args()
+
+    if args.scenario == "poisoned":
+        return run_poisoned(args)
 
     cfg = LITuneConfig(index_type="alex", episode_len=args.budget,
                        lstm_hidden=32, mlp_hidden=64)

@@ -37,7 +37,7 @@ import jax
 
 from repro.core.litune import LITune, LITuneConfig
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.serving import TuningService
+from repro.launch.serving import ServeConfig, TuningService
 
 
 def make_requests(n: int, n_keys: int, seed: int = 1, mixed_wr: bool = False):
@@ -65,7 +65,7 @@ def bench_serial(tuner: LITune, requests, budget: int) -> float:
 
 
 def bench_batched(tuner: LITune, requests, budget: int, slots: int) -> float:
-    service = TuningService(tuner, slots=slots)
+    service = TuningService(tuner, config=ServeConfig(slots=slots))
     t0 = time.perf_counter()
     for data, wl, wr in requests:
         service.submit(data, wl, wr, budget_steps=budget)

@@ -20,7 +20,8 @@ from repro.core.litune import LITune, LITuneConfig
 from repro.core.maml import MetaConfig
 from repro.core.o2 import O2Config
 from repro.index.workloads import StreamConfig, stream_windows
-from repro.launch.serving import O2ServiceConfig, TuningService
+from repro.launch.serving import (O2ServiceConfig, ServeConfig,
+                                  TuningService)
 
 
 def main():
@@ -34,9 +35,9 @@ def main():
     tuner = LITune(cfg, seed=0)
     print("pretraining ...")
     tuner.pretrain(n_outer=2)
-    service = TuningService(
-        tuner, slots=1,
-        o2=O2ServiceConfig(enabled=True, o2=cfg.o2, strict_order=True))
+    service = TuningService(tuner, config=ServeConfig(
+        slots=1,
+        o2=O2ServiceConfig(enabled=True, o2=cfg.o2, strict_order=True)))
 
     stream_cfg = StreamConfig(
         n_windows=8, base_per_window=2048, updates_per_window=2048,

@@ -19,7 +19,7 @@ from repro.core.ddpg import DDPGConfig
 from repro.core.litune import LITune, LITuneConfig
 from repro.core.maml import MetaConfig
 from repro.index.workloads import sample_keys, wr_workload
-from repro.launch.serving import TuningService
+from repro.launch.serving import ServeConfig, TuningService
 
 
 def small_cfg(index_type: str) -> LITuneConfig:
@@ -38,7 +38,7 @@ def main():
         tuner.pretrain(n_outer=2)
         agents[index_type] = tuner
 
-    service = TuningService(agents, slots=4)
+    service = TuningService(agents, config=ServeConfig(slots=4))
     key = jax.random.PRNGKey(7)
     tenants = [
         # (index, dataset, wr ratio, budget)

@@ -154,6 +154,39 @@ def batched_episode_scan(params, carry, noise_scale, n_steps: int, net_cfg,
     return jax.lax.scan(body, carry, None, length=n_steps)
 
 
+def batched_episode_core_lanes(params_lanes, carry, noise_scale, net_cfg,
+                               env_cfg: E.EnvConfig, et_cfg: ETMDPConfig,
+                               deterministic: bool = False):
+    """One step for B concurrent episodes with **per-lane** policy params:
+    every leaf of `params_lanes` carries a leading slot axis, so each lane
+    may serve a different parameter version — the mixed pool a canary swap
+    creates (`launch/serving`).  The map body is the *same* unbatched
+    program as `batched_episode_core`'s (params ride the mapped operand
+    tuple instead of the closure), so a lane whose params equal the shared
+    tree produces bitwise-identical outputs to the shared-params program —
+    control lanes are untouched by the canary next door.
+    """
+    return jax.lax.map(
+        lambda pcn: _episode_step_core(pcn[0], pcn[1], pcn[2], net_cfg,
+                                       env_cfg, et_cfg, deterministic),
+        (params_lanes, carry, noise_scale))
+
+
+def batched_episode_scan_lanes(params_lanes, carry, noise_scale,
+                               n_steps: int, net_cfg,
+                               env_cfg: E.EnvConfig, et_cfg: ETMDPConfig,
+                               deterministic: bool = False):
+    """`n_steps` ticks of `batched_episode_core_lanes` under one
+    `lax.scan` — the per-lane-params twin of `batched_episode_scan`, with
+    the same whole-tick-map scan body (see that docstring for why the
+    lowering order matters for bitwise parity)."""
+    def body(c, _):
+        return batched_episode_core_lanes(params_lanes, c, noise_scale,
+                                          net_cfg, env_cfg, et_cfg,
+                                          deterministic)
+    return jax.lax.scan(body, carry, None, length=n_steps)
+
+
 def transition_view(outputs: dict) -> dict:
     """The replay-facing slice of a step's outputs, keyed like the
     sequence-replay ring's wide fields (`core.replay.WIDE_FIELDS`):

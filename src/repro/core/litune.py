@@ -104,15 +104,15 @@ class LITune:
         `instances` is an iterable of `(data_keys, workload, wr_ratio)`
         tuples; returns summaries in submission order.
         """
-        from repro.launch.serving import TuningService
+        from repro.launch.serving import ServeConfig, TuningService
         # advance our PRNG so repeated tune_many calls explore differently,
         # matching tune()'s per-request key splitting
         self.key, k = jax.random.split(self.key)
-        service = TuningService(
-            self, slots=slots,
+        service = TuningService(self, config=ServeConfig(
+            slots=slots,
             # any budget tune() accepts must fit the service horizon too
             horizon_cap=max(256, budget_steps or self.cfg.episode_len),
-            seed=int(np.asarray(jax.random.key_data(k))[-1]))
+            seed=int(np.asarray(jax.random.key_data(k))[-1])))
         rids = [service.submit(data, workload, wr,
                                budget_steps=budget_steps,
                                deterministic=deterministic)
@@ -159,11 +159,12 @@ class LITune:
 
     def _stream_via_service(self, windows, max_steps: int):
         """O2 window stream through the batched serving engine."""
-        from repro.launch.serving import O2ServiceConfig, TuningService
-        service = TuningService(
-            self, slots=1, horizon_cap=max(256, max_steps),
+        from repro.launch.serving import (O2ServiceConfig, ServeConfig,
+                                          TuningService)
+        service = TuningService(self, config=ServeConfig(
+            slots=1, horizon_cap=max(256, max_steps),
             o2=O2ServiceConfig(enabled=True, o2=self.cfg.o2,
-                               strict_order=True))
+                               strict_order=True)))
         rids, widx = [], []
         for w, data, workload, wr in windows:
             # same per-window key draws as the serial stream above

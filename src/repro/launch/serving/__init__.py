@@ -81,7 +81,21 @@ Key properties:
     the *same* cached K-ladder step programs, verdicts drained when
     ready.  `strict_order` mode keeps the fully synchronous
     serial-equivalent interleaving for parity.
+  * **trustworthy hot-swaps** — `SwapConfig` stages the promotion path:
+    a bootstrap CI over the pooled assessment windows gates the verdict,
+    a winning candidate canaries on a lane fraction of each pool (per-
+    lane params are program inputs — a mixed pool is a pure buffer
+    update, zero re-traces), and promotions auto-roll-back bitwise when
+    the divergence monitor re-fires or scores regress inside the watch
+    window.  Both stages default off; `stats()["swaps"]` counts the
+    state machine (tests/test_swap_pipeline.py).
+  * **one config object** — the serving posture (slots, O2, policy,
+    SLOs, topology, swap trust policy) is a frozen `ServeConfig` passed
+    as `TuningService(agents, config=...)`; the legacy per-knob kwargs
+    adapt with a `DeprecationWarning`.
 """
+from repro.launch.serving.config import (ServeConfig, SwapConfig,
+                                         config_from_legacy)
 from repro.launch.serving.o2_runtime import O2Runtime, O2ServiceConfig
 from repro.launch.serving.pools import _SlotPool, summarize_episode
 from repro.launch.serving.scheduler import (AdaptiveSlotPolicy,
@@ -90,6 +104,9 @@ from repro.launch.serving.scheduler import (AdaptiveSlotPolicy,
                                             TuneRequest)
 from repro.launch.serving.service import TuningService
 from repro.launch.serving.slo import SLOConfig, SLOTracker
+from repro.launch.serving.stats import (O2Stats, PoolStats, SchedulerStats,
+                                        ServiceStats, SLOStats, SwapStats,
+                                        TenantSwapStats)
 from repro.launch.serving.topology import DeviceSlice, ServingTopology
 
 __all__ = [
@@ -98,12 +115,22 @@ __all__ = [
     "EDFSlotPolicy",
     "O2Runtime",
     "O2ServiceConfig",
+    "O2Stats",
+    "PoolStats",
     "Scheduler",
+    "SchedulerStats",
+    "ServeConfig",
+    "ServiceStats",
     "ServingTopology",
     "SLOConfig",
+    "SLOStats",
     "SLOTracker",
     "SlotPolicy",
     "StaticSlotPolicy",
+    "SwapConfig",
+    "SwapStats",
+    "TenantSwapStats",
+    "config_from_legacy",
     "summarize_episode",
     "TuneRequest",
     "TuningService",

@@ -1,0 +1,148 @@
+"""Consolidated serving configuration: one frozen object per service.
+
+`TuningService` grew one constructor kwarg per PR (`slots`,
+`horizon_cap`, `seed`, `o2`, `policy`, `slo`, `clock`, `topology` — and
+this PR adds the swap-pipeline knobs).  `ServeConfig` folds all of them
+into a single frozen dataclass so a service is constructed as
+
+    TuningService(agents, config=ServeConfig(slots=8, o2=..., swap=...))
+
+and a deployment's serving posture is one value that can be logged,
+diffed, and passed around.  The legacy kwarg form still works through a
+thin adapter in `TuningService.__init__` (it builds the equivalent
+`ServeConfig` and emits a `DeprecationWarning`); mixing `config=` with
+legacy kwargs is an error.
+
+`SwapConfig` is the trust policy for hot-swaps (the paper's O2 promotion
+step, hardened for fleet scale where one noisy assessment verdict would
+otherwise be a mass regression):
+
+  * **CI gate** (`ci_gate`) — a pooled assessment dispatch already
+    carries up to `2*slots` windows; instead of promoting on any single
+    window's `_pooled_best` win, bootstrap the per-window
+    offline-vs-online deltas into a confidence interval and promote only
+    when the interval excludes zero (UTune's uncertainty-aware tuning,
+    PAPERS.md).
+  * **Canary stage** (`canary`) — a winning swap first lands on
+    `canary_fraction` of each pool's lanes.  Params are per-lane program
+    *inputs* (`programs._step_program(per_lane=True)`), so the mixed
+    pool is a pure buffer update — zero re-traces.  Canary lanes'
+    retired summaries are scored against the concurrent control lanes
+    (or the tenant's rolling pre-swap baseline when the pool has no
+    control lane) before pool-wide promotion.
+  * **Auto-rollback** — the pre-swap tree is kept per tenant; a
+    promotion reverts bitwise when the post-swap `DivergenceMonitor`
+    re-fires within `rollback_windows` observed windows, or when
+    post-promotion summaries regress past `rollback_tolerance`.
+
+Both gates default **off**: the default `SwapConfig()` reproduces the
+immediate-swap path bitwise, so every serial-parity guarantee is
+untouched (tests/test_o2_service.py runs unmodified).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.launch.serving.o2_runtime import O2ServiceConfig
+from repro.launch.serving.scheduler import SlotPolicy
+from repro.launch.serving.slo import SLOConfig
+from repro.launch.serving.topology import ServingTopology
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapConfig:
+    """Trust policy for promoting offline params into serving pools."""
+
+    # ---- verdict gate: bootstrap CI over the pooled assessment windows
+    # promote only when the bootstrap CI on the offline-vs-online delta
+    # excludes zero (False -> today's per-window `_pooled_best` check)
+    ci_gate: bool = False
+    ci_level: float = 0.95          # two-sided CI coverage
+    ci_resamples: int = 200         # bootstrap draws per verdict
+    ci_seed: int = 0                # seeds the (deterministic) resampler
+
+    # ---- canary stage: a winning swap serves a lane fraction first
+    canary: bool = False
+    canary_fraction: float = 0.25   # of each pool's lanes (>=1 lane)
+    # retired canary-lane summaries required before the arm comparison
+    canary_min_episodes: int = 2
+    # canary arm may be this much worse (relative, on tuned-over-default
+    # runtime) than the control arm and still promote
+    canary_tolerance: float = 0.05
+    # service ticks a canary may idle without enough samples before it is
+    # rolled back (a canary must never become a permanent mixed pool)
+    canary_timeout_ticks: int = 256
+
+    # ---- auto-rollback: the post-promotion watch window
+    # observed windows after a promotion during which a divergence-monitor
+    # re-fire (or a score regression) reverts the swap bitwise
+    rollback_windows: int = 4
+    # post-promotion summaries may be this much worse (relative) than the
+    # tenant's pre-swap rolling baseline before the swap is reverted
+    rollback_tolerance: float = 0.10
+    # retired-episode scores kept in the tenant's rolling baseline (the
+    # control arm for slots=1 pools and the rollback regression check)
+    baseline_window: int = 32
+
+    def __post_init__(self):
+        if not 0.0 < self.ci_level < 1.0:
+            raise ValueError(f"ci_level={self.ci_level} must be in (0, 1)")
+        if not 0.0 < self.canary_fraction <= 1.0:
+            raise ValueError(f"canary_fraction={self.canary_fraction} "
+                             f"must be in (0, 1]")
+        if self.canary_min_episodes < 1:
+            raise ValueError("canary_min_episodes must be >= 1")
+        if self.rollback_windows < 0:
+            raise ValueError("rollback_windows must be >= 0")
+
+    @property
+    def staged(self) -> bool:
+        """Whether any stage beyond the immediate swap is armed."""
+        return self.ci_gate or self.canary
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Everything `TuningService` needs beyond the agents themselves.
+
+    Field-for-field the old constructor kwargs, plus `swap` (the
+    hot-swap trust policy).  `policy`, `clock`, and `topology` keep
+    their None-means-default semantics (static policy, `time.
+    perf_counter`, flat host topology) so `ServeConfig()` is exactly the
+    historical default service.
+    """
+
+    slots: int = 4
+    horizon_cap: int = 256
+    seed: int = 0
+    o2: O2ServiceConfig = dataclasses.field(default_factory=O2ServiceConfig)
+    policy: SlotPolicy | None = None
+    slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
+    clock: Callable[[], float] | None = None
+    topology: ServingTopology | None = None
+    swap: SwapConfig = dataclasses.field(default_factory=SwapConfig)
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError(f"slots={self.slots} must be >= 1")
+        if self.horizon_cap < 1:
+            raise ValueError(f"horizon_cap={self.horizon_cap} must be >= 1")
+
+
+# the legacy TuningService kwargs the adapter accepts, in their
+# historical positional order (shared with tests and the deprecation
+# message so the two never drift)
+LEGACY_KWARGS = ("slots", "horizon_cap", "seed", "o2", "policy", "slo",
+                 "clock", "topology", "swap")
+
+
+def config_from_legacy(**kwargs) -> ServeConfig:
+    """Build a `ServeConfig` from the pre-consolidation kwarg form.
+    None values fall through to the dataclass defaults, matching the old
+    constructor's `x if x is not None else default` handling."""
+    unknown = set(kwargs) - set(LEGACY_KWARGS)
+    if unknown:
+        raise TypeError(f"unknown TuningService kwargs: {sorted(unknown)} "
+                        f"(accepted: {list(LEGACY_KWARGS)})")
+    return ServeConfig(**{k: v for k, v in kwargs.items() if v is not None})

@@ -1,5 +1,6 @@
 """O2 runtime layer of the serving stack: continuous tuning off the
-serving critical path.
+serving critical path — and the trust machinery that decides when its
+verdicts are allowed to touch production pools.
 
 Owns everything the frozen serving path does not need: per-tenant
 divergence monitors, the device-resident replay rings retired episodes
@@ -38,6 +39,8 @@ from repro.launch.serving.programs import (_batched_admit_keys,
                                            _extract_episode_program,
                                            _pow2_ladder, _reset_program,
                                            _step_program)
+from repro.launch.serving.stats import (O2Stats, SwapStats, TenantO2Stats,
+                                        TenantSwapStats)
 from repro.launch.serving.topology import ServingTopology
 
 
@@ -88,7 +91,7 @@ class _TenantO2:
     batches hopped to the annex per round."""
 
     def __init__(self, tuner, svc_cfg: O2ServiceConfig, annex=None,
-                 ring_device=None):
+                 ring_device=None, baseline_window: int = 32):
         self.cfg = svc_cfg.o2
         self.net_cfg = tuner.cfg.net_cfg()
         self.ddpg_cfg = tuner.cfg.ddpg
@@ -117,6 +120,11 @@ class _TenantO2:
         self._round_dirty = False   # a round completed but isn't published
         self.swaps = 0
         self.swap_times_s: list[float] = []
+        # the swap pipeline's verdict state machine counters, plus the
+        # rolling pre-swap score baseline (the control arm for pools with
+        # no spare lane, and the post-promotion regression reference)
+        self.swap = TenantSwapStats()
+        self.baseline: deque[float] = deque(maxlen=baseline_window)
 
     def _place(self, tree):
         return tree if self.annex is None else jax.device_put(tree,
@@ -161,6 +169,56 @@ def _pooled_best(r0: float, runtimes: np.ndarray) -> float:
     return min(r0, float(np.min(runtimes)))
 
 
+def _bootstrap_ci(deltas, level: float, resamples: int,
+                  rng: np.random.Generator) -> tuple[float, float]:
+    """Percentile-bootstrap confidence interval on the mean of `deltas`
+    (the per-window offline-vs-online runtime improvements a pooled
+    assessment produced).  Deterministic given the generator state — the
+    runtime seeds it from `SwapConfig.ci_seed`, so a replayed request
+    stream reproduces every gate decision."""
+    deltas = np.asarray(deltas, np.float64)
+    if deltas.size == 1:
+        return float(deltas[0]), float(deltas[0])
+    idx = rng.integers(0, deltas.size, size=(resamples, deltas.size))
+    means = deltas[idx].mean(axis=1)
+    alpha = (1.0 - level) / 2.0
+    return (float(np.quantile(means, alpha)),
+            float(np.quantile(means, 1.0 - alpha)))
+
+
+def _lane_score(summary: dict) -> float:
+    """One retired episode's score for canary-arm comparison: tuned best
+    runtime normalized by the default-config runtime (lower is better).
+    The normalization makes lanes serving different windows comparable —
+    raw runtimes mix the workload's difficulty into the arm means.
+    Module-level on purpose: the seam tests patch to force a verdict."""
+    return summary["best_runtime_ns"] / max(float(summary["r0_ns"]), 1e-9)
+
+
+@dataclasses.dataclass
+class _SwapTrial:
+    """One tenant's in-flight swap trial: the canary stage (candidate
+    params live on a lane fraction of every pool) and, after promotion,
+    the post-swap watch window.  Holds everything a bitwise rollback
+    needs: the judged candidate tree, the pre-swap online state, and the
+    divergence monitor's pre-promotion reference snapshot."""
+    index_type: str
+    req: object                  # the request whose verdict started it
+    window: int                  # 0-based window index for re-anchoring
+    summary: dict                # its summary (swap flags land here)
+    candidate: object            # the judged param tree (owned copy)
+    prev_online: object          # pre-swap online state (owned copy)
+    baseline_mean: float | None  # tenant rolling baseline at trial start
+    state: str = "canary"        # "canary" -> "promoted"
+    canary_scores: list = dataclasses.field(default_factory=list)
+    control_scores: list = dataclasses.field(default_factory=list)
+    post_scores: list = dataclasses.field(default_factory=list)
+    ticks: int = 0               # service ticks spent in the canary stage
+    watch_windows: int = 0       # windows observed since promotion
+    monitor_ref: tuple | None = None  # (ref_quantiles, ref_wr) pre-swap
+    prev_anchor: int | None = None    # anchor window index pre-swap
+
+
 @dataclasses.dataclass
 class _PendingAssess:
     """One dispatched pooled assessment awaiting its verdict: up to
@@ -191,8 +249,16 @@ class O2Runtime:
 
     def __init__(self, agents: dict, svc_cfg: O2ServiceConfig, pools: dict,
                  topology: ServingTopology, horizon_cap: int,
-                 max_assess_width: int):
+                 max_assess_width: int, swap_cfg=None, clock=None):
         self.cfg = svc_cfg
+        if swap_cfg is None:
+            # lazy: config.py imports O2ServiceConfig from this module
+            from repro.launch.serving.config import SwapConfig
+            swap_cfg = SwapConfig()
+        self.swap_cfg = swap_cfg
+        # the service's injectable clock (swap timing rides it, so tests
+        # and benchmarks measure swaps on the same timebase as SLOs)
+        self.clock = clock if clock is not None else time.perf_counter
         self.pools = pools              # shared with the service
         self.topology = topology
         # the learner state and its scanned update program live on the
@@ -202,8 +268,13 @@ class O2Runtime:
         self.max_assess_width = max_assess_width
         self.tenants: dict[str, _TenantO2] = {
             it: _TenantO2(tuner, svc_cfg, annex=self.annex,
-                          ring_device=topology.ring.device())
+                          ring_device=topology.ring.device(),
+                          baseline_window=swap_cfg.baseline_window)
             for it, tuner in agents.items()}
+        # at most one swap trial per tenant (verdict wins landing while
+        # one is live are deferred, not queued): index_type -> _SwapTrial
+        self.trials: dict[str, _SwapTrial] = {}
+        self._ci_rng = np.random.default_rng(swap_cfg.ci_seed)
         self.pending: dict[int, dict] = {}      # rid -> admission verdict
         self.backlog: list[tuple] = []          # (pk, req, summary, pend)
         self.inflight: deque[_PendingAssess] = deque()
@@ -254,6 +325,16 @@ class O2Runtime:
         self.pending[req.rid] = {
             "div": div, "window": tenant.monitor.windows_seen,
             "assess_key": assess_key}
+        trial = self.trials.get(req.index_type)
+        if trial is not None and trial.state == "promoted":
+            # the post-promotion watch: the monitor was re-anchored on
+            # the promoted window's data, so a re-fire this soon means
+            # the swap anchored on an unrepresentative window — revert
+            trial.watch_windows += 1
+            if div["diverged"]:
+                self._rollback_promoted(req.index_type, trial, "monitor")
+            elif trial.watch_windows >= self.swap_cfg.rollback_windows:
+                self._close_trial(req.index_type)
 
     # ----------------------------------------------------------- capture
     def ingest_retired(self, pool, slot: int, req, narrow: dict):
@@ -301,6 +382,9 @@ class O2Runtime:
             if pend["div"]["diverged"] and \
                     pend["window"] % tenant.cfg.assess_every == 0:
                 self.backlog.append((pool_key(req), req, summary, pend))
+        if self.swap_cfg.staged:
+            self._observe_retired(retired)
+            self._advance_trials()
         self._pump_assessments()
         self.phase_ms["assess"] += 1e3 * (time.perf_counter() - t0)
         if strict:
@@ -421,18 +505,252 @@ class O2Runtime:
                 [np.asarray(jax.device_get(r)) for _, r, _ in entry.outs])
             earls = np.concatenate(
                 [np.asarray(jax.device_get(e)) for _, _, e in entry.outs])
+            deltas: dict[int, float] = {}   # slot column -> delta (ns)
+            wins: dict[int, float] = {}     # winning columns only
+            stops: dict[int, int] = {}
             for j, (req, summary, pend) in enumerate(entry.items):
                 T = req.budget_steps
                 hit = np.flatnonzero(earls[:T, j])
                 stop = int(hit[0]) + 1 if hit.size else T
+                stops[j] = stop
                 best = _pooled_best(float(r0s[j]), rts[:stop, j])
                 self.assessments += 1
+                delta = summary["best_runtime_ns"] - best
+                deltas[j] = delta
                 if best < summary["best_runtime_ns"]:
-                    self.hot_swap(entry.index_type, req,
-                                  window=pend["window"] - 1,
-                                  params=entry.params)
-                    summary["swapped"] = True
+                    wins[j] = delta
+                    if not self.swap_cfg.staged:
+                        # the immediate path — bitwise the pre-pipeline
+                        # behavior: every per-window win swaps, in order
+                        tenant = self.tenants[entry.index_type]
+                        tenant.swap.candidates += 1
+                        tenant.swap.immediate += 1
+                        tenant.swap.promoted += 1
+                        self.hot_swap(entry.index_type, req,
+                                      window=pend["window"] - 1,
+                                      params=entry.params)
+                        summary["swapped"] = True
+            if wins and self.swap_cfg.staged:
+                self._judge_staged(entry, deltas, wins, stops, rts)
             self.phase_ms["assess"] += 1e3 * (time.perf_counter() - t0)
+
+    # ------------------------------------------- the swap state machine
+    # verdict win -> [CI gate] -> candidate -> [canary trial] -> promoted
+    # -> [watch window], with auto-rollback out of both bracketed stages.
+    # All host-side bookkeeping: the only device work is the same pure
+    # buffer updates the immediate path already performed.
+
+    def _judge_staged(self, entry: _PendingAssess, deltas: dict,
+                      wins: dict, stops: dict, rts: np.ndarray):
+        """Entry-level verdict for the staged pipeline: one pooled
+        assessment produces one candidate at most (the window with the
+        largest improvement), gated on the bootstrap CI when armed."""
+        tenant = self.tenants[entry.index_type]
+        if self.swap_cfg.ci_gate:
+            if len(entry.items) > 1:
+                samples = list(deltas.values())
+            else:
+                # a single-window dispatch has one per-window delta — fall
+                # back to per-step deltas (online best vs each offline
+                # assessment step) so the bootstrap still sees spread
+                j = next(iter(deltas))
+                summary = entry.items[j][1]
+                samples = (summary["best_runtime_ns"]
+                           - rts[:stops[j], j]).tolist()
+            lo, _ = _bootstrap_ci(samples, self.swap_cfg.ci_level,
+                                  self.swap_cfg.ci_resamples, self._ci_rng)
+            if lo <= 0.0:
+                # the interval does not exclude zero: a win this noisy is
+                # not evidence the offline model is better
+                tenant.swap.ci_rejected += 1
+                return
+        self._on_win(entry, max(wins, key=wins.get))
+
+    def _on_win(self, entry: _PendingAssess, j: int):
+        """One gated candidate: promote immediately (canary stage off),
+        defer (a trial is already live), or start the canary trial."""
+        req, summary, pend = entry.items[j]
+        tenant = self.tenants[entry.index_type]
+        tenant.swap.candidates += 1
+        window = pend["window"] - 1
+        if not self.swap_cfg.canary:
+            # CI-gate-only posture: promote pool-wide now, but still arm
+            # the post-promotion watch so the monitor can revert it
+            trial = _SwapTrial(entry.index_type, req, window, summary,
+                               copy_state(entry.params),
+                               copy_state(tenant.online),
+                               self._baseline_mean(tenant))
+            tenant.swap.immediate += 1
+            self.trials[entry.index_type] = trial
+            self._promote_trial(entry.index_type, trial)
+            return
+        if entry.index_type in self.trials:
+            tenant.swap.deferred += 1
+            summary["swap_deferred"] = True
+            return
+        self._start_trial(entry, j)
+
+    @staticmethod
+    def _baseline_mean(tenant: _TenantO2) -> float | None:
+        return (float(np.mean(tenant.baseline))
+                if tenant.baseline else None)
+
+    def _canary_lanes(self, slots: int) -> list[int]:
+        """The trailing `canary_fraction` of a pool's lanes (at least
+        one; at most slots-1 so a multi-lane pool keeps a control arm)."""
+        n = max(1, int(round(self.swap_cfg.canary_fraction * slots)))
+        if slots > 1:
+            n = min(n, slots - 1)
+        return list(range(slots - n, slots))
+
+    def _start_trial(self, entry: _PendingAssess, j: int):
+        """Land the candidate on a lane fraction of every pool of the
+        tenant — a pure buffer update per pool (`set_canary` builds the
+        mixed per-lane tree for the resident `per_lane` step program)."""
+        req, summary, pend = entry.items[j]
+        tenant = self.tenants[entry.index_type]
+        pools = [p for pk, p in self.pools.items()
+                 if pk[0] == entry.index_type]
+        if not pools:
+            # nothing to canary on (the tenant's pools were torn down
+            # between dispatch and drain); treat as deferred
+            tenant.swap.deferred += 1
+            return
+        candidate = copy_state(entry.params)
+        trial = _SwapTrial(entry.index_type, req, pend["window"] - 1,
+                           summary, candidate, copy_state(tenant.online),
+                           self._baseline_mean(tenant))
+        for pool in pools:
+            pool.set_canary(self._canary_lanes(pool.slots), candidate)
+        self.trials[entry.index_type] = trial
+        tenant.swap.canaried += 1
+        tenant.swap.active_state = "canary"
+        summary["canaried"] = True
+
+    def _observe_retired(self, retired: list):
+        """Feed retired-episode scores into the tenant baselines and any
+        live trial's arms (the pool lane-tagged each summary at retire
+        while its canary was live)."""
+        for req, summary in retired:
+            tenant = self.tenants[req.index_type]
+            trial = self.trials.get(req.index_type)
+            score = _lane_score(summary)
+            if trial is None:
+                tenant.baseline.append(score)
+            elif trial.state == "canary":
+                if "canary" in summary:
+                    (trial.canary_scores if summary["canary"]
+                     else trial.control_scores).append(score)
+            else:
+                trial.post_scores.append(score)
+
+    def _advance_trials(self):
+        """Decide every live trial that has enough evidence: canary arms
+        compare once the canary side has `canary_min_episodes` retired
+        summaries (against concurrent control lanes, falling back to the
+        tenant's pre-swap baseline); promoted trials regression-check
+        against that baseline.  Idle canaries time out into rollback."""
+        cfg = self.swap_cfg
+        for it, trial in list(self.trials.items()):
+            if trial.state == "canary":
+                trial.ticks += 1
+                if len(trial.canary_scores) >= cfg.canary_min_episodes:
+                    control = (float(np.mean(trial.control_scores))
+                               if len(trial.control_scores)
+                               >= cfg.canary_min_episodes
+                               else trial.baseline_mean)
+                    if control is not None:
+                        canary = float(np.mean(trial.canary_scores))
+                        if canary <= control * (1.0 + cfg.canary_tolerance):
+                            self._promote_trial(it, trial)
+                        else:
+                            self._rollback_canary(it, trial)
+                        continue
+                if trial.ticks > cfg.canary_timeout_ticks:
+                    self._rollback_canary(it, trial)
+            elif trial.state == "promoted":
+                if trial.baseline_mean is not None and \
+                        len(trial.post_scores) >= cfg.canary_min_episodes:
+                    post = float(np.mean(trial.post_scores))
+                    if post > trial.baseline_mean * \
+                            (1.0 + cfg.rollback_tolerance):
+                        self._rollback_promoted(it, trial, "regression")
+
+    def _promote_trial(self, index_type: str, trial: _SwapTrial):
+        """Pool-wide promotion of a trial's candidate: clear the canary
+        mix, snapshot the rollback state (pre-swap online tree + monitor
+        reference), then run the standard hot swap.  The cleared pools
+        re-enter the shared-params step program — still resident, still
+        zero re-traces."""
+        tenant = self.tenants[index_type]
+        for pk, pool in self.pools.items():
+            if pk[0] == index_type and pool.canary_lanes is not None:
+                pool.clear_canary()
+        # refresh the rollback snapshot at the promotion boundary (the
+        # online tree cannot have moved during the trial — wins defer —
+        # but the monitor reference may have: windows kept arriving)
+        trial.prev_online = copy_state(tenant.online)
+        mon = tenant.monitor
+        trial.monitor_ref = (None if mon.ref_quantiles is None
+                             else mon.ref_quantiles.copy(), mon.ref_wr)
+        trial.prev_anchor = mon.anchors[-1] if mon.anchors else None
+        self.hot_swap(index_type, trial.req, window=trial.window,
+                      params=trial.candidate)
+        trial.summary["swapped"] = True
+        trial.state = "promoted"
+        trial.ticks = 0
+        trial.watch_windows = 0
+        trial.post_scores = []
+        tenant.swap.promoted += 1
+        tenant.swap.active_state = "promoted"
+
+    def _rollback_canary(self, index_type: str, trial: _SwapTrial):
+        """Abort a canary: drop the per-lane mix on every pool — the
+        incumbent `pool.params` was never touched, so this *is* the
+        bitwise revert — and retire the trial."""
+        for pk, pool in self.pools.items():
+            if pk[0] == index_type and pool.canary_lanes is not None:
+                pool.clear_canary()
+        tenant = self.tenants[index_type]
+        tenant.swap.rolled_back_canary += 1
+        tenant.swap.active_state = None
+        trial.summary["swap_rolled_back"] = "canary"
+        del self.trials[index_type]
+
+    def _rollback_promoted(self, index_type: str, trial: _SwapTrial,
+                           reason: str):
+        """Revert a promoted swap bitwise: restore the pre-swap online
+        tree on every pool and the divergence monitor's pre-promotion
+        reference distribution (re-appending the pre-swap anchor keeps
+        the monitor's anchors-history invariant — the revert stays
+        visible)."""
+        tenant = self.tenants[index_type]
+        tenant.online = trial.prev_online
+        for pk, pool in self.pools.items():
+            if pk[0] == index_type:
+                pool.params = jax.device_put(tenant.online["params"],
+                                             pool.replicated)
+        if trial.monitor_ref is not None:
+            mon = tenant.monitor
+            mon.ref_quantiles, mon.ref_wr = trial.monitor_ref
+            if trial.prev_anchor is not None:
+                mon.anchors.append(trial.prev_anchor)
+        tenant.swap.rolled_back_promoted += 1
+        tenant.swap.active_state = None
+        trial.summary["swap_rolled_back"] = reason
+        del self.trials[index_type]
+
+    def _close_trial(self, index_type: str):
+        """A promoted trial survived its watch window: drop the rollback
+        snapshots and free the tenant for the next candidate."""
+        self.trials.pop(index_type, None)
+        self.tenants[index_type].swap.active_state = None
+
+    def swap_stats(self) -> SwapStats:
+        """The `stats()["swaps"]` block's data (the service adds SLO
+        breach attribution before rendering)."""
+        return SwapStats(per_tenant={it: t.swap
+                                     for it, t in self.tenants.items()})
 
     def hot_swap(self, index_type: str, req,
                  window: int | None = None, params=None):
@@ -445,8 +763,13 @@ class O2Runtime:
         None — the strict/serial case and direct callers — promotes the
         offline tail.  `window` is the retired window whose data
         re-anchors the monitor (under concurrent serving it may not be
-        the latest one observed)."""
-        t0 = time.perf_counter()
+        the latest one observed).
+
+        Swap timing rides the service's injectable clock (not a bare
+        `time.perf_counter`), so `mean_swap_ms` shares the timebase of
+        every other latency the service reports — and tests can pin it
+        with a fake clock."""
+        t0 = self.clock()
         tenant = self.tenants[index_type]
         # real copies: the next fine-tune round donates the offline
         # tree's buffers, and the promoted online model must outlive that
@@ -460,7 +783,7 @@ class O2Runtime:
         tenant.monitor.re_anchor(req.data_keys, req.wr_ratio,
                                  window=window)
         tenant.swaps += 1
-        tenant.swap_times_s.append(time.perf_counter() - t0)
+        tenant.swap_times_s.append(self.clock() - t0)
 
     def flush(self):
         """Settle all in-flight O2 work: the assessment backlog drains
@@ -474,25 +797,30 @@ class O2Runtime:
             jax.block_until_ready(tenant.offline["params"])
 
     # ------------------------------------------------------------- stats
-    def stats(self) -> dict:
-        st = {
-            it: {"windows": t.monitor.windows_seen,
-                 "diverged": t.monitor.diverged_count,
-                 "swaps": t.swaps,
-                 "offline_updates": t.offline_updates,
-                 "finetune_skipped": t.finetune_skipped,
-                 "replay_size": t.replay.size,
-                 "mean_swap_ms": (1e3 * float(np.mean(t.swap_times_s))
-                                  if t.swap_times_s else 0.0)}
+    def stats_block(self) -> O2Stats:
+        tenants = {
+            it: TenantO2Stats(
+                windows=t.monitor.windows_seen,
+                diverged=t.monitor.diverged_count,
+                swaps=t.swaps,
+                offline_updates=t.offline_updates,
+                finetune_skipped=t.finetune_skipped,
+                replay_size=t.replay.size,
+                mean_swap_ms=(1e3 * float(np.mean(t.swap_times_s))
+                              if t.swap_times_s else 0.0))
             for it, t in self.tenants.items()}
-        # host-side time spent driving each O2 phase (dispatch + verdict
-        # fetches — device execution overlaps serving)
-        st["phase_ms"] = {k: round(v, 3) for k, v in self.phase_ms.items()}
-        st["assessments"] = self.assessments
-        st["inflight_assessments"] = len(self.inflight)
-        st["pending_missing"] = self.pending_missing
-        # annex placement (the topology layer's verdict): a shared annex
-        # means learner/assessment work queues behind serving fetches
-        st["annex_width"] = self.topology.annex.width
-        st["annex_shared"] = self.topology.annex_shared
-        return st
+        return O2Stats(
+            tenants=tenants,
+            # host-side time spent driving each O2 phase (dispatch +
+            # verdict fetches — device execution overlaps serving)
+            phase_ms={k: round(v, 3) for k, v in self.phase_ms.items()},
+            assessments=self.assessments,
+            inflight_assessments=len(self.inflight),
+            pending_missing=self.pending_missing,
+            # annex placement (the topology layer's verdict): a shared
+            # annex queues learner/assessment work behind serving fetches
+            annex_width=self.topology.annex.width,
+            annex_shared=self.topology.annex_shared)
+
+    def stats(self) -> dict:
+        return self.stats_block().as_dict()

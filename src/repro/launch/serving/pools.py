@@ -32,7 +32,9 @@ from repro.core.litune import attach_best_params
 from repro.core.replay import wide_dim
 from repro.index import env as E
 
-from repro.launch.serving.programs import _capture_write, _resize_program
+from repro.launch.serving.programs import (_capture_write,
+                                           _mixed_params_program,
+                                           _resize_program)
 from repro.launch.serving.scheduler import TuneRequest
 from repro.launch.serving.topology import DeviceSlice
 
@@ -86,6 +88,11 @@ class _SlotPool:
         self.r0: list[float] = [0.0] * slots
         self.resizes = {"grow": 0, "shrink": 0}
         self.peak_slots = slots
+        # canary state: while a swap trial runs, `canary_lanes` lists the
+        # lanes serving the candidate params and `lane_params` holds the
+        # per-lane stacked tree `_step_program(per_lane=True)` consumes
+        self.canary_lanes: list[int] | None = None
+        self.lane_params = None
 
     @property
     def n_active(self) -> int:
@@ -115,6 +122,12 @@ class _SlotPool:
         old = self.slots
         if new_slots == old:
             return
+        if self.canary_lanes is not None:
+            # the param mix is lane-indexed; re-mapping lanes mid-trial
+            # would shuffle canary and control arms (the scheduler skips
+            # canarying pools, so this only fires on a direct caller)
+            raise RuntimeError(
+                "cannot resize a pool while a canary trial is live")
         if new_slots < old:
             keep = [i for i, r in enumerate(self.requests) if r is not None]
             if len(keep) > new_slots:
@@ -149,6 +162,28 @@ class _SlotPool:
         self._noise_dev = None
         self.slots = new_slots
         self.peak_slots = max(self.peak_slots, new_slots)
+
+    # ------------------------------------------------------------ canary
+    def set_canary(self, lanes: list[int], candidate_params):
+        """Serve `candidate_params` on `lanes` and keep the incumbent
+        `self.params` everywhere else — a mixed-params pool.  Pure buffer
+        update: the per-lane stacked tree is built by a cached jitted
+        select (`_mixed_params_program`) and consumed by the resident
+        `per_lane` step program, so entering (and leaving) a canary never
+        re-traces.  `self.params` itself is untouched: a rollback is just
+        `clear_canary()`."""
+        self.canary_lanes = sorted(int(x) for x in lanes)
+        mask = np.zeros((self.slots,), bool)
+        mask[self.canary_lanes] = True
+        self.lane_params = _mixed_params_program(self.slice, self.slots)(
+            self.params, jax.device_put(candidate_params, self.replicated),
+            mask)
+
+    def clear_canary(self):
+        """Drop the mixed-params state; every lane serves `self.params`
+        again (the incumbent — promotion replaces `params` first)."""
+        self.canary_lanes = None
+        self.lane_params = None
 
     # ----------------------------------------------------------- capture
     def capture_tick(self, out: dict):
@@ -203,6 +238,12 @@ class _SlotPool:
         summary = summarize_episode(
             self.env_cfg, self.r0[slot], rec["rewards"], rec["runtimes"],
             rec["actions"], rec["costs"], terminated)
+        if self.canary_lanes is not None:
+            # lane-tagged summaries: the swap trial scores canary lanes
+            # against control lanes.  Only tagged while a canary is live,
+            # so summaries stay shape-identical on every parity path
+            summary["lane"] = slot
+            summary["canary"] = slot in self.canary_lanes
         narrow = None
         if self.capture:
             T = len(rec["rewards"])

@@ -75,14 +75,38 @@ def _mesh_for(device_ids: tuple):
 
 
 @lru_cache(maxsize=None)
-def _step_program(slice_: DeviceSlice, net_cfg, env_cfg, et_cfg, k: int):
+def _step_program(slice_: DeviceSlice, net_cfg, env_cfg, et_cfg, k: int,
+                  per_lane: bool = False):
     """K-step slot program: scan over K ticks of the bitwise-stable
     one-tick map body, lanes sharded over the slice.  The carry is
     donated — every caller rebinds it to the program's output, and the
     donation lets XLA write the new carry into the old one's buffers
-    instead of allocating a fresh slot-state tree per tick."""
+    instead of allocating a fresh slot-state tree per tick.
+
+    `per_lane=True` is the canary-pool variant: params carry a leading
+    slot axis and shard with the lanes, so a pool may serve candidate
+    params on a lane fraction while control lanes keep the incumbent —
+    a *pure buffer update* relative to this resident program.  The lane
+    math is the same mapped body either way (`batched_episode_scan_lanes`
+    maps params instead of closing over them), so control lanes stay
+    bitwise-equal to the shared-params program.  Both variants live in
+    this one lru cache: `programs_resident` counts them together, which
+    is what lets tests assert a whole canary→promote/rollback cycle
+    binds zero new programs after warmup."""
     mesh = slice_.mesh()
     ax = slice_.axis
+
+    if per_lane:
+        from repro.core.etmdp import batched_episode_scan_lanes
+
+        def core(p, c, n):
+            return batched_episode_scan_lanes(p, c, n, k, net_cfg,
+                                              env_cfg, et_cfg, False)
+
+        return jax.jit(shard_map_compat(
+            core, mesh, in_specs=(P(ax), P(ax), P(ax)),
+            out_specs=(P(ax), P(None, ax))),
+            donate_argnums=donate_argnums(1))
 
     def core(p, c, n):
         return batched_episode_scan(p, c, n, k, net_cfg, env_cfg, et_cfg,
@@ -200,6 +224,26 @@ def _capture_write_program():
 
 def _capture_write(cap, new, offsets):
     return _capture_write_program()(cap, new, offsets)
+
+
+@lru_cache(maxsize=None)
+def _mixed_params_program(slice_: DeviceSlice, slots: int):
+    """Build the per-lane params tree of a canary pool: lane b serves
+    `cand` where `mask[b]`, the incumbent `base` otherwise.  Pure data
+    movement (the mask is an array input), stacked over the lane axis
+    and sharded with it — selecting which lanes canary never re-traces,
+    and the output feeds `_step_program(per_lane=True)` directly."""
+    sharded = slice_.sharded()
+
+    def mix(base, cand, mask):
+        def leaf(b, c):
+            m = mask.reshape((slots,) + (1,) * b.ndim)
+            return jnp.where(
+                m, jnp.broadcast_to(c, (slots,) + c.shape),
+                jnp.broadcast_to(b, (slots,) + b.shape))
+        return jax.tree.map(leaf, base, cand)
+
+    return jax.jit(mix, out_shardings=sharded)
 
 
 @lru_cache(maxsize=None)

@@ -171,10 +171,15 @@ class Scheduler:
     def submit(self, req: TuneRequest):
         self.queue.append(req)
 
-    def note_tick(self, k_steps: int, dt_s: float):
+    def note_tick(self, k_steps: int, dt_s: float,
+                  in_trial: bool = False):
         """Fold one served tick (K scanned steps in `dt_s` wall seconds)
-        into the tick-rate estimate."""
-        if k_steps <= 0 or dt_s <= 0.0:
+        into the tick-rate estimate.  Ticks served while a swap trial was
+        live (`in_trial`) are excluded: a mixed-params canary pool runs
+        the per-lane program variant, and letting its timing into the
+        EWMA would have the EDF feasibility cut (and any resize planning
+        reading the rate) react to a transient the rollback may erase."""
+        if k_steps <= 0 or dt_s <= 0.0 or in_trial:
             return
         obs = dt_s / k_steps
         self.s_per_step = (obs if self.s_per_step is None

@@ -32,13 +32,18 @@ import jax
 import numpy as np
 
 from repro.launch.serving import programs
+from repro.launch.serving.config import (LEGACY_KWARGS, ServeConfig,
+                                         config_from_legacy)
 from repro.launch.serving.o2_runtime import O2Runtime, O2ServiceConfig
 from repro.launch.serving.pools import _SlotPool
-from repro.launch.serving.programs import (_pow2_ladder, _reset_program,
+from repro.launch.serving.programs import (_mixed_params_program,
+                                           _pow2_ladder, _reset_program,
                                            _step_program)
 from repro.launch.serving.scheduler import (Scheduler, SlotPolicy,
                                             StaticSlotPolicy, TuneRequest)
 from repro.launch.serving.slo import SLOConfig, SLOTracker
+from repro.launch.serving.stats import (PoolStats, SchedulerStats,
+                                        ServiceStats)
 from repro.launch.serving.topology import ServingTopology
 
 
@@ -50,41 +55,67 @@ class TuningService:
     `cfg.index_type`.  Submit requests, then `run()` — per-request
     summaries come back keyed by request id.
 
-    `policy` selects the slot scheduler (static by default; pass an
-    `AdaptiveSlotPolicy` to size pools by queue depth, or an
-    `EDFSlotPolicy` to admit tight deadlines first), `slo` the
-    service-level deadline defaults, `clock` the time source the
-    deadline/latency machinery reads (injectable for deterministic
-    tests; defaults to `time.perf_counter`), and `topology` the
-    placement plan (`ServingTopology`): which devices the slot pools
-    shard over, where the O2 annex slice and replay ring live.  The
-    default is the flat host layout over `jax.devices()`; pass
-    `ServingTopology.from_mesh(make_production_mesh(), slots)` and one
-    service instance spans a pod — placement is a constructor argument,
+    The serving posture — slot counts, O2, scheduling policy, SLOs,
+    topology, and the hot-swap trust policy — is one frozen
+    `ServeConfig` passed as `config=` (`serving/config.py`).  The
+    pre-consolidation per-knob kwargs (`slots`, `horizon_cap`, `seed`,
+    `o2`, `policy`, `slo`, `clock`, `topology`) still work through a
+    thin adapter that builds the equivalent `ServeConfig` and emits a
+    `DeprecationWarning`; mixing `config=` with legacy kwargs raises.
+    `policy`/`clock`/`topology` keep None-means-default semantics
+    (static policy, `time.perf_counter`, flat host layout over
+    `jax.devices()`); pass
+    `topology=ServingTopology.from_mesh(make_production_mesh(), slots)`
+    and one service instance spans a pod — placement is a config field,
     not a rewrite.
     """
 
-    def __init__(self, agents, slots: int = 4, horizon_cap: int = 256,
-                 seed: int = 0, o2: O2ServiceConfig | None = None,
+    def __init__(self, agents, slots: int | None = None,
+                 horizon_cap: int | None = None, seed: int | None = None,
+                 o2: O2ServiceConfig | None = None,
                  policy: SlotPolicy | None = None,
                  slo: SLOConfig | None = None, clock=None,
-                 topology: ServingTopology | None = None):
+                 topology: ServingTopology | None = None, swap=None, *,
+                 config: ServeConfig | None = None):
+        legacy = {"slots": slots, "horizon_cap": horizon_cap,
+                  "seed": seed, "o2": o2, "policy": policy, "slo": slo,
+                  "clock": clock, "topology": topology, "swap": swap}
+        passed = {k: v for k, v in legacy.items() if v is not None}
+        if config is not None:
+            if passed:
+                raise TypeError(
+                    f"pass the serving posture either as "
+                    f"config=ServeConfig(...) or through the legacy "
+                    f"kwargs, not both (got config= plus "
+                    f"{sorted(passed)})")
+        else:
+            if passed:
+                warnings.warn(
+                    f"TuningService's per-knob kwargs "
+                    f"({', '.join(LEGACY_KWARGS)}) are deprecated; "
+                    f"pass config=ServeConfig(...) instead",
+                    DeprecationWarning, stacklevel=2)
+            config = config_from_legacy(**passed)
         if not isinstance(agents, dict):
             agents = {agents.cfg.index_type: agents}
         self.agents = agents
-        self.slots = slots
-        self.horizon_cap = horizon_cap
-        self.o2 = o2 if o2 is not None else O2ServiceConfig()
-        self.policy = policy if policy is not None else StaticSlotPolicy()
-        self.slo_cfg = slo if slo is not None else SLOConfig()
-        self.clock = clock if clock is not None else time.perf_counter
-        self.key = jax.random.PRNGKey(seed)
+        self.config = config
+        self.slots = config.slots
+        self.horizon_cap = config.horizon_cap
+        self.o2 = config.o2
+        self.policy = (config.policy if config.policy is not None
+                       else StaticSlotPolicy())
+        self.slo_cfg = config.slo
+        self.swap_cfg = config.swap
+        self.clock = (config.clock if config.clock is not None
+                      else time.perf_counter)
+        self.key = jax.random.PRNGKey(config.seed)
         # every placement decision — serving slices, annex slice, ring
         # home — is the topology layer's (topology.py); the service only
         # consumes slices
-        self.topology = (topology if topology is not None
-                         else ServingTopology.host(slots))
-        self.topology.validate_slots(slots)
+        self.topology = (config.topology if config.topology is not None
+                         else ServingTopology.host(config.slots))
+        self.topology.validate_slots(config.slots)
         self.pools: dict[tuple, _SlotPool] = {}
         self.o2rt: O2Runtime | None = None
         if self.o2.enabled:
@@ -101,7 +132,9 @@ class TuningService:
                     f"annex_shared)", RuntimeWarning, stacklevel=2)
             self.o2rt = O2Runtime(
                 agents, self.o2, self.pools, self.topology,
-                horizon_cap=horizon_cap, max_assess_width=2 * slots)
+                horizon_cap=self.horizon_cap,
+                max_assess_width=2 * self.slots,
+                swap_cfg=self.swap_cfg, clock=self.clock)
         self.scheduler = Scheduler(self.policy,
                                    strict_order=(self.o2.enabled
                                                  and self.o2.strict_order))
@@ -138,6 +171,11 @@ class TuningService:
     @property
     def assessments(self) -> int:
         return self.o2rt.assessments if self.o2rt is not None else 0
+
+    def _in_trial(self, index_type: str) -> bool:
+        """Whether the tenant has a live swap trial (canary stage or
+        post-promotion watch window)."""
+        return self.o2rt is not None and index_type in self.o2rt.trials
 
     def _hot_swap(self, index_type: str, req: TuneRequest,
                   window: int | None = None, params=None):
@@ -234,6 +272,16 @@ class TuningService:
                                        tuner.cfg.et_cfg(), params,
                                        self.slots, slice_,
                                        capture=self.o2.enabled)
+            if self.o2.enabled and self.swap_cfg.canary:
+                # pre-bind the canary-side programs with the pool: the
+                # per-lane K ladder (same lru cache as the shared-params
+                # ladder, so `programs_resident` is flat across a whole
+                # canary->promote/rollback cycle) and the params mix.
+                # Binding is an lru insert; XLA still traces lazily
+                pool = self.pools[pk]
+                for k in _pow2_ladder(self.horizon_cap):
+                    self._pool_step_program(pk, pool, k, per_lane=True)
+                _mixed_params_program(slice_, self.slots)
         return self.pools[pk]
 
     def _size_ladder(self, pool: _SlotPool) -> list[int]:
@@ -253,17 +301,26 @@ class TuningService:
         return sorted(s for s in sizes if s % nd == 0)
 
     # --------------------------------------------------------- programs
-    def _pool_step_program(self, pk: tuple, pool: _SlotPool, k: int):
+    @staticmethod
+    def _step_key(pk: tuple, pool: _SlotPool, k: int,
+                  per_lane: bool) -> tuple:
+        return ("step-lanes" if per_lane else "step", pk, pool.slots, k)
+
+    def _pool_step_program(self, pk: tuple, pool: _SlotPool, k: int,
+                           per_lane: bool = False):
         """K-step slot program, cached process-wide on
         (slice, frozen configs, width, K) so mixed alex/carmi request
         streams — and successive service instances, and pools returning
         to a previously-served width — alternate between resident
-        executables, never re-tracing."""
-        prog_key = ("step", pk, pool.slots, k)
+        executables, never re-tracing.  `per_lane` selects the canary
+        variant (params carry a leading slot axis); both variants share
+        `_step_program`'s lru cache."""
+        prog_key = self._step_key(pk, pool, k, per_lane)
         if prog_key not in self._programs:
             self.program_misses += 1
             self._programs[prog_key] = _step_program(
-                pool.slice, pool.net_cfg, pool.env_cfg, pool.et_cfg, k)
+                pool.slice, pool.net_cfg, pool.env_cfg, pool.et_cfg, k,
+                per_lane=per_lane)
         else:
             self.program_hits += 1
         return self._programs[prog_key]
@@ -355,11 +412,15 @@ class TuningService:
                 "dropped": True, "slo_breached": True, "steps": 0,
                 "terminated_early": False}
             self.slo.on_drop_queued(req, now)
+            if self._in_trial(req.index_type):
+                self.slo.note_trial_breach()
         for req in self.scheduler.pre_drop_hopeless(now):
             self.results[req.rid] = {
                 "dropped": True, "slo_breached": True, "pre_dropped": True,
                 "steps": 0, "terminated_early": False}
             self.slo.on_drop_queued(req, now, pre=True)
+            if self._in_trial(req.index_type):
+                self.slo.note_trial_breach()
 
     def _apply_slot_policy(self):
         """Consult the slot policy for every pool (pools for queued
@@ -372,6 +433,11 @@ class TuningService:
             self._pool_for(req)
         queued = self.scheduler.queued_by_pool(self._pool_key)
         for pk, pool in self.pools.items():
+            if pool.canary_lanes is not None:
+                # a resize would re-map lanes mid-trial and shuffle the
+                # canary/control arms; the pool resumes policy sizing
+                # the tick after the trial promotes or rolls back
+                continue
             new = self.scheduler.plan_resize(pk, pool, queued.get(pk, 0),
                                              self._size_ladder(pool))
             if new is not None:
@@ -394,6 +460,10 @@ class TuningService:
                 if pool.steps_taken[slot] == 0:
                     continue        # admitted this tick; gets one tick
                 rreq, summary, narrow = pool.retire(slot, False)
+                if self._in_trial(rreq.index_type):
+                    # attribution for the swaps block: this breach landed
+                    # while the tenant's canary/watch trial was live
+                    self.slo.note_trial_breach()
                 if rreq.on_breach == "drop":
                     self.results[rreq.rid] = {
                         "dropped": True, "slo_breached": True,
@@ -438,13 +508,19 @@ class TuningService:
             k = max(w for w in _pow2_ladder(self.horizon_cap)
                     if w <= max(min_rem, 1))
             t_tick = self.clock()
+            # a live canary routes the tick through the per-lane program
+            # variant with the pool's mixed params tree — same resident
+            # program cache, zero re-traces (pre-bound at pool creation)
+            canary = pool.lane_params is not None
             # a first-use bind traces/compiles inside the timed window;
             # that sample would poison the EDF feasibility estimate, so
             # only warm ticks feed it
-            warm = ("step", pk, pool.slots, k) in self._programs
-            program = self._pool_step_program(pk, pool, k)
-            pool.carry, out = program(pool.params, pool.carry,
-                                      pool.noise_dev())
+            warm = self._step_key(pk, pool, k, canary) in self._programs
+            program = self._pool_step_program(pk, pool, k,
+                                              per_lane=canary)
+            pool.carry, out = program(
+                pool.lane_params if canary else pool.params,
+                pool.carry, pool.noise_dev())
             # only the narrow fields the serving loop reads cross to the
             # host — the same five the frozen service transfers
             fields = ["reward", "runtime_ns", "action", "cost", "early"]
@@ -452,7 +528,9 @@ class TuningService:
             # the narrow-field fetch bounds the tick: feed the EDF
             # feasibility estimate (seconds per episode-step)
             if warm:
-                self.scheduler.note_tick(k, self.clock() - t_tick)
+                self.scheduler.note_tick(
+                    k, self.clock() - t_tick,
+                    in_trial=self._in_trial(pk[0]))
             if pool.capture:
                 # wide fields stay on device: append them to the capture
                 # buffers (the view is materialized now, so the hop is a
@@ -500,38 +578,43 @@ class TuningService:
             self.o2rt.drain()
         return self.results
 
-    def stats(self) -> dict:
-        st = {
-            "service_steps": self.service_steps,
-            "episode_steps": self.episode_steps,
-            "completed": len(self.results),
-            "queued": len(self.queue),
-            "pools": len(self.pools),
-            "devices": self.topology.serving.width,
-            "topology": self.topology.describe(),
-            # per-service binds: first/repeat use of a program key here
-            "program_misses": self.program_misses,
-            "program_hits": self.program_hits,
-            # actual process-wide compiled step programs (shared cache)
-            "programs_resident": _step_program.cache_info().currsize,
-            # per-pool breakdown: the adaptive scheduler's observability
-            "per_pool": {
-                "/".join(str(x) for x in pk): {
-                    "slots": pool.slots,
-                    "active": pool.n_active,
-                    "peak_slots": pool.peak_slots,
-                    "resizes": dict(pool.resizes),
-                }
-                for pk, pool in self.pools.items()},
-            "scheduler": {
-                "policy": self.policy.name,
-                "resize_events": self.scheduler.resize_events,
-            },
-            "slo": self.slo.stats(),
-        }
+    def stats_block(self) -> ServiceStats:
+        """The typed stats document (`serving/stats.py` is the schema);
+        `stats()` renders it to the pinned dict shape."""
+        swaps = None
         if self.o2rt is not None:
-            st["o2"] = self.o2rt.stats()
-        return st
+            swaps = self.o2rt.swap_stats()
+            swaps.breaches_during_trial = self.slo.trial_breaches
+        return ServiceStats(
+            service_steps=self.service_steps,
+            episode_steps=self.episode_steps,
+            completed=len(self.results),
+            queued=len(self.queue),
+            pools=len(self.pools),
+            devices=self.topology.serving.width,
+            topology=self.topology.describe(),
+            # per-service binds: first/repeat use of a program key here
+            program_misses=self.program_misses,
+            program_hits=self.program_hits,
+            # actual process-wide compiled step programs (shared cache)
+            programs_resident=_step_program.cache_info().currsize,
+            # per-pool breakdown: the adaptive scheduler's observability
+            per_pool={
+                "/".join(str(x) for x in pk): PoolStats(
+                    slots=pool.slots, active=pool.n_active,
+                    peak_slots=pool.peak_slots,
+                    resizes=dict(pool.resizes))
+                for pk, pool in self.pools.items()},
+            scheduler=SchedulerStats(
+                policy=self.policy.name,
+                resize_events=self.scheduler.resize_events),
+            slo=self.slo.stats_block(),
+            o2=(self.o2rt.stats_block()
+                if self.o2rt is not None else None),
+            swaps=swaps)
+
+    def stats(self) -> dict:
+        return self.stats_block().as_dict()
 
 
 # ---------------------------------------------------------------- driver
@@ -551,7 +634,8 @@ def main():
     cfg = LITuneConfig(index_type=args.index, episode_len=args.budget,
                        lstm_hidden=32, mlp_hidden=64)
     tuner = LITune(cfg, seed=args.seed)
-    service = TuningService(tuner, slots=args.slots, seed=args.seed)
+    service = TuningService(tuner, config=ServeConfig(slots=args.slots,
+                                                      seed=args.seed))
 
     key = jax.random.PRNGKey(args.seed + 1)
     for i in range(args.requests):

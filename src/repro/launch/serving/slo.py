@@ -68,6 +68,11 @@ class SLOTracker:
         self.dropped_queued = 0
         self.dropped_running = 0
         self.pre_dropped = 0        # EDF feasibility cuts (never admitted)
+        # breaches that landed while the breaching request's tenant had a
+        # live swap trial (canary or post-promotion watch) — attribution
+        # the swap pipeline reports under stats()["swaps"], NOT here: the
+        # "slo" block's shape is pinned by pre-pipeline assertions
+        self.trial_breaches = 0
         self._admitted_at: dict[int, float] = {}
 
     # ------------------------------------------------------- lifecycle
@@ -93,6 +98,12 @@ class SLOTracker:
         # the wait it accrued before the drop still counts against the SLO
         self.queue_wait_s.append(now - req.submitted_at)
 
+    def note_trial_breach(self):
+        """Attribute one breach to a live swap trial (called by the
+        service alongside the regular breach hook when the request's
+        tenant was mid-canary or mid-watch)."""
+        self.trial_breaches += 1
+
     def on_breach_running(self, req, now: float, dropped: bool):
         if dropped:
             self.dropped_running += 1
@@ -102,17 +113,21 @@ class SLOTracker:
             self.on_retire(req.rid, now)
 
     # ------------------------------------------------------------ stats
+    def stats_block(self):
+        """The typed `stats()["slo"]` block (`serving/stats.py` is the
+        schema).  Percentiles cover the bounded recent window; `tracked`
+        and the breach counters are cumulative.  `trial_breaches` is
+        deliberately absent — it renders under `stats()["swaps"]`."""
+        from repro.launch.serving.stats import BreachStats, SLOStats
+        return SLOStats(
+            queue_wait_ms=_percentiles_ms(self.queue_wait_s),
+            serve_ms=_percentiles_ms(self.serve_s),
+            breaches=BreachStats(
+                dropped_queued=self.dropped_queued,
+                dropped_running=self.dropped_running,
+                pre_dropped=self.pre_dropped,
+                truncated=self.truncated),
+            tracked=self.tracked)
+
     def stats(self) -> dict:
-        # percentiles cover the bounded recent window; `tracked` and the
-        # breach counters are cumulative
-        return {
-            "queue_wait_ms": _percentiles_ms(self.queue_wait_s),
-            "serve_ms": _percentiles_ms(self.serve_s),
-            "breaches": {
-                "dropped_queued": self.dropped_queued,
-                "dropped_running": self.dropped_running,
-                "pre_dropped": self.pre_dropped,
-                "truncated": self.truncated,
-            },
-            "tracked": self.tracked,
-        }
+        return self.stats_block().as_dict()

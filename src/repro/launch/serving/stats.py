@@ -1,0 +1,207 @@
+"""Typed `stats()` contract for the serving stack.
+
+The nested dicts `TuningService.stats()` returns were hand-assembled in
+three modules (`service.py`, `o2_runtime.py`, `slo.py`) with no schema —
+nothing pinned the keys dashboards and the CI gates read.  This module
+defines every block as a dataclass with an `as_dict()` that produces the
+exact historical dict shape (pinned by the golden-keys test in
+tests/test_swap_pipeline.py), so the schema finally lives in one place:
+
+    service_steps, episode_steps, completed, queued, pools, devices,
+    topology, program_misses, program_hits, programs_resident
+    per_pool.<pool-key>   -> PoolStats      (slots/active/peak/resizes)
+    scheduler             -> SchedulerStats (policy, resize_events)
+    slo                   -> SLOStats       (percentiles + breaches)
+    o2                    -> O2Stats        (per-tenant + phase/annex)
+    swaps                 -> SwapStats      (the hot-swap state machine)
+
+`swaps` is the one new block this PR adds (the canary/rollback pipeline's
+counters); every other block is shape-identical to what PR 4/5 shipped —
+existing assertions like ``slo["breaches"] == {...}`` hold unchanged.
+The schema is documented in README "Safe hot-swaps".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class BreachStats:
+    """`stats()["slo"]["breaches"]` — cumulative breach counters."""
+    dropped_queued: int = 0
+    dropped_running: int = 0
+    pre_dropped: int = 0
+    truncated: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SLOStats:
+    """`stats()["slo"]` — latency percentiles + breach accounting."""
+    queue_wait_ms: dict          # {"p50": ms, "p95": ms, "p99": ms}
+    serve_ms: dict
+    breaches: BreachStats
+    tracked: int
+
+    def as_dict(self) -> dict:
+        return {"queue_wait_ms": dict(self.queue_wait_ms),
+                "serve_ms": dict(self.serve_ms),
+                "breaches": self.breaches.as_dict(),
+                "tracked": self.tracked}
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """One `stats()["per_pool"]` entry — occupancy + resize history."""
+    slots: int
+    active: int
+    peak_slots: int
+    resizes: dict                # {"grow": n, "shrink": n}
+
+    def as_dict(self) -> dict:
+        return {"slots": self.slots, "active": self.active,
+                "peak_slots": self.peak_slots,
+                "resizes": dict(self.resizes)}
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """`stats()["scheduler"]` — the admission policy's observability."""
+    policy: str
+    resize_events: int
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class TenantO2Stats:
+    """One tenant's entry inside `stats()["o2"]`."""
+    windows: int
+    diverged: int
+    swaps: int
+    offline_updates: int
+    finetune_skipped: int
+    replay_size: int
+    mean_swap_ms: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class O2Stats:
+    """`stats()["o2"]` — per-tenant blocks at the top level (the
+    historical flat shape) plus the runtime-wide counters beside them."""
+    tenants: dict                # index_type -> TenantO2Stats
+    phase_ms: dict               # {"capture": ms, "finetune": ..., ...}
+    assessments: int
+    inflight_assessments: int
+    pending_missing: int
+    annex_width: int
+    annex_shared: bool
+
+    def as_dict(self) -> dict:
+        out = {it: t.as_dict() for it, t in self.tenants.items()}
+        out["phase_ms"] = dict(self.phase_ms)
+        out["assessments"] = self.assessments
+        out["inflight_assessments"] = self.inflight_assessments
+        out["pending_missing"] = self.pending_missing
+        out["annex_width"] = self.annex_width
+        out["annex_shared"] = self.annex_shared
+        return out
+
+
+@dataclasses.dataclass
+class TenantSwapStats:
+    """One tenant's hot-swap state-machine counters.
+
+    A verdict win becomes a *candidate*; with the canary stage disabled
+    it promotes *immediate*ly (today's path), otherwise it is *canaried*
+    (or *deferred* while another trial is active).  A canary either
+    *promote*s pool-wide or rolls back; a promotion may still roll back
+    inside the post-swap watch window.  `ci_rejected` counts per-window
+    wins the bootstrap CI gate refused.
+    """
+    candidates: int = 0
+    immediate: int = 0
+    canaried: int = 0
+    deferred: int = 0
+    promoted: int = 0
+    ci_rejected: int = 0
+    rolled_back_canary: int = 0
+    rolled_back_promoted: int = 0
+    active_state: str | None = None     # "canary" | "promoted" | None
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["rolled_back"] = self.rolled_back_canary + \
+            self.rolled_back_promoted
+        return d
+
+
+@dataclasses.dataclass
+class SwapStats:
+    """`stats()["swaps"]` — the new block: the swap pipeline's verdict
+    state machine, totalled and per tenant, plus SLO-breach attribution
+    (breaches that landed while a canary/watch trial was live)."""
+    per_tenant: dict             # index_type -> TenantSwapStats
+    breaches_during_trial: int = 0
+
+    def as_dict(self) -> dict:
+        totals = TenantSwapStats()
+        for t in self.per_tenant.values():
+            for f in ("candidates", "immediate", "canaried", "deferred",
+                      "promoted", "ci_rejected", "rolled_back_canary",
+                      "rolled_back_promoted"):
+                setattr(totals, f, getattr(totals, f) + getattr(t, f))
+        out = totals.as_dict()
+        del out["active_state"]          # meaningless when totalled
+        out["per_tenant"] = {it: t.as_dict()
+                             for it, t in self.per_tenant.items()}
+        out["breaches_during_trial"] = self.breaches_during_trial
+        return out
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """The whole `TuningService.stats()` document."""
+    service_steps: int
+    episode_steps: int
+    completed: int
+    queued: int
+    pools: int
+    devices: int
+    topology: dict
+    program_misses: int
+    program_hits: int
+    programs_resident: int
+    per_pool: dict               # pool-key string -> PoolStats
+    scheduler: SchedulerStats
+    slo: SLOStats
+    o2: O2Stats | None = None
+    swaps: SwapStats | None = None
+
+    def as_dict(self) -> dict:
+        out = {
+            "service_steps": self.service_steps,
+            "episode_steps": self.episode_steps,
+            "completed": self.completed,
+            "queued": self.queued,
+            "pools": self.pools,
+            "devices": self.devices,
+            "topology": dict(self.topology),
+            "program_misses": self.program_misses,
+            "program_hits": self.program_hits,
+            "programs_resident": self.programs_resident,
+            "per_pool": {k: p.as_dict() for k, p in self.per_pool.items()},
+            "scheduler": self.scheduler.as_dict(),
+            "slo": self.slo.as_dict(),
+        }
+        if self.o2 is not None:
+            out["o2"] = self.o2.as_dict()
+        if self.swaps is not None:
+            out["swaps"] = self.swaps.as_dict()
+        return out

@@ -1,0 +1,398 @@
+"""The trustworthy hot-swap pipeline (launch/serving/): confidence-gated
+canary promotion with auto-rollback, behind the consolidated ServeConfig.
+
+* canary flow — a forced verdict win lands on a lane fraction first; a
+  good canary promotes pool-wide, a bad one rolls back with the incumbent
+  pool params bitwise untouched;
+* auto-rollback — a promoted swap reverts bitwise (online tree, pool
+  buffers, divergence-monitor reference + anchors history) when post-swap
+  scores regress or the monitor re-fires inside the watch window;
+* zero re-traces — a whole canary -> promote/rollback cycle binds no new
+  step programs (per-lane params are program inputs on the same resident
+  K-ladder cache);
+* ServeConfig — the consolidated config object, the legacy-kwarg adapter
+  (DeprecationWarning), and the mixing error;
+* stats schema — the golden-keys test pinning the exact dict shape
+  `stats()` renders (serving/stats.py is the schema);
+* seams — `_bootstrap_ci` determinism and the injectable clock routing
+  swap timings.
+
+Outcome-deciding knobs are pinned through the module seams
+(`_pooled_best`, `_lane_score`) so every path here is deterministic; the
+end-to-end drill against real verdicts is benchmarks/slo_serve.py
+--scenario poisoned.
+"""
+import jax
+import numpy as np
+import pytest
+
+import repro.launch.serving.o2_runtime as o2_runtime
+import repro.launch.serving.programs as programs
+from repro.core.ddpg import DDPGConfig
+from repro.core.litune import LITune, LITuneConfig
+from repro.core.o2 import O2Config
+from repro.index.workloads import sample_keys, wr_workload
+from repro.launch.serving import (O2ServiceConfig, ServeConfig, SwapConfig,
+                                  TuningService, config_from_legacy)
+
+# KS effectively off: divergence (and therefore assessments) fire purely
+# on W/R shift, which is exact — no finite-sample noise in any verdict
+_O2 = O2Config(divergence_threshold=10.0, wr_shift_threshold=0.5,
+               offline_updates_per_window=2, assess_every=1)
+
+
+def _cfg(**kw) -> LITuneConfig:
+    return LITuneConfig(index_type="alex", episode_len=4, lstm_hidden=16,
+                        mlp_hidden=32,
+                        ddpg=DDPGConfig(seq_len=3, burn_in=1, batch_size=8),
+                        o2=_O2, **kw)
+
+
+def _window(key, wr: float, n_keys: int = 256):
+    data = sample_keys(key, n_keys, "mix")
+    wl, _ = wr_workload(jax.random.fold_in(key, 1), data, wr,
+                        total=n_keys, dist="mix")
+    return data, wl, wr
+
+
+def _service(swap: SwapConfig, clock=None) -> TuningService:
+    cfg = _cfg()
+    return TuningService(LITune(cfg, seed=0), config=ServeConfig(
+        slots=4, o2=O2ServiceConfig(enabled=True, o2=cfg.o2),
+        clock=clock, swap=swap))
+
+
+def _serve_wave(service, wrs, fold: int, budget: int = 4):
+    """Submit one window per wr, run to empty, settle O2; returns rids."""
+    key = jax.random.PRNGKey(3)
+    rids = [service.submit(*_window(jax.random.fold_in(key, fold + i), wr),
+                           budget_steps=budget)
+            for i, wr in enumerate(wrs)]
+    service.run()
+    service.flush_o2()
+    return rids
+
+
+def _start_trial(service):
+    """Window 0 (wr=1) anchors the monitor; window 1 (wr=3) W/R-diverges,
+    its forced-win assessment starts the canary trial."""
+    rids = _serve_wave(service, [1.0, 3.0], fold=0)
+    assert "alex" in service.o2rt.trials
+    assert service.o2rt.trials["alex"].state == "canary"
+    return rids
+
+
+def _assert_trees_equal(a, b):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)), a, b)
+
+
+def _lane_score_stub(scores: dict):
+    """A patchable `_lane_score`: arm-dependent values from a mutable
+    dict, so a test can pin each canary/watch decision."""
+    def score(summary):
+        return (scores["canary"] if summary.get("canary")
+                else scores["control"])
+    return score
+
+
+# ------------------------------------------------------------- canary flow
+def test_canary_win_promotes_pool_wide(monkeypatch):
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    monkeypatch.setattr(o2_runtime, "_lane_score",
+                        _lane_score_stub({"canary": 0.5, "control": 1.0}))
+    service = _service(SwapConfig(canary=True, canary_min_episodes=1))
+    rids = _start_trial(service)
+    misses0 = service.program_misses
+    resident0 = programs._step_program.cache_info().currsize
+
+    # a full wave (wr=1: no new divergences) fills every lane: the canary
+    # lane outperforms the controls -> pool-wide promotion
+    _serve_wave(service, [1.0] * 4, fold=10)
+    tenant = service.tenants["alex"]
+    trial = service.o2rt.trials["alex"]
+    assert trial.state == "promoted"
+    sw = service.stats()["swaps"]
+    assert sw["candidates"] == 1 and sw["canaried"] == 1
+    assert sw["promoted"] == 1 and sw["rolled_back"] == 0
+    assert sw["per_tenant"]["alex"]["active_state"] == "promoted"
+    # the trial window's summary carries the stage flags
+    assert service.results[rids[1]]["canaried"] is True
+    assert service.results[rids[1]]["swapped"] is True
+    # every pool of the tenant now serves the promoted candidate, bitwise,
+    # with the canary mix dropped
+    for pk, pool in service.pools.items():
+        assert pool.lane_params is None
+        _assert_trees_equal(jax.device_get(pool.params),
+                            jax.device_get(tenant.online["params"]))
+    _assert_trees_equal(jax.device_get(tenant.online["params"]),
+                        jax.device_get(trial.candidate))
+    # the whole canary -> promote cycle rode resident executables
+    assert service.program_misses == misses0
+    assert programs._step_program.cache_info().currsize == resident0
+
+
+def test_canary_regression_rolls_back_incumbent_untouched(monkeypatch):
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    monkeypatch.setattr(o2_runtime, "_lane_score",
+                        _lane_score_stub({"canary": 5.0, "control": 1.0}))
+    service = _service(SwapConfig(canary=True, canary_min_episodes=1))
+    rids = _start_trial(service)
+    tenant = service.tenants["alex"]
+    incumbent = jax.device_get(tenant.online["params"])
+
+    _serve_wave(service, [1.0] * 4, fold=10)
+    sw = service.stats()["swaps"]
+    assert sw["rolled_back_canary"] == 1 and sw["rolled_back"] == 1
+    assert sw["promoted"] == 0
+    assert "alex" not in service.o2rt.trials
+    assert service.results[rids[1]]["swap_rolled_back"] == "canary"
+    # the canary never touched the incumbent: pool params are bitwise the
+    # pre-trial online tree, and the per-lane mix is gone
+    for pool in service.pools.values():
+        assert pool.lane_params is None and pool.canary_lanes is None
+        _assert_trees_equal(jax.device_get(pool.params), incumbent)
+    _assert_trees_equal(jax.device_get(tenant.online["params"]), incumbent)
+
+
+def test_canary_timeout_rolls_back(monkeypatch):
+    """A canary that never gathers enough scored episodes must not become
+    a permanent mixed pool: it times out into rollback."""
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    service = _service(SwapConfig(canary=True, canary_min_episodes=1,
+                                  canary_timeout_ticks=2))
+    _start_trial(service)
+    # serve single-window waves: one active lane (a control) per wave, so
+    # the canary lane never retires an episode and the trial idles out
+    _serve_wave(service, [1.0], fold=10)
+    _serve_wave(service, [1.0], fold=11)
+    _serve_wave(service, [1.0], fold=12)
+    sw = service.stats()["swaps"]
+    assert sw["rolled_back_canary"] == 1
+    assert "alex" not in service.o2rt.trials
+
+
+# ----------------------------------------------------------- auto-rollback
+def test_promoted_regression_rolls_back_bitwise(monkeypatch):
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    scores = {"canary": 0.5, "control": 1.0}
+    monkeypatch.setattr(o2_runtime, "_lane_score", _lane_score_stub(scores))
+    service = _service(SwapConfig(canary=True, canary_min_episodes=1,
+                                  rollback_windows=10))
+    rids = _start_trial(service)
+    tenant = service.tenants["alex"]
+    pre_swap = jax.device_get(tenant.online["params"])
+    _serve_wave(service, [1.0] * 4, fold=10)        # -> promoted
+    assert service.o2rt.trials["alex"].state == "promoted"
+
+    # post-promotion episodes regress hard against the pre-swap baseline
+    # (watch window held open by rollback_windows=10); wr matches the
+    # promoted anchor so the monitor stays quiet — this is the score path
+    scores["canary"] = scores["control"] = 10.0
+    _serve_wave(service, [3.0] * 4, fold=20)
+    sw = service.stats()["swaps"]
+    assert sw["promoted"] == 1
+    assert sw["rolled_back_promoted"] == 1 and sw["rolled_back"] == 1
+    assert "alex" not in service.o2rt.trials
+    assert service.results[rids[1]]["swap_rolled_back"] == "regression"
+    # bitwise restoration: the online tree and every pool buffer are the
+    # pre-swap params again
+    _assert_trees_equal(jax.device_get(tenant.online["params"]), pre_swap)
+    for pool in service.pools.values():
+        _assert_trees_equal(jax.device_get(pool.params), pre_swap)
+
+
+def test_monitor_refire_rolls_back_and_restores_reference(monkeypatch):
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    monkeypatch.setattr(o2_runtime, "_lane_score",
+                        _lane_score_stub({"canary": 0.5, "control": 1.0}))
+    service = _service(SwapConfig(canary=True, canary_min_episodes=1))
+    rids = _start_trial(service)
+    tenant = service.tenants["alex"]
+    mon = tenant.monitor
+    ref_q = mon.ref_quantiles.copy()            # window 0's anchor
+    ref_wr = mon.ref_wr
+    anchors_before = list(mon.anchors)
+    misses0 = service.program_misses
+    resident0 = programs._step_program.cache_info().currsize
+
+    _serve_wave(service, [1.0] * 4, fold=10)    # -> promoted
+    # promotion re-anchored the monitor on the trial window's data
+    assert mon.ref_wr == 3.0
+    assert mon.anchors[-1] != anchors_before[-1]
+
+    # the next window W/R-shifts against the *new* anchor: the monitor
+    # re-fires inside the watch window -> bitwise revert, reference and
+    # anchors history restored (the revert stays visible in the history)
+    _serve_wave(service, [1.0], fold=30)
+    sw = service.stats()["swaps"]
+    assert sw["rolled_back_promoted"] == 1
+    assert service.results[rids[1]]["swap_rolled_back"] == "monitor"
+    np.testing.assert_array_equal(mon.ref_quantiles, ref_q)
+    assert mon.ref_wr == ref_wr
+    assert mon.anchors[-1] == anchors_before[-1]
+    # the full canary -> promote -> rollback cycle bound zero new step
+    # programs (per-lane params ride the same resident K-ladder cache)
+    assert service.program_misses == misses0
+    assert programs._step_program.cache_info().currsize == resident0
+
+
+def test_watch_window_survival_closes_trial(monkeypatch):
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    monkeypatch.setattr(o2_runtime, "_lane_score",
+                        _lane_score_stub({"canary": 0.5, "control": 1.0}))
+    service = _service(SwapConfig(canary=True, canary_min_episodes=1,
+                                  rollback_windows=2))
+    _start_trial(service)
+    _serve_wave(service, [1.0] * 4, fold=10)    # -> promoted
+    # two quiet windows at the promoted anchor's wr: the watch closes and
+    # the swap sticks
+    _serve_wave(service, [3.0], fold=20)
+    _serve_wave(service, [3.0], fold=21)
+    sw = service.stats()["swaps"]
+    assert sw["promoted"] == 1 and sw["rolled_back"] == 0
+    assert "alex" not in service.o2rt.trials
+    assert sw["per_tenant"]["alex"]["active_state"] is None
+
+
+# ------------------------------------------------------------- ServeConfig
+def test_legacy_kwargs_adapt_with_deprecation_warning():
+    tuner = LITune(_cfg(), seed=0)
+    with pytest.warns(DeprecationWarning, match="config=ServeConfig"):
+        service = TuningService(tuner, slots=2, horizon_cap=64)
+    assert service.config == ServeConfig(slots=2, horizon_cap=64)
+    assert service.slots == 2 and service.horizon_cap == 64
+
+
+def test_config_and_legacy_kwargs_cannot_mix():
+    tuner = LITune(_cfg(), seed=0)
+    with pytest.raises(TypeError, match="not both"):
+        TuningService(tuner, slots=2, config=ServeConfig())
+
+
+def test_config_from_legacy_rejects_unknown_kwargs():
+    with pytest.raises(TypeError, match="unknown"):
+        config_from_legacy(slotz=2)
+
+
+def test_new_style_construction_emits_no_warning(recwarn):
+    TuningService(LITune(_cfg(), seed=0), config=ServeConfig(slots=2))
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+# ------------------------------------------------------------ stats schema
+def test_stats_golden_keys(monkeypatch):
+    """Pin the exact dict shape `stats()` renders (serving/stats.py is
+    the schema; dashboards and the CI gates read these keys)."""
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    service = _service(SwapConfig(canary=True, canary_min_episodes=1))
+    _start_trial(service)
+    st = service.stats()
+
+    assert set(st) == {
+        "service_steps", "episode_steps", "completed", "queued", "pools",
+        "devices", "topology", "program_misses", "program_hits",
+        "programs_resident", "per_pool", "scheduler", "slo", "o2", "swaps"}
+    assert set(st["scheduler"]) == {"policy", "resize_events"}
+    assert set(st["slo"]) == {"queue_wait_ms", "serve_ms", "breaches",
+                              "tracked"}
+    assert set(st["slo"]["breaches"]) == {"dropped_queued",
+                                          "dropped_running", "pre_dropped",
+                                          "truncated"}
+    for pool_stats in st["per_pool"].values():
+        assert set(pool_stats) == {"slots", "active", "peak_slots",
+                                   "resizes"}
+    assert set(st["o2"]) == {"alex", "phase_ms", "assessments",
+                             "inflight_assessments", "pending_missing",
+                             "annex_width", "annex_shared"}
+    assert set(st["o2"]["alex"]) == {
+        "windows", "diverged", "swaps", "offline_updates",
+        "finetune_skipped", "replay_size", "mean_swap_ms"}
+    counter_keys = {"candidates", "immediate", "canaried", "deferred",
+                    "promoted", "ci_rejected", "rolled_back_canary",
+                    "rolled_back_promoted", "rolled_back"}
+    assert set(st["swaps"]) == counter_keys | {"per_tenant",
+                                               "breaches_during_trial"}
+    assert set(st["swaps"]["per_tenant"]["alex"]) == \
+        counter_keys | {"active_state"}
+
+    # a frozen service (no O2) renders the historical document: no o2,
+    # no swaps block
+    frozen = TuningService(LITune(_cfg(), seed=0),
+                           config=ServeConfig(slots=2))
+    st2 = frozen.stats()
+    assert "o2" not in st2 and "swaps" not in st2
+
+
+def test_breaches_during_trial_attribution(monkeypatch):
+    """Queued-deadline breaches that land while a trial is live surface
+    under stats()["swaps"], never inside the pinned slo block."""
+    import types
+    service = _service(SwapConfig(canary=True))
+    # any live trial marks the tenant in-trial; an inert state keeps the
+    # trial-advance machinery from deciding it
+    service.o2rt.trials["alex"] = types.SimpleNamespace(state="idle")
+    service.submit(*_window(jax.random.PRNGKey(0), 1.0), budget_steps=4,
+                   deadline_s=-1.0)
+    service.step()
+    st = service.stats()
+    assert st["swaps"]["breaches_during_trial"] == 1
+    assert st["slo"]["breaches"]["dropped_queued"] == 1
+    assert "breaches_during_trial" not in st["slo"]["breaches"]
+
+
+# ------------------------------------------------------------------- seams
+def test_bootstrap_ci_deterministic_and_sane():
+    deltas = [3.0, 5.0, 4.0, 6.0, 2.0, 5.5]
+    lo1, hi1 = o2_runtime._bootstrap_ci(deltas, 0.95, 500,
+                                        np.random.default_rng(0))
+    lo2, hi2 = o2_runtime._bootstrap_ci(deltas, 0.95, 500,
+                                        np.random.default_rng(0))
+    assert (lo1, hi1) == (lo2, hi2)             # seeded -> replayable
+    assert lo1 <= np.mean(deltas) <= hi1
+    assert lo1 > 0.0                            # all-positive deltas pass
+
+    # zero-straddling deltas must not exclude zero
+    lo, hi = o2_runtime._bootstrap_ci([1.0, -1.0, 2.0, -2.0, 0.5, -0.5],
+                                      0.95, 500, np.random.default_rng(0))
+    assert lo <= 0.0 <= hi
+    # a single sample collapses to a point interval (no spread to resample)
+    assert o2_runtime._bootstrap_ci([4.2], 0.95, 100,
+                                    np.random.default_rng(0)) == (4.2, 4.2)
+
+
+def test_ci_gate_rejects_noisy_wins(monkeypatch):
+    """With the CI gate armed and the per-window deltas forced to
+    straddle zero, a win must be ci_rejected, not promoted."""
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    service = _service(SwapConfig(ci_gate=True))
+    # the gate bootstraps per-step deltas for a single-window dispatch;
+    # force that spread to straddle zero
+    monkeypatch.setattr(o2_runtime, "_bootstrap_ci",
+                        lambda *a, **k: (-1.0, 1.0))
+    _serve_wave(service, [1.0, 3.0], fold=0)
+    sw = service.stats()["swaps"]
+    assert sw["ci_rejected"] == 1
+    assert sw["candidates"] == 0 and sw["promoted"] == 0
+    assert "alex" not in service.o2rt.trials
+
+
+def test_swap_timing_rides_injected_clock(monkeypatch):
+    """`hot_swap` measures through the service's injectable clock, not a
+    bare time.perf_counter: a fake clock advancing 1s per call makes each
+    recorded swap take exactly 1 fake second."""
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    ticks = {"t": 0.0}
+
+    def fake_clock():
+        ticks["t"] += 1.0
+        return ticks["t"]
+
+    service = _service(SwapConfig(), clock=fake_clock)   # immediate path
+    _serve_wave(service, [1.0, 3.0], fold=0)
+    tenant = service.tenants["alex"]
+    assert tenant.swaps >= 1
+    assert tenant.swap_times_s == [1.0] * tenant.swaps
+    assert service.stats()["o2"]["alex"]["mean_swap_ms"] == 1000.0
