@@ -21,6 +21,14 @@ The guarded number is picked by the artifact's ``benchmark`` field:
               of the poisoned candidate, and zero new step-program
               binds across the whole canary cycle — any violation fails
               the gate outright, regardless of tolerance.
+  chaos     — the health-layer fault battery's degraded-over-healthy
+              RPS *ratio* (~1: a demoted annex costs serving nothing).
+              Hard invariants first, same policy as swap_safety: zero
+              non-finite trees ever served, at least one rejected
+              fine-tune round, one annex demotion AND recovery, one
+              tenant quarantine AND release, one watchdog-dropped
+              dispatch, one rolled-back canary, and a flush that came
+              back inside its deadline.
 
 All are dimensionless on purpose, so the committed baselines survive
 runner-hardware drift that absolute req/s or milliseconds would not.
@@ -72,12 +80,46 @@ def swap_safety(doc: dict) -> float:
     return float(doc["post_rollback_ns_ratio"])
 
 
+def chaos(doc: dict) -> float:
+    """Validate the fault battery's hard invariants, then hand back the
+    degraded-over-healthy RPS ratio for the trend comparison.  A fault
+    that was never seen, never contained, or never recovered from is a
+    correctness failure, not a perf regression; no tolerance applies."""
+    h = doc["health"]
+    problems = []
+    if doc["nonfinite_served"] != 0:
+        problems.append(f"{doc['nonfinite_served']} non-finite param "
+                        f"tree(s) reached serving")
+    if h["rejected_params"] < 1:
+        problems.append("no poisoned fine-tune round was rejected")
+    if h["annex_demotions"] < 1:
+        problems.append("the annex was never demoted")
+    if h["annex_recoveries"] < 1:
+        problems.append("the annex never recovered")
+    if h["quarantines"] < 1:
+        problems.append("no tenant was quarantined")
+    if h["quarantine_releases"] < 1:
+        problems.append("no quarantine was released")
+    if h["dropped_dispatches"] < 1:
+        problems.append("the watchdog never dropped a dispatch")
+    if doc["swaps"]["rolled_back_canary"] < 1:
+        problems.append("no forced canary loss was rolled back")
+    if doc["flush_s"] > doc["config"]["flush_deadline_s"]:
+        problems.append(f"flush took {doc['flush_s']:.1f}s, past its "
+                        f"{doc['config']['flush_deadline_s']:.0f}s "
+                        f"deadline")
+    if problems:
+        raise ValueError("; ".join(problems))
+    return float(doc["degraded_over_healthy_rps"])
+
+
 # benchmark name -> (description of the guarded ratio, extractor)
 METRICS = {
     "o2_serve": ("o2-vs-frozen ratio", o2_ratio),
     "slo_serve": ("static/adaptive p95 queue-wait ratio", slo_ratio),
     "o2_annex": ("annex-slice assessment speedup", annex_speedup),
     "swap_safety": ("post-rollback probe ratio", swap_safety),
+    "chaos": ("degraded/healthy serving RPS ratio", chaos),
 }
 
 

@@ -50,6 +50,29 @@ artifact reports `stats()["swaps"]`, a deterministic pre/post probe
 ratio (1.0 — the incumbent was never touched), and the step-program
 bind delta across the whole cycle (0 — canary lanes ride resident
 executables).  check_bench.py gates all three as `swap_safety`.
+
+``--scenario chaos`` runs the full fault battery through the health
+layer (`launch/serving/health.py`):
+
+    PYTHONPATH=src python -m benchmarks.slo_serve --scenario chaos \
+        --json BENCH_chaos.json
+
+One O2+canary service lives through six phases driven by deterministic
+`FaultSite` injection: (1) healthy timed traffic (the RPS yardstick);
+(2) NaN fine-tune rounds — every poisoned round must be rejected at the
+publish gate until the tenant's circuit breaker quarantines it, then
+clean traffic must release the breaker; (3) failed assessment
+dispatches — retries exhaust, the annex demotes into degraded mode, a
+timed phase shows serving continues on frozen params, then a half-open
+probe recovers it; (4) a hung dispatch — the drain watchdog abandons
+it and `flush_o2` returns a bounded partial-flush report; (5) forced
+canary losses — rollbacks fire and strike the breaker; (6) after every
+wave of every phase, a finiteness probe over all pool params and the
+published snapshot (`nonfinite_served` must end at 0).  The headline
+number is the degraded-over-healthy RPS ratio (~1: a demoted annex
+costs serving nothing); check_bench.py gates it as `chaos` after
+enforcing the hard invariants (each fault was seen, contained, and
+recovered from — violations fail outright, regardless of tolerance).
 """
 from __future__ import annotations
 
@@ -270,6 +293,192 @@ def run_poisoned(args):
         print(f"# wrote {args.json}")
 
 
+def run_chaos(args):
+    """The fault battery: every failure mode health.py contains, in one
+    continuous service lifetime, with hard invariants on the artifact.
+    Faults are injected per-site (`guard.sites[...] = FaultSite(...)`)
+    so each phase arms exactly the fault it is about and nothing else."""
+    import time as _time
+
+    from repro.core.o2 import O2Config
+    from repro.launch.serving import (HealthConfig, O2ServiceConfig,
+                                      SwapConfig)
+    from repro.launch.serving import o2_runtime as o2_mod
+    from repro.runtime.fault import FaultSite
+
+    budget = args.budget
+    slots = max(args.slots, 4)           # >=4: a canary lane + controls
+    n_keys = args.n_keys
+    # KS effectively off: divergence fires purely on W/R shift, which is
+    # exact — every assessment trigger in the drill is deterministic.
+    # The tiny DDPG shape matters: fine-tune rounds must actually
+    # complete on budget-4 episodes or the learner-side fault sites
+    # (NaN rounds, publish gates) never execute
+    from repro.core.ddpg import DDPGConfig
+    cfg = LITuneConfig(
+        index_type="alex", episode_len=budget,
+        lstm_hidden=16, mlp_hidden=32,
+        ddpg=DDPGConfig(seq_len=3, burn_in=1, batch_size=8),
+        o2=O2Config(divergence_threshold=10.0, wr_shift_threshold=0.5,
+                    assess_every=1, offline_updates_per_window=2))
+    health = HealthConfig(
+        dispatch_timeout_s=2.0,          # hang phase: watchdog horizon
+        dispatch_retries=1, retry_backoff_s=0.01, backoff_seed=args.seed,
+        annex_failure_threshold=1,
+        annex_cooloff_s=30.0,            # spans the degraded timed phase
+        quarantine_threshold=2, quarantine_windows=2,
+        flush_deadline_s=30.0)
+    service = TuningService(LITune(cfg, seed=args.seed), config=ServeConfig(
+        slots=slots, seed=args.seed,
+        o2=O2ServiceConfig(enabled=True, o2=cfg.o2),
+        swap=SwapConfig(canary=True, canary_fraction=0.25,
+                        canary_min_episodes=1, canary_timeout_ticks=64),
+        health=health))
+    guard = service.o2rt.health
+    key = jax.random.PRNGKey(args.seed + 1)
+    fold = 0
+    nonfinite_served = 0
+    # alternating W/R so every wave past the first carries divergence
+    # triggers (the reference anchors at wr=1)
+    wave_wrs = [1.0, 3.0, 1.0, 3.0]
+    timed_waves = 4
+
+    def _finite(tree):
+        return all(bool(np.all(np.isfinite(np.asarray(leaf))))
+                   for leaf in jax.tree.leaves(jax.device_get(tree)))
+
+    def serve_wave(flush=True):
+        nonlocal fold, nonfinite_served
+        for i, wr in enumerate(wave_wrs):
+            k = jax.random.fold_in(key, 131 * fold + i)
+            data = sample_keys(k, n_keys, "mix")
+            wl, _ = wr_workload(jax.random.fold_in(k, 1), data, wr,
+                                total=n_keys, dist="mix")
+            service.submit(data, wl, wr, budget_steps=budget)
+        fold += 1
+        service.run()
+        if flush:
+            service.flush_o2()
+        # the drill's core invariant, probed after EVERY wave: nothing
+        # non-finite ever reaches a pool or the published snapshot
+        for pool in service.pools.values():
+            if not _finite(pool.params):
+                nonfinite_served += 1
+        if not _finite(service.tenants["alex"].ready_params):
+            nonfinite_served += 1
+
+    def hp():
+        return service.stats()["health"]
+
+    def timed_phase():
+        t0 = _time.perf_counter()
+        for _ in range(timed_waves):
+            serve_wave()
+        return timed_waves * len(wave_wrs) / (_time.perf_counter() - t0)
+
+    # phase 1: warmup (program binds) + the healthy RPS yardstick
+    print("# chaos: healthy traffic ...")
+    serve_wave()
+    serve_wave()
+    rps_healthy = timed_phase()
+
+    # phase 2: NaN fine-tune rounds until the publish gate has rejected
+    # enough to quarantine the tenant; then clean traffic releases it
+    print("# chaos: NaN fine-tune rounds -> quarantine ...")
+    guard.sites["nan_round"] = FaultSite(fire_at=tuple(range(64)))
+    rounds = 0
+    while hp()["quarantines"] < 1 and rounds < 8:
+        serve_wave()
+        rounds += 1
+    guard.sites["nan_round"] = FaultSite()      # disarm
+    print("# chaos: clean traffic -> quarantine release ...")
+    while hp()["quarantine_releases"] < 1 and rounds < 16:
+        serve_wave()
+        rounds += 1
+
+    # phase 3: failed assessment dispatches exhaust their retries and
+    # demote the annex; serving continues (timed) on frozen params;
+    # after the cooloff a half-open probe recovers it.  The cooloff is
+    # rewound rather than slept through — the drill injects time the
+    # same way it injects faults
+    print("# chaos: failed dispatches -> annex demotion ...")
+    guard.sites["assess_fail"] = FaultSite(fire_at=(0, 1))
+    while hp()["annex_demotions"] < 1 and rounds < 24:
+        serve_wave()
+        rounds += 1
+    print("# chaos: degraded serving (timed) ...")
+    rps_degraded = timed_phase()
+    state_during_degraded = hp()["state"]
+    guard._degraded_at -= health.annex_cooloff_s     # cooloff elapses
+    print("# chaos: half-open probe -> recovery ...")
+    while hp()["annex_recoveries"] < 1 and rounds < 32:
+        serve_wave()
+        rounds += 1
+
+    # phase 4: one hung dispatch; the drain watchdog abandons it and
+    # flush_o2 comes back bounded with a truthful report
+    print("# chaos: hung dispatch -> bounded flush ...")
+    guard.sites["assess_hang"] = FaultSite(fire_at=(0,))
+    serve_wave(flush=False)
+    t0 = _time.perf_counter()
+    flush_report = service.flush_o2()
+    flush_s = _time.perf_counter() - t0
+    guard.sites["assess_hang"] = FaultSite()
+    # the abandon was (correctly) an annex failure: the annex is demoted
+    # again.  Elapse this cooloff too, so phase 5's assessments dispatch
+    if guard._degraded_at is not None:
+        guard._degraded_at -= health.annex_cooloff_s
+
+    # phase 5: forced canary losses — the rollback arm of the breaker
+    print("# chaos: forced canary losses -> rollbacks ...")
+    guard.sites["canary_loss"] = FaultSite(fire_at=(0, 1))
+    real_pooled_best = o2_mod._pooled_best
+    o2_mod._pooled_best = lambda r0, runtimes: -1.0
+    try:
+        while service.stats()["swaps"]["rolled_back_canary"] < 1 \
+                and rounds < 40:
+            serve_wave()
+            rounds += 1
+    finally:
+        o2_mod._pooled_best = real_pooled_best
+
+    st = service.stats()
+    h = st["health"]
+    sw = st["swaps"]
+    ratio = rps_degraded / max(rps_healthy, 1e-9)
+    print(f"# chaos  slots={slots} budget={budget} n_keys={n_keys} "
+          f"waves={fold} seed={args.seed} "
+          f"state_during_degraded={state_during_degraded}")
+    print("benchmark,nonfinite_served,rejected_params,quarantines,"
+          "releases,demotions,recoveries,dropped,rolled_back_canary,"
+          "degraded_over_healthy_rps,flush_s")
+    print(f"chaos,{nonfinite_served},{h['rejected_params']},"
+          f"{h['quarantines']},{h['quarantine_releases']},"
+          f"{h['annex_demotions']},{h['annex_recoveries']},"
+          f"{h['dropped_dispatches']},{sw['rolled_back_canary']},"
+          f"{ratio:.3f},{flush_s:.3f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "chaos",
+                       "config": {"slots": slots, "budget": budget,
+                                  "n_keys": n_keys, "seed": args.seed,
+                                  "waves": fold,
+                                  "timed_waves": timed_waves,
+                                  "devices": len(jax.devices()),
+                                  "flush_deadline_s":
+                                      health.flush_deadline_s},
+                       "health": h,
+                       "swaps": sw,
+                       "nonfinite_served": nonfinite_served,
+                       "state_during_degraded": state_during_degraded,
+                       "rps_healthy": rps_healthy,
+                       "rps_degraded": rps_degraded,
+                       "degraded_over_healthy_rps": ratio,
+                       "flush_s": flush_s,
+                       "flush_report": flush_report}, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--bursts", type=int, default=4)
@@ -295,15 +504,18 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as a JSON artifact (CI gate)")
     ap.add_argument("--scenario", default="bursts",
-                    choices=["bursts", "poisoned"],
+                    choices=["bursts", "poisoned", "chaos"],
                     help="'bursts' races static vs adaptive scheduling; "
                          "'poisoned' runs the swap-safety drill (a forced"
                          "-win poisoned model must die in the canary "
-                         "stage; see module docstring)")
+                         "stage); 'chaos' runs the health-layer fault "
+                         "battery (see module docstring)")
     args = ap.parse_args()
 
     if args.scenario == "poisoned":
         return run_poisoned(args)
+    if args.scenario == "chaos":
+        return run_chaos(args)
 
     cfg = LITuneConfig(index_type="alex", episode_len=args.budget,
                        lstm_hidden=32, mlp_hidden=64)

@@ -71,6 +71,14 @@ class DivergenceMonitor:
       * ``anchors`` lists the window indices (0-based) whose data anchors
         the current and all past reference quantiles, so re-anchors on
         model swaps stay visible in the history.
+
+    Non-finite window summaries (NaN/Inf keys or W/R ratios — a corrupt
+    trace, a poisoned feed) are *skipped and counted*
+    (``skipped_nonfinite``), never ingested: a single NaN quantile
+    adopted as the reference would poison every later KS distance into
+    NaN (NaN comparisons are False, so detection would silently go dark
+    forever).  A skipped window still appends a 0.0 divergence entry to
+    keep the one-entry-per-window invariant.
     """
 
     def __init__(self, cfg: O2Config):
@@ -81,11 +89,21 @@ class DivergenceMonitor:
         self.divergences: list[float] = []
         self.anchors: list[int] = []
         self.diverged_count = 0        # windows whose verdict fired (KS or W/R)
+        self.skipped_nonfinite = 0     # windows refused (NaN/Inf summary)
+
+    @staticmethod
+    def _finite_summary(q: np.ndarray, wr_ratio: float) -> bool:
+        return bool(np.isfinite(wr_ratio)) and bool(np.all(np.isfinite(q)))
 
     def observe(self, data_keys, wr_ratio: float) -> dict:
         """Record one window; returns the divergence verdict for it."""
         q = _quantiles(np.asarray(data_keys), self.cfg.n_quantiles)
         self.windows_seen += 1
+        if not self._finite_summary(q, wr_ratio):
+            self.skipped_nonfinite += 1
+            self.divergences.append(0.0)
+            return {"diverged": False, "ks": 0.0, "wr_shift": 0.0,
+                    "skipped_nonfinite": True}
         if self.ref_quantiles is None:
             self.ref_quantiles, self.ref_wr = q, wr_ratio
             self.divergences.append(0.0)
@@ -106,9 +124,14 @@ class DivergenceMonitor:
         window whose data is being anchored; it defaults to the latest
         observed one (the serial loop's case), but a concurrent server
         passes the retired window explicitly — another window may have
-        been observed since."""
-        self.ref_quantiles = _quantiles(np.asarray(data_keys),
-                                        self.cfg.n_quantiles)
+        been observed since.  A non-finite anchor is refused (skipped and
+        counted) — the previous reference stays live rather than letting
+        a corrupt window blind the monitor."""
+        q = _quantiles(np.asarray(data_keys), self.cfg.n_quantiles)
+        if not self._finite_summary(q, wr_ratio):
+            self.skipped_nonfinite += 1
+            return
+        self.ref_quantiles = q
         self.ref_wr = wr_ratio
         self.anchors.append(self.windows_seen - 1 if window is None
                             else window)

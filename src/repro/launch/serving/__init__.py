@@ -90,12 +90,24 @@ Key properties:
     window.  Both stages default off; `stats()["swaps"]` counts the
     state machine (tests/test_swap_pipeline.py).
   * **one config object** — the serving posture (slots, O2, policy,
-    SLOs, topology, swap trust policy) is a frozen `ServeConfig` passed
-    as `TuningService(agents, config=...)`; the legacy per-knob kwargs
-    adapt with a `DeprecationWarning`.
+    SLOs, topology, swap trust policy, health guards) is a frozen
+    `ServeConfig` passed as `TuningService(agents, config=...)`; the
+    legacy per-knob kwargs adapt with a `DeprecationWarning`.
+  * **graceful degradation** — `health.py` is the fault-tolerance
+    layer: finite/norm guards on every fine-tune result and swap
+    candidate (last-good params retained), a watchdog with bounded
+    seeded-backoff retries around every annex dispatch (repeated
+    failure demotes the annex into a degraded mode that serves frozen
+    and recovers automatically), per-tenant circuit breakers that
+    quarantine a poisoned tenant's O2 loop, and a deterministic fault
+    injector (`HealthConfig(fault=FaultPlan(...))`) driving the chaos
+    drill (`benchmarks/slo_serve.py --scenario chaos`, gated in CI).
+    `stats()["health"]` counts it all (tests/test_health.py).
 """
 from repro.launch.serving.config import (ServeConfig, SwapConfig,
                                          config_from_legacy)
+from repro.launch.serving.health import (FaultPlan, HealthConfig,
+                                         HealthGuard)
 from repro.launch.serving.o2_runtime import O2Runtime, O2ServiceConfig
 from repro.launch.serving.pools import _SlotPool, summarize_episode
 from repro.launch.serving.scheduler import (AdaptiveSlotPolicy,
@@ -104,8 +116,9 @@ from repro.launch.serving.scheduler import (AdaptiveSlotPolicy,
                                             TuneRequest)
 from repro.launch.serving.service import TuningService
 from repro.launch.serving.slo import SLOConfig, SLOTracker
-from repro.launch.serving.stats import (O2Stats, PoolStats, SchedulerStats,
-                                        ServiceStats, SLOStats, SwapStats,
+from repro.launch.serving.stats import (HealthStats, O2Stats, PoolStats,
+                                        SchedulerStats, ServiceStats,
+                                        SLOStats, SwapStats,
                                         TenantSwapStats)
 from repro.launch.serving.topology import DeviceSlice, ServingTopology
 
@@ -113,6 +126,10 @@ __all__ = [
     "AdaptiveSlotPolicy",
     "DeviceSlice",
     "EDFSlotPolicy",
+    "FaultPlan",
+    "HealthConfig",
+    "HealthGuard",
+    "HealthStats",
     "O2Runtime",
     "O2ServiceConfig",
     "O2Stats",

@@ -44,6 +44,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+from repro.launch.serving.health import HealthConfig
 from repro.launch.serving.o2_runtime import O2ServiceConfig
 from repro.launch.serving.scheduler import SlotPolicy
 from repro.launch.serving.slo import SLOConfig
@@ -122,6 +123,11 @@ class ServeConfig:
     clock: Callable[[], float] | None = None
     topology: ServingTopology | None = None
     swap: SwapConfig = dataclasses.field(default_factory=SwapConfig)
+    # the fault-tolerance layer (param-health guards, annex watchdog,
+    # tenant circuit breakers, fault injection — launch/serving/health.py).
+    # Enabled by default: the guards are read-only on healthy paths, so
+    # every parity guarantee holds with them on
+    health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
 
     def __post_init__(self):
         if self.slots < 1:

@@ -1,0 +1,259 @@
+"""Serving-side fault tolerance: param-health guards, the annex
+watchdog, and per-tenant circuit breakers.
+
+The O2 loop assumes a lot of good behavior — every fine-tune round
+converges to finite params, every annex dispatch returns, every
+tenant's learner stays sane.  In production none of that holds: one
+NaN gradient would hot-swap garbage into serving pools, one hung
+dispatch would wedge `flush_o2()` forever, and one poisoned tenant
+would starve the shared annex with doomed retries.  This module is the
+containment layer between those failures and the frozen serving path:
+
+* **Param-health guards** — every fine-tune result and every swap
+  candidate passes a finite/norm check (`HealthGuard.params_healthy`,
+  one small jitted reduction over the tree) before it may be published
+  to assessments or promoted to pools.  Rejected params are counted and
+  the tenant's last-good state is restored, so nothing non-finite can
+  *enter* the canary pipeline, let alone serving.
+
+* **Annex watchdog** — learner and pooled-assessment dispatches run
+  under a bounded retry loop with seeded exponential backoff; a
+  dispatched assessment that never completes is abandoned after
+  `dispatch_timeout_s`.  Repeated consecutive failures demote the annex
+  into a **degraded mode**: fine-tune and assessment pause, serving
+  continues frozen on last-good params, and after `annex_cooloff_s` the
+  next dispatch acts as a half-open probe — success recovers the annex
+  automatically, failure restarts the cooloff.
+
+* **Per-tenant circuit breakers** — a tenant whose fine-tunes keep
+  producing unhealthy params, or whose canaries keep rolling back, is
+  quarantined for `quarantine_windows` observed windows: its O2 loop
+  (fine-tune, assessments, swap decisions) pauses while its pools keep
+  serving the incumbent params, so one poisoned tenant cannot burn the
+  shared annex.  Release is automatic once the cooloff elapses.
+
+* **Deterministic fault injection** — `FaultPlan` schedules failures by
+  per-site ordinal (the `runtime/fault.py` `FaultSite` idiom: the Nth
+  fine-tune round NaNs out, the Nth assessment dispatch raises or
+  hangs, the Nth canary trial loses), injectable via
+  `HealthConfig(fault=...)` on `ServeConfig`.  The chaos drill
+  (`benchmarks/slo_serve.py --scenario chaos`) drives all of the above
+  through this plan and gates hard invariants in CI.
+
+Guards observe, they don't perturb: with no faults and healthy params
+every check is read-only, so all bitwise-parity guarantees (serial ≡
+served, health-on ≡ health-off) hold with the guards enabled — which
+is why they default on.
+
+Watchdog and cooloff timing deliberately use the wall clock
+(`time.monotonic`), not the service's injectable SLO clock: fake test
+clocks advance on *call count*, which would fire spurious timeouts on
+perfectly healthy dispatches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.fault import FaultSite, InjectedFailure
+
+__all__ = ["FaultPlan", "HealthConfig", "HealthGuard", "InjectedFailure"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic fault schedule, by 0-based per-site event ordinal.
+    Empty tuples everywhere (the default) injects nothing."""
+    # the Nth completed fine-tune round has its params overwritten with
+    # NaN before the health gate sees them (a diverged learner)
+    nan_finetune_rounds: tuple = ()
+    # the Nth learner dispatch raises InjectedFailure (annex fault)
+    fail_finetune_dispatches: tuple = ()
+    # the Nth pooled-assessment dispatch raises InjectedFailure
+    fail_assess_dispatches: tuple = ()
+    # the Nth pooled-assessment dispatch succeeds but never reports
+    # ready — the watchdog must abandon it
+    hang_assess_dispatches: tuple = ()
+    # the Nth canary trial is forced to lose (scores ignored)
+    lose_canary_trials: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Knobs for the serving health layer (a `ServeConfig` sub-config).
+
+    Defaults are production-shaped: guards on (they are read-only on
+    healthy paths), generous watchdog timeout, no flush deadline (the
+    historical blocking `flush_o2` contract)."""
+    enabled: bool = True
+    # reject any param tree whose global l2 norm exceeds this (or is
+    # non-finite) — exploding-but-finite learners are caught too
+    max_param_norm: float = 1e6
+    # abandon a dispatched assessment not ready after this many wall
+    # seconds (generous: pending device work, not compile time)
+    dispatch_timeout_s: float = 30.0
+    # retries per dispatch after the first attempt, with seeded
+    # exponential backoff between attempts
+    dispatch_retries: int = 2
+    retry_backoff_s: float = 0.02
+    backoff_seed: int = 0
+    # consecutive dispatch failures before the annex is demoted, and the
+    # wall-clock cooloff before a half-open probe may try again
+    annex_failure_threshold: int = 2
+    annex_cooloff_s: float = 1.0
+    # consecutive bad events (rejected params, rollbacks) before a
+    # tenant's O2 loop is quarantined, and the cooloff in *observed
+    # windows* before it is released
+    quarantine_threshold: int = 3
+    quarantine_windows: int = 8
+    # default deadline for `TuningService.flush_o2` (None -> block until
+    # settled, the historical contract)
+    flush_deadline_s: float | None = None
+    fault: FaultPlan | None = None
+
+    def __post_init__(self):
+        if self.max_param_norm <= 0:
+            raise ValueError("max_param_norm must be positive")
+        if self.dispatch_retries < 0:
+            raise ValueError("dispatch_retries must be >= 0")
+        if self.annex_failure_threshold < 1:
+            raise ValueError("annex_failure_threshold must be >= 1")
+        if self.quarantine_threshold < 1:
+            raise ValueError("quarantine_threshold must be >= 1")
+        if self.quarantine_windows < 1:
+            raise ValueError("quarantine_windows must be >= 1")
+
+
+@jax.jit
+def _tree_health(tree):
+    """(all-finite, global l2 norm) over every leaf of a param tree —
+    one small fused reduction, dispatched wherever the tree lives.
+    float32 accumulation on purpose: an exploding tree overflowing the
+    sum-of-squares to inf *is* a health failure."""
+    leaves = jax.tree.leaves(tree)
+    finite = jnp.bool_(True)
+    sq = jnp.float32(0.0)
+    for leaf in leaves:
+        finite &= jnp.all(jnp.isfinite(leaf))
+        sq += jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+    return finite, jnp.sqrt(sq)
+
+
+class HealthGuard:
+    """Process-wide health state for one `O2Runtime`: fault sites, the
+    annex breaker, and every counter `stats()["health"]` renders.
+    Per-tenant breaker state lives on `_TenantO2` (it is tenant state);
+    this object owns the aggregate counts and the annex's demotion
+    clock."""
+
+    SITES = ("nan_round", "finetune_fail", "assess_fail", "assess_hang",
+             "canary_loss")
+
+    def __init__(self, cfg: HealthConfig):
+        self.cfg = cfg
+        plan = cfg.fault if cfg.fault is not None else FaultPlan()
+        self.sites: dict[str, FaultSite] = {
+            "nan_round": FaultSite(plan.nan_finetune_rounds),
+            "finetune_fail": FaultSite(plan.fail_finetune_dispatches),
+            "assess_fail": FaultSite(plan.fail_assess_dispatches),
+            "assess_hang": FaultSite(plan.hang_assess_dispatches),
+            "canary_loss": FaultSite(plan.lose_canary_trials),
+        }
+        self._backoff_rng = np.random.default_rng(cfg.backoff_seed)
+        # counters (the stats()["health"] block)
+        self.rejected_params = 0
+        self.retries = 0
+        self.annex_demotions = 0
+        self.annex_recoveries = 0
+        self.dropped_dispatches = 0
+        self.quarantines = 0
+        self.quarantine_releases = 0
+        self.degraded_ticks = 0
+        # annex breaker state
+        self._consecutive_failures = 0
+        self._degraded_at: float | None = None
+
+    # ---------------------------------------------------------- queries
+    @property
+    def enabled(self) -> bool:
+        return self.cfg.enabled
+
+    @property
+    def degraded(self) -> bool:
+        return self._degraded_at is not None
+
+    def o2_paused(self) -> bool:
+        """True while the annex is demoted *and* inside its cooloff —
+        the window where fine-tune/assessment must not even try.  After
+        the cooloff the annex stays nominally degraded but dispatches
+        are allowed again as half-open probes."""
+        if self._degraded_at is None or not self.enabled:
+            return False
+        return (time.monotonic() - self._degraded_at) \
+            < self.cfg.annex_cooloff_s
+
+    # -------------------------------------------------------- the guard
+    def params_healthy(self, tree) -> bool:
+        """Finite + bounded-norm check on a param tree.  Read-only: the
+        tree is never modified, and on healthy paths this is the guard's
+        only device work (one small reduction)."""
+        if not self.enabled:
+            return True
+        finite, norm = _tree_health(tree)
+        norm = float(norm)
+        return bool(finite) and np.isfinite(norm) \
+            and norm <= self.cfg.max_param_norm
+
+    # ------------------------------------------------- the annex breaker
+    def note_retry(self):
+        self.retries += 1
+
+    def note_annex_failure(self):
+        """One exhausted dispatch (all retries failed, or a watchdog
+        abandon).  Consecutive failures demote; a failed half-open probe
+        restarts the cooloff without recounting the demotion."""
+        if not self.enabled:
+            return
+        self._consecutive_failures += 1
+        if self._degraded_at is not None:
+            self._degraded_at = time.monotonic()
+        elif self._consecutive_failures >= self.cfg.annex_failure_threshold:
+            self._degraded_at = time.monotonic()
+            self.annex_demotions += 1
+
+    def note_annex_ok(self):
+        """One successful dispatch: the failure streak resets, and a
+        degraded annex recovers (the half-open probe succeeded)."""
+        self._consecutive_failures = 0
+        if self._degraded_at is not None:
+            self._degraded_at = None
+            self.annex_recoveries += 1
+
+    def sleep_backoff(self, attempt: int):
+        """Seeded jittered exponential backoff between dispatch retries
+        (deterministic given `backoff_seed` — replayed drills sleep the
+        same schedule)."""
+        base = self.cfg.retry_backoff_s * (2.0 ** attempt)
+        time.sleep(base * (0.5 + self._backoff_rng.random()))
+
+    def watchdog_expired(self, dispatched_at: float | None) -> bool:
+        if not self.enabled or dispatched_at is None:
+            return False
+        return (time.monotonic() - dispatched_at) \
+            > self.cfg.dispatch_timeout_s
+
+    # --------------------------------------------------- fault injection
+    def fire(self, site: str) -> bool:
+        """Count one event at `site`; True when the plan schedules a
+        fault at this ordinal.  Disabled guards never fire (and never
+        count — the plan is part of the guard)."""
+        return self.enabled and self.sites[site].check()
+
+    def raise_if_planned(self, site: str):
+        if self.fire(site):
+            raise InjectedFailure(f"injected fault at {site} "
+                                  f"(event {self.sites[site].count - 1})")

@@ -34,13 +34,14 @@ from repro.core.o2 import (DivergenceMonitor, O2Config, copy_state,
                            make_replay, offline_finetune)
 from repro.core.replay import _pow2_pad
 
+from repro.launch.serving.health import HealthConfig, HealthGuard
 from repro.launch.serving.programs import (_batched_admit_keys,
                                            _build_carry_program,
                                            _extract_episode_program,
                                            _pow2_ladder, _reset_program,
                                            _step_program)
-from repro.launch.serving.stats import (O2Stats, SwapStats, TenantO2Stats,
-                                        TenantSwapStats)
+from repro.launch.serving.stats import (HealthStats, O2Stats, SwapStats,
+                                        TenantO2Stats, TenantSwapStats)
 from repro.launch.serving.topology import ServingTopology
 
 
@@ -91,8 +92,13 @@ class _TenantO2:
     batches hopped to the annex per round."""
 
     def __init__(self, tuner, svc_cfg: O2ServiceConfig, annex=None,
-                 ring_device=None, baseline_window: int = 32):
+                 ring_device=None, baseline_window: int = 32,
+                 guard: HealthGuard | None = None,
+                 index_type: str | None = None):
         self.cfg = svc_cfg.o2
+        self.guard = guard
+        self.index_type = (index_type if index_type is not None
+                           else tuner.cfg.index_type)
         self.net_cfg = tuner.cfg.net_cfg()
         self.ddpg_cfg = tuner.cfg.ddpg
         self.et_cfg = tuner.cfg.et_cfg()
@@ -125,6 +131,50 @@ class _TenantO2:
         # no spare lane, and the post-promotion regression reference)
         self.swap = TenantSwapStats()
         self.baseline: deque[float] = deque(maxlen=baseline_window)
+        # the health layer's last-known-good learner state: every
+        # publish/strict round that passes the param gate refreshes it,
+        # and a rejected round restores from it — so one NaN gradient
+        # never wedges the tenant's learner permanently
+        self._last_good = self._place(copy_state(tuner.state))
+        self.rejected_params = 0
+        # circuit-breaker state: consecutive bad events (rejected
+        # params, rollbacks); at the guard's threshold the tenant's O2
+        # loop is quarantined until `quarantined_until` (a window count
+        # on this tenant's own monitor — traffic-paced, not wall-paced)
+        self.bad_streak = 0
+        self.quarantined_until: int | None = None
+
+    @property
+    def quarantined(self) -> bool:
+        return self.quarantined_until is not None
+
+    def reject_round(self):
+        """Drop an unhealthy fine-tune result: count it, restore the
+        learner from the last-good snapshot (a real copy — the next
+        round donates its input), and clear the round-pending state."""
+        self.rejected_params += 1
+        if self.guard is not None:
+            self.guard.rejected_params += 1
+        self.offline = self._place(copy_state(self._last_good))
+        self._inflight = None
+        self._round_dirty = False
+
+    def gate_round(self) -> bool:
+        """Health-gate the latest completed fine-tune round.  Healthy
+        rounds refresh the last-good snapshot; unhealthy ones are
+        rejected.  The breaker streak deliberately does NOT reset here —
+        only a swap that survives its watch window or a quarantine
+        release clears it, so repeated canary rollbacks trip the
+        breaker even when every fine-tune round between them is
+        healthy.  Read-only on the healthy path beyond the snapshot
+        copy."""
+        if self.guard is None or not self.guard.enabled:
+            return True
+        if self.guard.params_healthy(self.offline["params"]):
+            self._last_good = self._place(copy_state(self.offline))
+            return True
+        self.reject_round()
+        return False
 
     def _place(self, tree):
         return tree if self.annex is None else jax.device_put(tree,
@@ -136,8 +186,13 @@ class _TenantO2:
     def publish_ready(self):
         """Expose the latest completed round's params to assessments —
         bounded staleness, never a block on a pending round (the copy
-        also shields them from the next round's donation off-CPU)."""
+        also shields them from the next round's donation off-CPU).
+        The completed round passes the health gate first: a rejected
+        round never publishes, and `ready_params` keeps the last-good
+        version (callers watch `rejected_params` for breaker strikes)."""
         if self._round_dirty and self.learner_free():
+            if not self.gate_round():
+                return
             self.ready_params = copy_state(self.offline["params"])
             self._round_dirty = False
 
@@ -158,6 +213,12 @@ class _TenantO2:
         if done:
             self._inflight = self.offline["updates"]
             self._round_dirty = True
+            if self.guard is not None and self.guard.fire("nan_round"):
+                # injected learner divergence: poison the round's params
+                # before any gate sees them (the chaos drill's NaN site)
+                self.offline["params"] = jax.tree.map(
+                    lambda x: jnp.full_like(x, jnp.nan),
+                    self.offline["params"])
 
 
 def _pooled_best(r0: float, runtimes: np.ndarray) -> float:
@@ -217,6 +278,7 @@ class _SwapTrial:
     watch_windows: int = 0       # windows observed since promotion
     monitor_ref: tuple | None = None  # (ref_quantiles, ref_wr) pre-swap
     prev_anchor: int | None = None    # anchor window index pre-swap
+    forced_loss: bool = False    # fault injection: lose this canary
 
 
 @dataclasses.dataclass
@@ -233,8 +295,12 @@ class _PendingAssess:
     r0: object           # [B] device: r_best at reset
     outs: list           # [(k, runtime_ns [k, B], early [k, B]) ...]
     params: object       # the judged param tree
+    dispatched_at: float | None = None  # wall time of dispatch (watchdog)
+    forced_hang: bool = False  # fault injection: never report ready
 
     def ready(self) -> bool:
+        if self.forced_hang:
+            return False
         return bool(self.outs[-1][1].is_ready())
 
 
@@ -249,13 +315,16 @@ class O2Runtime:
 
     def __init__(self, agents: dict, svc_cfg: O2ServiceConfig, pools: dict,
                  topology: ServingTopology, horizon_cap: int,
-                 max_assess_width: int, swap_cfg=None, clock=None):
+                 max_assess_width: int, swap_cfg=None, clock=None,
+                 health_cfg: HealthConfig | None = None):
         self.cfg = svc_cfg
         if swap_cfg is None:
             # lazy: config.py imports O2ServiceConfig from this module
             from repro.launch.serving.config import SwapConfig
             swap_cfg = SwapConfig()
         self.swap_cfg = swap_cfg
+        self.health = HealthGuard(health_cfg if health_cfg is not None
+                                  else HealthConfig())
         # the service's injectable clock (swap timing rides it, so tests
         # and benchmarks measure swaps on the same timebase as SLOs)
         self.clock = clock if clock is not None else time.perf_counter
@@ -269,7 +338,8 @@ class O2Runtime:
         self.tenants: dict[str, _TenantO2] = {
             it: _TenantO2(tuner, svc_cfg, annex=self.annex,
                           ring_device=topology.ring.device(),
-                          baseline_window=swap_cfg.baseline_window)
+                          baseline_window=swap_cfg.baseline_window,
+                          guard=self.health, index_type=it)
             for it, tuner in agents.items()}
         # at most one swap trial per tenant (verdict wins landing while
         # one is live are deferred, not queued): index_type -> _SwapTrial
@@ -322,6 +392,13 @@ class O2Runtime:
         assess after the episode retires."""
         tenant = self.tenants[req.index_type]
         div = tenant.monitor.observe(req.data_keys, req.wr_ratio)
+        if tenant.quarantined and \
+                tenant.monitor.windows_seen >= tenant.quarantined_until:
+            # cooloff elapsed (measured in this tenant's own observed
+            # windows): release the breaker with a clean streak
+            tenant.quarantined_until = None
+            tenant.bad_streak = 0
+            self.health.quarantine_releases += 1
         self.pending[req.rid] = {
             "div": div, "window": tenant.monitor.windows_seen,
             "assess_key": assess_key}
@@ -360,7 +437,12 @@ class O2Runtime:
         a pending one), the fine-tune round queues after them, and
         verdicts land on a later tick's drain."""
         strict = self.cfg.strict_order
-        if strict:
+        # a demoted annex inside its cooloff pauses all O2 work for the
+        # tick — the serving path keeps running frozen on current params
+        paused = self.health.o2_paused()
+        if paused:
+            self.health.degraded_ticks += 1
+        if strict and not paused:
             t0 = time.perf_counter()
             self._finetune_retired(retired, strict)
             self.phase_ms["finetune"] += 1e3 * (time.perf_counter() - t0)
@@ -380,18 +462,20 @@ class O2Runtime:
             summary["divergence"] = pend["div"]
             summary["swapped"] = False
             if pend["div"]["diverged"] and \
-                    pend["window"] % tenant.cfg.assess_every == 0:
+                    pend["window"] % tenant.cfg.assess_every == 0 \
+                    and not paused and not tenant.quarantined:
                 self.backlog.append((pool_key(req), req, summary, pend))
         if self.swap_cfg.staged:
             self._observe_retired(retired)
             self._advance_trials()
-        self._pump_assessments()
+        if not paused:
+            self._pump_assessments()
         self.phase_ms["assess"] += 1e3 * (time.perf_counter() - t0)
         if strict:
             # serial-equivalent interleaving: the verdict (and any swap)
             # lands before the next window is admitted
             self.drain(block=True)
-        else:
+        elif not paused:
             t0 = time.perf_counter()
             self._finetune_retired(retired, strict)
             self.phase_ms["finetune"] += 1e3 * (time.perf_counter() - t0)
@@ -403,26 +487,127 @@ class O2Runtime:
         long budgets) grows the backlog instead of the device queue, and
         `flush` settles whatever is left."""
         while self.backlog and len(self.inflight) < 2:
+            if self.health.o2_paused():
+                # demoted annex mid-pump: keep the rest of the backlog
+                # for after recovery instead of burning it on dispatches
+                # that cannot succeed
+                break
             pk = self.backlog[0][0]
             chunk = [item for item in self.backlog
                      if item[0] == pk][:self.max_assess_width]
             for item in chunk:
                 self.backlog.remove(item)
             pool, tenant = self.pools[pk], self.tenants[pk[0]]
+            if tenant.quarantined:
+                # stale backlog of a breaker-open tenant: drop it
+                continue
             if not self.cfg.strict_order:
+                before = tenant.rejected_params
                 tenant.publish_ready()
-            self.inflight.append(self._dispatch_assess(
-                pk, pool, tenant, [item[1:] for item in chunk]))
+                if tenant.rejected_params != before:
+                    self._note_bad(tenant)
+                    if tenant.quarantined:
+                        continue
+            entry = self._guarded_dispatch(
+                pk, pool, tenant, [item[1:] for item in chunk])
+            if entry is not None:
+                self.inflight.append(entry)
+
+    def _guarded_dispatch(self, pk: tuple, pool, tenant: _TenantO2,
+                          chunk: list):
+        """One pooled-assessment dispatch under the annex watchdog:
+        bounded retries with seeded backoff; exhaustion drops the chunk
+        and strikes the annex breaker.  Returns None when dropped."""
+        g = self.health
+        if not g.enabled:
+            entry = self._dispatch_assess(pk, pool, tenant, chunk)
+            entry.dispatched_at = time.monotonic()
+            return entry
+        if g.o2_paused():
+            # demoted mid-tick: the cooloff applies to the rest of the
+            # tick's dispatches too, not just the next tick's
+            g.dropped_dispatches += 1
+            return None
+        for attempt in range(g.cfg.dispatch_retries + 1):
+            try:
+                g.raise_if_planned("assess_fail")
+                entry = self._dispatch_assess(pk, pool, tenant, chunk)
+            except RuntimeError:
+                # InjectedFailure and device/runtime faults alike
+                if attempt < g.cfg.dispatch_retries:
+                    g.note_retry()
+                    g.sleep_backoff(attempt)
+                    continue
+                g.note_annex_failure()
+                g.dropped_dispatches += 1
+                return None
+            g.note_annex_ok()
+            entry.dispatched_at = time.monotonic()
+            if g.fire("assess_hang"):
+                entry.forced_hang = True
+            return entry
 
     def _finetune_retired(self, retired: list, strict: bool):
         for index_type in {req.index_type for req, _ in retired}:
+            tenant = self.tenants[index_type]
+            if tenant.quarantined:
+                continue
             n = (self.cfg.offline_updates_per_tick
                  if self.cfg.offline_updates_per_tick is not None
-                 else self.tenants[index_type].cfg
-                 .offline_updates_per_window)
+                 else tenant.cfg.offline_updates_per_window)
             if self.cfg.scale_rounds_to_annex:
                 n *= self.topology.annex.width
-            self.tenants[index_type].finetune(n, strict)
+            self._guarded_finetune(tenant, n, strict)
+
+    def _guarded_finetune(self, tenant: _TenantO2, n: int, strict: bool):
+        """One learner round under the watchdog (same retry/backoff
+        contract as assessments).  Strict mode additionally gates the
+        completed round's params right here, preserving the serial
+        interleaving — concurrent mode gates at publish time instead, so
+        a pending round is never synced on."""
+        g = self.health
+        if not g.enabled:
+            tenant.finetune(n, strict)
+            return
+        if g.o2_paused():        # demoted mid-tick: no learner work either
+            return
+        for attempt in range(g.cfg.dispatch_retries + 1):
+            try:
+                g.raise_if_planned("finetune_fail")
+                tenant.finetune(n, strict)
+            except RuntimeError:
+                if attempt < g.cfg.dispatch_retries:
+                    g.note_retry()
+                    g.sleep_backoff(attempt)
+                    continue
+                g.note_annex_failure()
+                return
+            g.note_annex_ok()
+            if strict and tenant._round_dirty:
+                if tenant.gate_round():
+                    tenant._round_dirty = False   # strict never publishes
+                else:
+                    self._note_bad(tenant)
+            return
+
+    def _note_bad(self, tenant: _TenantO2):
+        """One tenant-level health strike (rejected params, rollback).
+        At the configured threshold the tenant's breaker opens: its O2
+        loop quarantines until `quarantine_windows` more of its windows
+        are observed, and any live canary is rolled back (the incumbent
+        params were never touched, so serving stays frozen-good)."""
+        tenant.bad_streak += 1
+        g = self.health
+        if not g.enabled or tenant.quarantined:
+            return
+        if tenant.bad_streak >= g.cfg.quarantine_threshold:
+            tenant.quarantined_until = (tenant.monitor.windows_seen
+                                        + g.cfg.quarantine_windows)
+            g.quarantines += 1
+            trial = self.trials.get(tenant.index_type)
+            if trial is not None and trial.state == "canary":
+                self._rollback_canary(tenant.index_type, trial,
+                                      note=False)
 
     def _assess_noise_dev(self, slice_, width: int):
         key = (slice_, width)
@@ -489,15 +674,35 @@ class O2Runtime:
         return _PendingAssess(pk[0], list(chunk), env_states["r_best"],
                               outs, params)
 
-    def drain(self, block: bool = False):
+    def drain(self, block: bool = False, deadline_s: float | None = None):
         """Judge every in-flight pooled assessment whose device work has
         completed (all of them when `block`), in dispatch order: fetch
         the per-slot runtime scalars, compare each window's offline best
-        against its online summary, and hot-swap winners."""
+        against its online summary, and hot-swap winners.
+
+        The annex watchdog rides along: a dispatched entry not ready
+        after `HealthConfig.dispatch_timeout_s` of wall time is
+        abandoned (counted, annex breaker struck) instead of blocking
+        forever, and a blocking drain stops at `deadline_s` (from
+        `flush`'s partial-flush budget) with the remainder in flight."""
+        t_start = time.monotonic()
         while self.inflight:
             entry = self.inflight[0]
-            if not block and not entry.ready():
-                break
+            if not entry.ready():
+                if self.health.watchdog_expired(entry.dispatched_at):
+                    # hung dispatch: abandon the verdict (its windows
+                    # simply keep their online summaries) and strike
+                    self.inflight.popleft()
+                    self.health.dropped_dispatches += 1
+                    self.health.note_annex_failure()
+                    continue
+                if not block:
+                    break
+                if deadline_s is not None and \
+                        (time.monotonic() - t_start) >= deadline_s:
+                    break
+                time.sleep(5e-4)
+                continue
             self.inflight.popleft()
             t0 = time.perf_counter()
             r0s = np.asarray(jax.device_get(entry.r0))
@@ -508,6 +713,8 @@ class O2Runtime:
             deltas: dict[int, float] = {}   # slot column -> delta (ns)
             wins: dict[int, float] = {}     # winning columns only
             stops: dict[int, int] = {}
+            tenant = self.tenants[entry.index_type]
+            candidate_ok = None   # lazy health verdict on entry.params
             for j, (req, summary, pend) in enumerate(entry.items):
                 T = req.budget_steps
                 hit = np.flatnonzero(earls[:T, j])
@@ -522,7 +729,20 @@ class O2Runtime:
                     if not self.swap_cfg.staged:
                         # the immediate path — bitwise the pre-pipeline
                         # behavior: every per-window win swaps, in order
-                        tenant = self.tenants[entry.index_type]
+                        if tenant.quarantined:
+                            continue    # breaker open: serve frozen
+                        if candidate_ok is None:
+                            # swap candidacy gate, once per entry: a
+                            # non-finite/exploded tree never reaches a
+                            # pool, win or not
+                            candidate_ok = self.health.params_healthy(
+                                entry.params)
+                            if not candidate_ok:
+                                self.health.rejected_params += 1
+                                tenant.rejected_params += 1
+                                self._note_bad(tenant)
+                        if not candidate_ok:
+                            continue
                         tenant.swap.candidates += 1
                         tenant.swap.immediate += 1
                         tenant.swap.promoted += 1
@@ -530,7 +750,7 @@ class O2Runtime:
                                       window=pend["window"] - 1,
                                       params=entry.params)
                         summary["swapped"] = True
-            if wins and self.swap_cfg.staged:
+            if wins and self.swap_cfg.staged and not tenant.quarantined:
                 self._judge_staged(entry, deltas, wins, stops, rts)
             self.phase_ms["assess"] += 1e3 * (time.perf_counter() - t0)
 
@@ -546,6 +766,14 @@ class O2Runtime:
         assessment produces one candidate at most (the window with the
         largest improvement), gated on the bootstrap CI when armed."""
         tenant = self.tenants[entry.index_type]
+        if not self.health.params_healthy(entry.params):
+            # swap candidacy gate: an unhealthy tree is rejected before
+            # the CI gate can even look at it — it never becomes a
+            # candidate, never touches a canary lane
+            self.health.rejected_params += 1
+            tenant.rejected_params += 1
+            self._note_bad(tenant)
+            return
         if self.swap_cfg.ci_gate:
             if len(entry.items) > 1:
                 samples = list(deltas.values())
@@ -622,6 +850,8 @@ class O2Runtime:
                            self._baseline_mean(tenant))
         for pool in pools:
             pool.set_canary(self._canary_lanes(pool.slots), candidate)
+        if self.health.fire("canary_loss"):
+            trial.forced_loss = True
         self.trials[entry.index_type] = trial
         tenant.swap.canaried += 1
         tenant.swap.active_state = "canary"
@@ -654,6 +884,11 @@ class O2Runtime:
         for it, trial in list(self.trials.items()):
             if trial.state == "canary":
                 trial.ticks += 1
+                if trial.forced_loss:
+                    # injected canary loss (the chaos drill's repeated-
+                    # rollback site): decide against it immediately
+                    self._rollback_canary(it, trial)
+                    continue
                 if len(trial.canary_scores) >= cfg.canary_min_episodes:
                     control = (float(np.mean(trial.control_scores))
                                if len(trial.control_scores)
@@ -704,10 +939,12 @@ class O2Runtime:
         tenant.swap.promoted += 1
         tenant.swap.active_state = "promoted"
 
-    def _rollback_canary(self, index_type: str, trial: _SwapTrial):
+    def _rollback_canary(self, index_type: str, trial: _SwapTrial,
+                         note: bool = True):
         """Abort a canary: drop the per-lane mix on every pool — the
         incumbent `pool.params` was never touched, so this *is* the
-        bitwise revert — and retire the trial."""
+        bitwise revert — and retire the trial.  A rollback is a breaker
+        strike (`note`), except when the breaker itself triggered it."""
         for pk, pool in self.pools.items():
             if pk[0] == index_type and pool.canary_lanes is not None:
                 pool.clear_canary()
@@ -716,9 +953,11 @@ class O2Runtime:
         tenant.swap.active_state = None
         trial.summary["swap_rolled_back"] = "canary"
         del self.trials[index_type]
+        if note:
+            self._note_bad(tenant)
 
     def _rollback_promoted(self, index_type: str, trial: _SwapTrial,
-                           reason: str):
+                           reason: str, note: bool = True):
         """Revert a promoted swap bitwise: restore the pre-swap online
         tree on every pool and the divergence monitor's pre-promotion
         reference distribution (re-appending the pre-swap anchor keeps
@@ -739,18 +978,40 @@ class O2Runtime:
         tenant.swap.active_state = None
         trial.summary["swap_rolled_back"] = reason
         del self.trials[index_type]
+        if note:
+            self._note_bad(tenant)
 
     def _close_trial(self, index_type: str):
         """A promoted trial survived its watch window: drop the rollback
-        snapshots and free the tenant for the next candidate."""
+        snapshots and free the tenant for the next candidate (a
+        surviving swap also clears the tenant's breaker streak)."""
         self.trials.pop(index_type, None)
-        self.tenants[index_type].swap.active_state = None
+        tenant = self.tenants[index_type]
+        tenant.swap.active_state = None
+        tenant.bad_streak = 0
 
     def swap_stats(self) -> SwapStats:
         """The `stats()["swaps"]` block's data (the service adds SLO
         breach attribution before rendering)."""
         return SwapStats(per_tenant={it: t.swap
                                      for it, t in self.tenants.items()})
+
+    def health_stats(self) -> HealthStats:
+        """The `stats()["health"]` block's data: the guard's aggregate
+        counters plus the currently quarantined tenant list."""
+        g = self.health
+        return HealthStats(
+            state="degraded" if g.degraded else "healthy",
+            rejected_params=g.rejected_params,
+            retries=g.retries,
+            annex_demotions=g.annex_demotions,
+            annex_recoveries=g.annex_recoveries,
+            dropped_dispatches=g.dropped_dispatches,
+            quarantines=g.quarantines,
+            quarantine_releases=g.quarantine_releases,
+            degraded_ticks=g.degraded_ticks,
+            quarantined=sorted(it for it, t in self.tenants.items()
+                               if t.quarantined))
 
     def hot_swap(self, index_type: str, req,
                  window: int | None = None, params=None):
@@ -785,16 +1046,47 @@ class O2Runtime:
         tenant.swaps += 1
         tenant.swap_times_s.append(self.clock() - t0)
 
-    def flush(self):
+    def flush(self, deadline_s: float | None = None) -> dict:
         """Settle all in-flight O2 work: the assessment backlog drains
         through the annex, every verdict lands (hot-swaps applied), and
         the trailing offline learner catches up.  Blocks; callers that
-        only need serving results never have to."""
+        only need serving results never have to.
+
+        Returns a flush report instead of hanging: with `deadline_s`
+        set, whatever has not settled by then is abandoned and counted;
+        without one, a demoted annex (which can never settle its
+        backlog) still abandons rather than spinning forever, and hung
+        dispatches are abandoned by the drain watchdog — the historical
+        block-until-settled contract only ever applies to work that can
+        actually finish."""
+        t0 = time.monotonic()
+        report = {"deadline_hit": False, "abandoned_backlog": 0,
+                  "abandoned_inflight": 0, "elapsed_s": 0.0}
         while self.backlog or self.inflight:
+            out_of_time = deadline_s is not None and \
+                (time.monotonic() - t0) >= deadline_s
+            # a paused annex with nothing in flight cannot make progress
+            # until its cooloff elapses — and a failed half-open probe
+            # restarts that clock, so waiting it out is unbounded
+            stalled = self.health.o2_paused() and not self.inflight
+            if out_of_time or stalled:
+                report["deadline_hit"] = out_of_time
+                report["abandoned_backlog"] = len(self.backlog)
+                report["abandoned_inflight"] = len(self.inflight)
+                self.health.dropped_dispatches += len(self.inflight)
+                self.backlog.clear()
+                self.inflight.clear()
+                break
             self._pump_assessments()
-            self.drain(block=True)
-        for tenant in self.tenants.values():
-            jax.block_until_ready(tenant.offline["params"])
+            remaining = (None if deadline_s is None
+                         else max(deadline_s - (time.monotonic() - t0),
+                                  0.0))
+            self.drain(block=True, deadline_s=remaining)
+        if not report["deadline_hit"]:
+            for tenant in self.tenants.values():
+                jax.block_until_ready(tenant.offline["params"])
+        report["elapsed_s"] = time.monotonic() - t0
+        return report
 
     # ------------------------------------------------------------- stats
     def stats_block(self) -> O2Stats:

@@ -134,7 +134,8 @@ class TuningService:
                 agents, self.o2, self.pools, self.topology,
                 horizon_cap=self.horizon_cap,
                 max_assess_width=2 * self.slots,
-                swap_cfg=self.swap_cfg, clock=self.clock)
+                swap_cfg=self.swap_cfg, clock=self.clock,
+                health_cfg=config.health)
         self.scheduler = Scheduler(self.policy,
                                    strict_order=(self.o2.enabled
                                                  and self.o2.strict_order))
@@ -181,11 +182,19 @@ class TuningService:
                   window: int | None = None, params=None):
         self.o2rt.hot_swap(index_type, req, window=window, params=params)
 
-    def flush_o2(self):
+    def flush_o2(self, deadline_s: float | None = None) -> dict | None:
         """Settle all in-flight O2 work (see `O2Runtime.flush`); callers
-        that only need serving results never have to."""
-        if self.o2rt is not None:
-            self.o2rt.flush()
+        that only need serving results never have to.  Returns the flush
+        report ({deadline_hit, abandoned_backlog, abandoned_inflight,
+        elapsed_s}; None with O2 off).  `deadline_s` defaults to
+        `HealthConfig.flush_deadline_s` (None -> settle fully — but a
+        demoted annex or hung dispatch is abandoned rather than hung
+        on, so the call is bounded either way)."""
+        if self.o2rt is None:
+            return None
+        if deadline_s is None:
+            deadline_s = self.config.health.flush_deadline_s
+        return self.o2rt.flush(deadline_s=deadline_s)
 
     # ------------------------------------------------------------ intake
     def submit(self, data_keys, workload, wr_ratio: float,
@@ -611,7 +620,9 @@ class TuningService:
             slo=self.slo.stats_block(),
             o2=(self.o2rt.stats_block()
                 if self.o2rt is not None else None),
-            swaps=swaps)
+            swaps=swaps,
+            health=(self.o2rt.health_stats()
+                    if self.o2rt is not None else None))
 
     def stats(self) -> dict:
         return self.stats_block().as_dict()

@@ -14,6 +14,7 @@ tests/test_swap_pipeline.py), so the schema finally lives in one place:
     slo                   -> SLOStats       (percentiles + breaches)
     o2                    -> O2Stats        (per-tenant + phase/annex)
     swaps                 -> SwapStats      (the hot-swap state machine)
+    health                -> HealthStats    (the fault-tolerance layer)
 
 `swaps` is the one new block this PR adds (the canary/rollback pipeline's
 counters); every other block is shape-identical to what PR 4/5 shipped —
@@ -166,6 +167,32 @@ class SwapStats:
 
 
 @dataclasses.dataclass
+class HealthStats:
+    """`stats()["health"]` — the fault-tolerance layer's counters
+    (rendered whenever O2 is enabled; see launch/serving/health.py).
+
+    `state` is the annex's view: "healthy" or "degraded" (demoted, O2
+    paused or half-open).  `quarantined` lists tenants whose breaker is
+    currently open — their pools serve frozen params while their O2
+    loop waits out the cooloff."""
+    state: str = "healthy"
+    rejected_params: int = 0
+    retries: int = 0
+    annex_demotions: int = 0
+    annex_recoveries: int = 0
+    dropped_dispatches: int = 0
+    quarantines: int = 0
+    quarantine_releases: int = 0
+    degraded_ticks: int = 0
+    quarantined: list = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["quarantined"] = list(self.quarantined)
+        return d
+
+
+@dataclasses.dataclass
 class ServiceStats:
     """The whole `TuningService.stats()` document."""
     service_steps: int
@@ -183,6 +210,7 @@ class ServiceStats:
     slo: SLOStats
     o2: O2Stats | None = None
     swaps: SwapStats | None = None
+    health: HealthStats | None = None
 
     def as_dict(self) -> dict:
         out = {
@@ -204,4 +232,6 @@ class ServiceStats:
             out["o2"] = self.o2.as_dict()
         if self.swaps is not None:
             out["swaps"] = self.swaps.as_dict()
+        if self.health is not None:
+            out["health"] = self.health.as_dict()
         return out

@@ -20,6 +20,29 @@ class InjectedFailure(RuntimeError):
     """Simulated node failure."""
 
 
+class FaultSite:
+    """Deterministic per-site fault counter: the Nth event at a named
+    site fires iff N is in `fire_at` (0-based ordinals).
+
+    The training driver's `FailureInjector` below schedules faults by
+    *step number*; long-lived services have no single step counter, so
+    the serving health layer (`launch/serving/health.py`) instead counts
+    events per site — fine-tune rounds, assessment dispatches, canary
+    trials — and consults one `FaultSite` each.  Same idiom, one counter
+    per seam instead of one per run."""
+
+    def __init__(self, fire_at=()):
+        self.fire_at = frozenset(int(x) for x in fire_at)
+        self.count = 0
+
+    def check(self) -> bool:
+        """Count one event; True when this ordinal is scheduled to
+        fail."""
+        fired = self.count in self.fire_at
+        self.count += 1
+        return fired
+
+
 @dataclasses.dataclass
 class FailureInjector:
     """Deterministically raises at configured steps (or by probability)."""

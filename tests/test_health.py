@@ -1,0 +1,357 @@
+"""The serving fault-tolerance layer (launch/serving/health.py):
+
+* param-health guards — NaN fine-tune rounds are rejected before they
+  can publish (last-good params retained, served params stay finite),
+  and an unhealthy swap candidate never reaches a pool, win or not;
+* annex watchdog — failed dispatches retry with backoff, exhaustion
+  demotes the annex into degraded mode, a successful half-open probe
+  recovers it; a hung dispatch is abandoned by the drain watchdog and
+  `flush_o2` returns a bounded partial-flush report instead of hanging;
+* per-tenant circuit breakers — repeated unhealthy rounds quarantine
+  the tenant's O2 loop (pools serve frozen), released automatically
+  after the window cooloff;
+* DivergenceMonitor — non-finite window summaries are skipped and
+  counted, never ingested into the reference (the satellite regression);
+* guards observe, they don't perturb — a faultless strict-order stream
+  is bitwise identical with health enabled vs disabled.
+
+All faults are injected deterministically through
+`HealthConfig(fault=FaultPlan(...))` — the `runtime/fault.py` FaultSite
+idiom — so every path here is replayable; the end-to-end drill against
+the full fault battery is benchmarks/slo_serve.py --scenario chaos.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.launch.serving.o2_runtime as o2_runtime
+from repro.core.ddpg import DDPGConfig
+from repro.core.litune import LITune, LITuneConfig
+from repro.core.o2 import DivergenceMonitor, O2Config
+from repro.index.workloads import sample_keys, wr_workload
+from repro.launch.serving import (FaultPlan, HealthConfig, O2ServiceConfig,
+                                  ServeConfig, SwapConfig, TuningService)
+from repro.runtime.fault import FaultSite, InjectedFailure
+
+# KS effectively off: divergence fires purely on W/R shift (exact), so
+# every assessment trigger here is deterministic
+_O2 = O2Config(divergence_threshold=10.0, wr_shift_threshold=0.5,
+               offline_updates_per_window=2, assess_every=1)
+
+
+def _cfg(**kw) -> LITuneConfig:
+    return LITuneConfig(index_type="alex", episode_len=4, lstm_hidden=16,
+                        mlp_hidden=32,
+                        ddpg=DDPGConfig(seq_len=3, burn_in=1, batch_size=8),
+                        o2=_O2, **kw)
+
+
+def _window(key, wr: float, n_keys: int = 256):
+    data = sample_keys(key, n_keys, "mix")
+    wl, _ = wr_workload(jax.random.fold_in(key, 1), data, wr,
+                        total=n_keys, dist="mix")
+    return data, wl, wr
+
+
+def _service(health: HealthConfig, swap: SwapConfig | None = None,
+             slots: int = 2, strict: bool = False) -> TuningService:
+    cfg = _cfg()
+    return TuningService(LITune(cfg, seed=0), config=ServeConfig(
+        slots=slots, horizon_cap=8,
+        o2=O2ServiceConfig(enabled=True, o2=cfg.o2, strict_order=strict),
+        swap=swap if swap is not None else SwapConfig(), health=health))
+
+
+def _serve_wave(service, wrs, fold: int, flush: bool = True):
+    key = jax.random.PRNGKey(3)
+    rids = [service.submit(*_window(jax.random.fold_in(key, 97 * fold + i),
+                                    wr), budget_steps=4)
+            for i, wr in enumerate(wrs)]
+    service.run()
+    if flush:
+        service.flush_o2()
+    return rids
+
+
+def _all_finite(tree) -> bool:
+    return all(np.all(np.isfinite(np.asarray(leaf)))
+               for leaf in jax.tree.leaves(jax.device_get(tree)))
+
+
+# ---------------------------------------------------- DivergenceMonitor
+def test_divergence_monitor_skips_nonfinite_windows():
+    """The satellite regression: one NaN window summary must not poison
+    the reference/divergence bookkeeping permanently."""
+    mon = DivergenceMonitor(O2Config(n_quantiles=16))
+    mon.observe(np.linspace(0.0, 1.0, 64), 1.0)        # anchors
+    ref = mon.ref_quantiles.copy()
+    bad = np.linspace(0.0, 1.0, 64)
+    bad[3] = np.nan
+    v = mon.observe(bad, 1.0)
+    assert v["skipped_nonfinite"] is True and v["diverged"] is False
+    assert mon.skipped_nonfinite == 1
+    np.testing.assert_array_equal(mon.ref_quantiles, ref)
+    v = mon.observe(np.linspace(0.0, 1.0, 64), np.inf)  # bad wr too
+    assert v["skipped_nonfinite"] is True
+    assert mon.skipped_nonfinite == 2
+    # the invariant holds through skips: one divergence entry per window
+    assert len(mon.divergences) == mon.windows_seen == 3
+    # detection still works afterwards (wr shift fires exactly)
+    v = mon.observe(np.linspace(0.0, 1.0, 64), 3.0)
+    assert v["diverged"] and mon.diverged_count == 1
+    # a non-finite re-anchor is refused: reference and history unchanged
+    anchors = list(mon.anchors)
+    mon.re_anchor(bad, 1.0)
+    np.testing.assert_array_equal(mon.ref_quantiles, ref)
+    assert mon.anchors == anchors and mon.skipped_nonfinite == 3
+
+
+def test_divergence_monitor_nonfinite_first_window_never_anchors():
+    mon = DivergenceMonitor(O2Config(n_quantiles=16))
+    mon.observe(np.full(64, np.nan), 1.0)
+    assert mon.ref_quantiles is None and mon.skipped_nonfinite == 1
+    # the first *finite* window becomes the reference instead
+    v = mon.observe(np.linspace(0.0, 1.0, 64), 1.0)
+    assert v == {"diverged": False, "ks": 0.0, "wr_shift": 0.0}
+    assert mon.ref_quantiles is not None
+    assert len(mon.divergences) == mon.windows_seen == 2
+
+
+# ----------------------------------------------------------- FaultSite
+def test_fault_site_fires_at_planned_ordinals():
+    site = FaultSite(fire_at=(1, 3))
+    assert [site.check() for _ in range(5)] == \
+        [False, True, False, True, False]
+    assert site.count == 5
+    assert not any(FaultSite().check() for _ in range(4))
+
+
+# ------------------------------------------------------ param guards
+def test_nan_finetune_rounds_rejected_and_last_good_served():
+    """Every fine-tune round NaNs out; the guard must reject each at
+    publish, keep serving finite params, and never swap garbage in."""
+    service = _service(HealthConfig(
+        quarantine_threshold=100,        # keep the breaker out of this test
+        fault=FaultPlan(nan_finetune_rounds=tuple(range(64)))))
+    for fold in range(4):
+        _serve_wave(service, [1.0, 3.0], fold)
+    st = service.stats()
+    assert st["health"]["rejected_params"] >= 1
+    tenant = service.tenants["alex"]
+    # everything serve-visible stays finite (offline may transiently
+    # hold a not-yet-gated poisoned round in concurrent mode — gating
+    # happens at publish)
+    assert _all_finite(tenant.ready_params)
+    assert _all_finite(tenant._last_good["params"])
+    assert _all_finite(tenant.online["params"])
+    for pool in service.pools.values():
+        assert _all_finite(pool.params)
+
+
+def test_unhealthy_swap_candidate_never_reaches_pools(monkeypatch):
+    """Even a forced assessment win must not swap a non-finite candidate
+    (the swap-candidacy guard site), and the rejection strikes the
+    tenant's breaker."""
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    service = _service(HealthConfig(quarantine_threshold=100))
+    _serve_wave(service, [1.0], fold=0)    # anchor window, no divergence
+    tenant = service.tenants["alex"]
+    # poison the published snapshot the next assessment dispatches with,
+    # and pin the publish seam so a healthy fine-tune round in the same
+    # wave can't republish over it before the dispatch captures it
+    tenant.ready_params = jax.tree.map(
+        lambda x: np.full(x.shape, np.nan, x.dtype),
+        jax.device_get(tenant.ready_params))
+    monkeypatch.setattr(tenant, "publish_ready", lambda: None)
+    before = dict(service.stats()["health"])
+    _serve_wave(service, [3.0, 3.0], fold=1)   # diverge -> forced win
+    st = service.stats()
+    assert st["health"]["rejected_params"] > before["rejected_params"]
+    assert tenant.swaps == 0
+    assert tenant.bad_streak >= 1
+    for pool in service.pools.values():
+        assert _all_finite(pool.params)
+
+
+def test_healthy_forced_win_still_swaps(monkeypatch):
+    """The guard is observe-only on healthy paths: the same forced win
+    with finite params still promotes (nothing rejected)."""
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    service = _service(HealthConfig())
+    _serve_wave(service, [1.0, 3.0], fold=0)
+    st = service.stats()
+    assert service.tenants["alex"].swaps >= 1
+    assert st["health"]["rejected_params"] == 0
+
+
+# ------------------------------------------------------ annex watchdog
+def test_failed_dispatches_retry_demote_then_recover():
+    health = HealthConfig(dispatch_retries=1, retry_backoff_s=1e-3,
+                          annex_failure_threshold=1, annex_cooloff_s=0.0,
+                          fault=FaultPlan(fail_assess_dispatches=(0, 1)))
+    service = _service(health)
+    _serve_wave(service, [1.0, 3.0], fold=0)
+    st = service.stats()["health"]
+    assert st["retries"] >= 1
+    assert st["annex_demotions"] == 1
+    assert st["dropped_dispatches"] >= 1
+    # ordinals exhausted: the next diverged window's dispatch is the
+    # half-open probe and succeeds -> automatic recovery
+    _serve_wave(service, [3.0, 1.0], fold=1)
+    st = service.stats()["health"]
+    assert st["annex_recoveries"] == 1
+    assert st["state"] == "healthy"
+
+
+def test_degraded_mode_pauses_o2_but_keeps_serving():
+    """While demoted inside the cooloff, ticks do no O2 work (counted as
+    degraded) but requests keep completing on frozen params."""
+    health = HealthConfig(dispatch_retries=0, annex_failure_threshold=1,
+                          annex_cooloff_s=60.0,
+                          fault=FaultPlan(fail_assess_dispatches=(0,)))
+    service = _service(health)
+    _serve_wave(service, [1.0, 3.0], fold=0)   # dispatch fails -> demoted
+    st = service.stats()["health"]
+    assert st["annex_demotions"] == 1 and st["state"] == "degraded"
+    updates_before = service.tenants["alex"].offline_updates
+    rids = _serve_wave(service, [3.0, 1.0], fold=1)
+    st = service.stats()
+    assert all(rid in service.results for rid in rids)   # still serving
+    assert st["health"]["degraded_ticks"] >= 1
+    # no learner rounds, no new assessments while paused
+    assert service.tenants["alex"].offline_updates == updates_before
+    assert st["health"]["state"] == "degraded"
+
+
+def test_hung_dispatch_watchdog_and_bounded_flush():
+    health = HealthConfig(dispatch_timeout_s=0.05, flush_deadline_s=5.0,
+                          fault=FaultPlan(hang_assess_dispatches=(0,)))
+    service = _service(health)
+    _serve_wave(service, [1.0, 3.0], fold=0, flush=False)
+    t0 = time.monotonic()
+    report = service.flush_o2()
+    assert time.monotonic() - t0 < 5.0
+    assert set(report) == {"deadline_hit", "abandoned_backlog",
+                           "abandoned_inflight", "elapsed_s"}
+    st = service.stats()["health"]
+    assert st["dropped_dispatches"] >= 1
+
+
+def test_flush_deadline_returns_partial_report():
+    """A zero deadline abandons whatever is pending immediately and says
+    so — `flush_o2` is bounded even with work in flight."""
+    health = HealthConfig(dispatch_timeout_s=60.0,
+                          fault=FaultPlan(hang_assess_dispatches=(0,)))
+    service = _service(health)
+    _serve_wave(service, [1.0, 3.0], fold=0, flush=False)
+    if service.o2rt.inflight or service.o2rt.backlog:
+        report = service.flush_o2(deadline_s=0.0)
+        assert report["deadline_hit"] is True
+        assert report["abandoned_inflight"] + \
+            report["abandoned_backlog"] >= 1
+    assert not service.o2rt.inflight and not service.o2rt.backlog
+    # a follow-up flush with nothing pending settles cleanly
+    report = service.flush_o2()
+    assert report["deadline_hit"] is False
+    assert report["abandoned_inflight"] == 0
+
+
+# ------------------------------------------------- tenant circuit breaker
+def test_tenant_quarantine_trips_and_releases():
+    health = HealthConfig(quarantine_threshold=1, quarantine_windows=2,
+                          fault=FaultPlan(
+                              nan_finetune_rounds=tuple(range(16))))
+    service = _service(health)
+    fold = 0
+    while service.stats()["health"]["quarantines"] < 1 and fold < 8:
+        _serve_wave(service, [1.0, 3.0], fold)
+        fold += 1
+    st = service.stats()["health"]
+    assert st["quarantines"] == 1
+    assert st["quarantined"] == ["alex"]
+    # quarantined: no fine-tune rounds, no assessment dispatches
+    tenant = service.tenants["alex"]
+    updates = tenant.offline_updates
+    assessments = service.o2rt.assessments
+    _serve_wave(service, [3.0], fold=50)
+    assert tenant.offline_updates == updates
+    assert service.o2rt.assessments == assessments
+    # ... but windows are still observed, and after quarantine_windows
+    # more of them the breaker releases with a clean streak
+    while service.stats()["health"]["quarantine_releases"] < 1 and \
+            fold < 16:
+        _serve_wave(service, [1.0, 3.0], 100 + fold)
+        fold += 1
+    st = service.stats()["health"]
+    assert st["quarantine_releases"] == 1
+    assert st["quarantined"] == []
+    assert tenant.bad_streak == 0
+
+
+def test_forced_canary_losses_strike_the_breaker(monkeypatch):
+    """Repeated canary rollbacks open the breaker too — the 'keeps
+    rolling back' arm of the circuit."""
+    monkeypatch.setattr(o2_runtime, "_pooled_best", lambda *a: -1.0)
+    service = _service(
+        HealthConfig(quarantine_threshold=2, quarantine_windows=4,
+                     fault=FaultPlan(lose_canary_trials=(0, 1))),
+        swap=SwapConfig(canary=True, canary_fraction=0.5,
+                        canary_min_episodes=1, canary_timeout_ticks=64),
+        slots=4)
+    fold = 0
+    while service.stats()["health"]["quarantines"] < 1 and fold < 10:
+        _serve_wave(service, [1.0, 3.0], fold)
+        fold += 1
+    st = service.stats()
+    assert st["swaps"]["rolled_back_canary"] >= 2
+    assert st["health"]["quarantines"] == 1
+    # the incumbent pool params were never touched by the lost canaries
+    for pool in service.pools.values():
+        assert pool.canary_lanes is None
+        assert _all_finite(pool.params)
+
+
+# ------------------------------------------------ guards don't perturb
+def test_health_guards_do_not_perturb_faultless_results():
+    """Bitwise: a faultless strict-order stream is identical with the
+    guards enabled (default) and disabled — they observe, not perturb."""
+    def run(enabled: bool):
+        cfg = _cfg()
+        service = TuningService(LITune(cfg, seed=0), config=ServeConfig(
+            slots=1, horizon_cap=8,
+            o2=O2ServiceConfig(enabled=True, o2=cfg.o2,
+                               strict_order=True),
+            health=HealthConfig(enabled=enabled)))
+        key = jax.random.PRNGKey(11)
+        rids = [service.submit(*_window(jax.random.fold_in(key, i), wr),
+                               budget_steps=4)
+                for i, wr in enumerate([1.0, 3.0, 3.0, 1.0])]
+        results = service.run()
+        service.flush_o2()
+        return ([results[rid] for rid in rids],
+                jax.device_get(service.tenants["alex"].offline["params"]))
+
+    res_on, params_on = run(True)
+    res_off, params_off = run(False)
+    for a, b in zip(res_on, res_off):
+        assert a["swapped"] == b["swapped"]
+        assert a.get("divergence") == b.get("divergence")
+        np.testing.assert_array_equal(a["best_runtime_ns"],
+                                      b["best_runtime_ns"])
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y),
+                 params_on, params_off)
+
+
+def test_health_config_validation_and_defaults():
+    with pytest.raises(ValueError):
+        HealthConfig(max_param_norm=0.0)
+    with pytest.raises(ValueError):
+        HealthConfig(dispatch_retries=-1)
+    with pytest.raises(ValueError):
+        HealthConfig(quarantine_windows=0)
+    # default ServeConfig carries the guards enabled with no fault plan
+    cfg = ServeConfig()
+    assert cfg.health.enabled and cfg.health.fault is None
+    assert isinstance(InjectedFailure("x"), RuntimeError)

@@ -1,0 +1,128 @@
+"""SLOTracker edge cases: the degenerate streams the percentile math
+and breach bookkeeping must survive — zero samples (a fresh tracker, or
+one whose every request died queued), a single sample (all percentiles
+collapse onto it), and all-breach streams where nothing ever retires
+cleanly.  Pure host-side unit tests: fake requests are namespaces, time
+is explicit."""
+import types
+
+from repro.launch.serving.slo import SLOConfig, SLOTracker, _percentiles_ms
+
+
+def _req(rid: int, submitted_at: float):
+    return types.SimpleNamespace(rid=rid, submitted_at=submitted_at)
+
+
+def _tracker(window: int = 4096) -> SLOTracker:
+    return SLOTracker(clock=lambda: 0.0, window=window)
+
+
+# ----------------------------------------------------- percentile math
+def test_percentiles_empty_samples_are_zero():
+    assert _percentiles_ms([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+def test_percentiles_single_sample_collapse():
+    got = _percentiles_ms([0.25])
+    assert got["p50"] == got["p95"] == got["p99"] == 250.0
+
+
+def test_percentiles_are_milliseconds_rounded():
+    got = _percentiles_ms([0.1, 0.2])
+    assert got["p50"] == 150.0
+    assert got["p99"] == 199.0
+
+
+# ------------------------------------------------------- zero requests
+def test_zero_sample_tracker_stats():
+    trk = _tracker()
+    st = trk.stats()
+    assert st["tracked"] == 0
+    assert st["queue_wait_ms"] == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert st["serve_ms"] == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    br = st["breaches"]
+    assert br["dropped_queued"] == br["dropped_running"] == 0
+    assert br["truncated"] == br["pre_dropped"] == 0
+
+
+def test_retire_unknown_rid_is_harmless():
+    trk = _tracker()
+    trk.on_retire(999, now=1.0)          # never admitted
+    assert len(trk.serve_s) == 0 and trk.tracked == 0
+
+
+# ------------------------------------------------------- single sample
+def test_single_request_lifecycle_percentiles_collapse():
+    trk = _tracker()
+    trk.on_admit(_req(1, submitted_at=10.0), now=10.5)
+    trk.on_retire(1, now=12.5)
+    st = trk.stats_block()
+    assert trk.tracked == 1
+    q, s = st.queue_wait_ms, st.serve_ms
+    assert q["p50"] == q["p95"] == q["p99"] == 500.0
+    assert s["p50"] == s["p95"] == s["p99"] == 2000.0
+    assert trk._admitted_at == {}        # bookkeeping fully drained
+
+
+# --------------------------------------------------- all-breach streams
+def test_all_requests_dropped_queued():
+    """Every request dies waiting: serve percentiles stay 0.0 (no serve
+    samples), the accrued waits still count against the queue SLO."""
+    trk = _tracker()
+    n = 8
+    for i in range(n):
+        trk.on_drop_queued(_req(i, submitted_at=0.0), now=1.0 + i,
+                           pre=(i % 2 == 0))
+    st = trk.stats_block()
+    assert trk.tracked == n
+    assert trk.dropped_queued == n
+    assert trk.pre_dropped == n // 2
+    assert len(trk.serve_s) == 0
+    assert st.serve_ms == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    assert st.queue_wait_ms["p50"] > 0.0
+
+
+def test_all_requests_breach_running_dropped():
+    """Admitted then dropped mid-run: no serve sample is recorded (the
+    episode never completed), and the admit map drains."""
+    trk = _tracker()
+    for i in range(4):
+        trk.on_admit(_req(i, submitted_at=0.0), now=0.1)
+        trk.on_breach_running(_req(i, submitted_at=0.0), now=5.0,
+                              dropped=True)
+    assert trk.dropped_running == 4 and trk.truncated == 0
+    assert len(trk.serve_s) == 0
+    assert trk._admitted_at == {}
+    assert trk.stats_block().serve_ms["p50"] == 0.0
+
+
+def test_all_requests_breach_running_truncated():
+    """Truncation retires with the best-so-far: the serve time up to the
+    breach IS a sample — truncated requests must not vanish from the
+    latency evidence."""
+    trk = _tracker()
+    for i in range(4):
+        trk.on_admit(_req(i, submitted_at=0.0), now=0.0)
+        trk.on_breach_running(_req(i, submitted_at=0.0), now=3.0,
+                              dropped=False)
+    assert trk.truncated == 4 and trk.dropped_running == 0
+    st = trk.stats_block()
+    assert st.serve_ms["p50"] == st.serve_ms["p99"] == 3000.0
+
+
+def test_mixed_breaches_and_window_bound():
+    """The sample window is bounded; the cumulative counters are not."""
+    trk = _tracker(window=4)
+    for i in range(10):
+        trk.on_admit(_req(i, submitted_at=0.0), now=float(i))
+        trk.on_retire(i, now=float(i) + 1.0)
+    assert trk.tracked == 10
+    assert len(trk.queue_wait_s) == 4 and len(trk.serve_s) == 4
+    # window holds the most recent 4 waits (6..9 s)
+    assert min(trk.queue_wait_s) == 6.0
+
+
+def test_slo_config_defaults():
+    cfg = SLOConfig()
+    assert cfg.default_deadline_s is None
+    assert cfg.on_breach == "truncate"

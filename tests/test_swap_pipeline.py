@@ -294,7 +294,8 @@ def test_stats_golden_keys(monkeypatch):
     assert set(st) == {
         "service_steps", "episode_steps", "completed", "queued", "pools",
         "devices", "topology", "program_misses", "program_hits",
-        "programs_resident", "per_pool", "scheduler", "slo", "o2", "swaps"}
+        "programs_resident", "per_pool", "scheduler", "slo", "o2", "swaps",
+        "health"}
     assert set(st["scheduler"]) == {"policy", "resize_events"}
     assert set(st["slo"]) == {"queue_wait_ms", "serve_ms", "breaches",
                               "tracked"}
@@ -317,13 +318,17 @@ def test_stats_golden_keys(monkeypatch):
                                                "breaches_during_trial"}
     assert set(st["swaps"]["per_tenant"]["alex"]) == \
         counter_keys | {"active_state"}
+    assert set(st["health"]) == {
+        "state", "rejected_params", "retries", "annex_demotions",
+        "annex_recoveries", "dropped_dispatches", "quarantines",
+        "quarantine_releases", "degraded_ticks", "quarantined"}
 
     # a frozen service (no O2) renders the historical document: no o2,
-    # no swaps block
+    # no swaps, no health block
     frozen = TuningService(LITune(_cfg(), seed=0),
                            config=ServeConfig(slots=2))
     st2 = frozen.stats()
-    assert "o2" not in st2 and "swaps" not in st2
+    assert "o2" not in st2 and "swaps" not in st2 and "health" not in st2
 
 
 def test_breaches_during_trial_attribution(monkeypatch):

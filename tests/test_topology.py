@@ -168,6 +168,7 @@ def test_scale_rounds_to_annex_width():
     keeps the serial-parity round sizes."""
     import types
 
+    from repro.launch.serving.health import HealthConfig, HealthGuard
     from repro.launch.serving.o2_runtime import O2Runtime, O2ServiceConfig
 
     devs = [_FakeDev(i) for i in range(8)]
@@ -178,12 +179,16 @@ def test_scale_rounds_to_annex_width():
 
         class _Tenant:
             cfg = types.SimpleNamespace(offline_updates_per_window=3)
+            quarantined = False      # breaker closed: rounds dispatch
 
             def finetune(self, n, strict):
                 calls.append(n)
 
         rt = types.SimpleNamespace(cfg=cfg, topology=topo,
-                                   tenants={"alex": _Tenant()})
+                                   tenants={"alex": _Tenant()},
+                                   health=HealthGuard(HealthConfig()))
+        rt._guarded_finetune = types.MethodType(
+            O2Runtime._guarded_finetune, rt)
         req = types.SimpleNamespace(index_type="alex")
         O2Runtime._finetune_retired(rt, [(req, {})], strict=False)
         return calls
