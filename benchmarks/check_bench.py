@@ -21,6 +21,12 @@ The guarded number is picked by the artifact's ``benchmark`` field:
               of the poisoned candidate, and zero new step-program
               binds across the whole canary cycle — any violation fails
               the gate outright, regardless of tolerance.
+  fleet     — the fleet-mode tenant sweep's req/s *ratio* (largest
+              tenant count over smallest; ~1 means req/s holds as the
+              fleet grows).  Hard invariants first: zero new step or
+              stacked-fine-tune program binds across the sweep, every
+              cold tenant at zero device bytes, and the K-wide stacked
+              round strictly faster than K serial rounds.
   chaos     — the health-layer fault battery's degraded-over-healthy
               RPS *ratio* (~1: a demoted annex costs serving nothing).
               Hard invariants first, same policy as swap_safety: zero
@@ -80,6 +86,36 @@ def swap_safety(doc: dict) -> float:
     return float(doc["post_rollback_ns_ratio"])
 
 
+def fleet(doc: dict) -> float:
+    """Validate fleet mode's hard invariants, then hand back the
+    req/s-vs-tenant-count ratio (largest sweep point over smallest) for
+    the trend comparison.  A program cache that grows with the tenant
+    count, a cold tenant holding device memory, or a stacked round
+    slower than its serial equivalent is a design violation, not a perf
+    regression; no tolerance applies."""
+    problems = []
+    for row in doc["rows"]:
+        n = row["tenants"]
+        if row["new_step_binds"] != 0:
+            problems.append(f"{row['new_step_binds']} new step-program "
+                            f"bind(s) at {n} tenants")
+        if row["new_fleet_binds"] != 0:
+            problems.append(f"{row['new_fleet_binds']} new stacked "
+                            f"fine-tune bind(s) at {n} tenants")
+        if row["cold_device_bytes_max"] != 0:
+            problems.append(f"a cold tenant holds "
+                            f"{row['cold_device_bytes_max']} device "
+                            f"bytes at {n} tenants")
+    if doc["stack"]["speedup"] <= 1.0:
+        problems.append(f"stacked round not sublinear: K="
+                        f"{doc['stack']['k']} stacked took "
+                        f"{doc['stack']['stacked_ms']}ms vs "
+                        f"{doc['stack']['serial_ms']}ms serial")
+    if problems:
+        raise ValueError("; ".join(problems))
+    return float(doc["rps_ratio"])
+
+
 def chaos(doc: dict) -> float:
     """Validate the fault battery's hard invariants, then hand back the
     degraded-over-healthy RPS ratio for the trend comparison.  A fault
@@ -120,6 +156,7 @@ METRICS = {
     "o2_annex": ("annex-slice assessment speedup", annex_speedup),
     "swap_safety": ("post-rollback probe ratio", swap_safety),
     "chaos": ("degraded/healthy serving RPS ratio", chaos),
+    "fleet": ("req/s ratio across the tenant-count sweep", fleet),
 }
 
 

@@ -90,6 +90,7 @@ class DivergenceMonitor:
         self.anchors: list[int] = []
         self.diverged_count = 0        # windows whose verdict fired (KS or W/R)
         self.skipped_nonfinite = 0     # windows refused (NaN/Inf summary)
+        self.history_trimmed = 0       # entries dropped by `trim_history`
 
     @staticmethod
     def _finite_summary(q: np.ndarray, wr_ratio: float) -> bool:
@@ -117,6 +118,23 @@ class DivergenceMonitor:
         self.diverged_count += bool(diverged)
         return {"diverged": diverged, "ks": ks, "wr_shift": wr_shift}
 
+    def trim_history(self, keep: int) -> int:
+        """Bound the per-window history lists (cold-tier eviction in the
+        serving fleet).  Counters (`windows_seen`, `diverged_count`) and
+        the live reference distribution are untouched — only the
+        unbounded `divergences`/`anchors` tails shrink, so detection
+        behaves identically afterward.  Relaxes the
+        ``len(divergences) == windows_seen`` bookkeeping invariant for
+        this monitor (the trimmed prefix is accounted by
+        `history_trimmed`).  Returns how many entries were dropped."""
+        dropped = max(0, len(self.divergences) - keep)
+        if dropped:
+            self.divergences = self.divergences[-keep:]
+            self.anchors = [a for a in self.anchors
+                            if a >= self.windows_seen - keep][-keep:]
+            self.history_trimmed += dropped
+        return dropped
+
     def re_anchor(self, data_keys, wr_ratio: float,
                   window: int | None = None):
         """Reset the reference distribution (after a model swap) and record
@@ -140,17 +158,20 @@ class DivergenceMonitor:
 def make_replay(net_cfg: NetConfig, ddpg_cfg: DDPGConfig,
                 env_cfg: E.EnvConfig, capacity: int = 8192,
                 seed: int = 0, device: bool = False,
-                place_on=None) -> SequenceReplay:
+                place_on=None, spilled: bool = False) -> SequenceReplay:
     """The replay shape both O2 paths share — constructing it identically
     is what makes serial/serving fine-tuning bitwise comparable.  With
     ``device=True`` the wide fields live in device ring buffers
     (`DeviceSequenceReplay`) — same contents, same sampling RNG —
     optionally pinned to `place_on` (the serving path's O2 annex device,
-    so ring traffic never queues on the serving mesh)."""
+    so ring traffic never queues on the serving mesh).  ``spilled=True``
+    constructs the device ring with its pages on the host (the fleet
+    cold tier's zero-device-bytes start; `repage()` promotes)."""
     if device:
         return DeviceSequenceReplay(
             capacity, E.obs_dim(), env_cfg.space.dim, net_cfg.lstm_hidden,
-            seq_len=ddpg_cfg.seq_len, seed=seed, device=place_on)
+            seq_len=ddpg_cfg.seq_len, seed=seed, device=place_on,
+            spilled=spilled)
     return SequenceReplay(capacity, E.obs_dim(), env_cfg.space.dim,
                           net_cfg.lstm_hidden, seq_len=ddpg_cfg.seq_len,
                           seed=seed)
@@ -228,6 +249,103 @@ def offline_finetune(state, replay: SequenceReplay, net_cfg: NetConfig,
         batches = jax.device_put(batches, place_on)
     state = _finetune_program(net_cfg, ddpg_cfg, n_updates)(state, batches)
     return state, n_updates
+
+
+# ------------------------------------------------------------ fleet mode
+# The tenant axis as a batched device axis: K tenants' learner states
+# stacked on a leading axis and fine-tuned by ONE jitted program per
+# annex round, instead of K serial `offline_finetune` dispatches.  The
+# per-tenant programs are identical — only buffers differ — so the
+# stacked program compiles once per (configs, round size, pow2 stack
+# width) and the rest of the process-wide program cache stays flat as
+# the hot set sweeps (asserted in tests/test_fleet.py).
+
+
+def fleet_stack_impl(impl: str = "auto") -> str:
+    """Resolve the tenant-axis batching implementation.  ``vmap``
+    batches the per-tenant math into K-wide kernels — the accelerator
+    win — but batched CPU dot kernels accumulate in a different order
+    than the serial program, so it is NOT bitwise-equal to K serial
+    rounds there (measured: ~190 mismatched leaves at K=3 on the CPU
+    PJRT backend).  ``map`` lowers the tenant axis as a `lax.scan` of
+    the identical per-tenant computation — bitwise-equal to serial by
+    construction (the same discipline as the pool lanes' `lax.map`),
+    still one dispatch and one batch hop per round.  ``auto`` picks
+    `vmap` off-CPU and `map` on CPU, mirroring `replay.donate_argnums`'s
+    backend gate, so every serial-parity guarantee holds where CI runs
+    while accelerators get the batched kernels."""
+    if impl == "auto":
+        import jax as _j
+        return "map" if _j.default_backend() == "cpu" else "vmap"
+    if impl not in ("vmap", "map"):
+        raise ValueError(f"fleet stack impl {impl!r} not in "
+                         f"('auto', 'vmap', 'map')")
+    return impl
+
+
+@lru_cache(maxsize=None)
+def _fleet_finetune_program(net_cfg: NetConfig, ddpg_cfg: DDPGConfig,
+                            n_updates: int, k_pad: int, impl: str):
+    """The stacked round: `[K, ...]` learner states x `[K, n_updates,
+    ...]` batch stacks -> `[K, ...]` advanced states, as one jitted
+    program.  Keyed on the pow2-padded stack width so a warmed ladder
+    (1..max_hot) never binds a new entry as the hot-set size changes —
+    the cache-flatness the fleet tests assert.  The stacked input is
+    donated off-CPU like the serial program's state (the caller stacks
+    fresh buffers per round, so per-tenant trees are never aliased)."""
+    assert impl in ("vmap", "map"), impl
+
+    def run_one(state, batches):
+        def body(s, b):
+            s2, _ = ddpg.update(s, b, net_cfg, ddpg_cfg)
+            return s2, None
+        return jax.lax.scan(body, state, batches, length=n_updates)[0]
+
+    if impl == "vmap":
+        run = jax.vmap(run_one)
+    else:
+        def run(states, batches):
+            return jax.lax.map(lambda sb: run_one(*sb), (states, batches))
+    return jax.jit(run, donate_argnums=donate_argnums(0))
+
+
+def fleet_finetune(states: list, batches_list: list, net_cfg: NetConfig,
+                   ddpg_cfg: DDPGConfig, n_updates: int, place_on=None,
+                   impl: str = "auto", stack_fn=None) -> list:
+    """Advance K tenants' offline learners one round each with a single
+    stacked program dispatch.  `states[i]` and `batches_list[i]` must
+    pair up (the caller draws each tenant's batches from its OWN replay
+    RNG, in serial tenant order — that is what makes the stacked round
+    bitwise-equal to K serial `offline_finetune` calls under the `map`
+    impl).  The stack pads to a power of two with lane 0 repeated; pad
+    lanes burn flops, never RNG draws, and their outputs are dropped.
+    `stack_fn(*trees)` overrides the eager per-leaf stack (the serving
+    layer passes its cached jitted pack program — pure data movement
+    either way, so parity is unaffected).  Returns the K advanced
+    states (leading-axis slices of one program output)."""
+    k = len(states)
+    if k == 0:
+        return []
+    impl = fleet_stack_impl(impl)
+    k_pad = 1
+    while k_pad < k:
+        k_pad *= 2
+    pad = k_pad - k
+    pad_s = list(states) + [states[0]] * pad
+    pad_b = [jax.tree.map(jnp.asarray, b)
+             for b in list(batches_list) + [batches_list[0]] * pad]
+    if stack_fn is None:
+        stacked_s = jax.tree.map(lambda *xs: jnp.stack(xs), *pad_s)
+        stacked_b = jax.tree.map(lambda *xs: jnp.stack(xs), *pad_b)
+    else:
+        stacked_s = stack_fn(*pad_s)
+        stacked_b = stack_fn(*pad_b)
+    if place_on is not None:
+        stacked_s = jax.device_put(stacked_s, place_on)
+        stacked_b = jax.device_put(stacked_b, place_on)
+    out = _fleet_finetune_program(net_cfg, ddpg_cfg, n_updates, k_pad,
+                                  impl)(stacked_s, stacked_b)
+    return [jax.tree.map(lambda x: x[i], out) for i in range(k)]
 
 
 def assess_offline(key, offline_state, net_cfg: NetConfig,

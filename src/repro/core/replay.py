@@ -300,8 +300,14 @@ class DeviceSequenceReplay(SequenceReplay):
     host layout's.
     """
 
-    def __init__(self, *args, device=None, **kwargs):
+    def __init__(self, *args, device=None, spilled=False, **kwargs):
         self._device = device       # ring placement (None -> default)
+        # fleet tiering: a spilled ring keeps its pages as host numpy
+        # arrays (pinned buffers on accelerator backends) instead of
+        # device arrays — zero device bytes, same contents.  Construct
+        # spilled for cold-start tenants so admission never allocates
+        # device pages the tenant may never earn; `repage()` promotes
+        self._spilled = bool(spilled)
         super().__init__(*args, **kwargs)
 
     def _alloc(self):
@@ -317,9 +323,64 @@ class DeviceSequenceReplay(SequenceReplay):
         # allocates O(page), never O(capacity)
         self.wide = wide_dim(self.obs_dim, self.lstm_hidden)
         self.page_rows = 256 if capacity % 256 == 0 else capacity
-        self._pages = [
-            self._place(jnp.zeros((self.page_rows, self.wide), f32))
-            for _ in range(capacity // self.page_rows)]
+        n_pages = capacity // self.page_rows
+        if self._spilled:
+            self._pages = [np.zeros((self.page_rows, self.wide), f32)
+                           for _ in range(n_pages)]
+        else:
+            self._pages = [
+                self._place(jnp.zeros((self.page_rows, self.wide), f32))
+                for _ in range(n_pages)]
+
+    # --------------------------------------------------- spill / re-page
+    @property
+    def spilled(self) -> bool:
+        return self._spilled
+
+    @property
+    def device_bytes(self) -> int:
+        """Approximate device residency of the ring (the wide pages; the
+        narrow fields are host-side in both states)."""
+        if self._spilled:
+            return 0
+        return sum(int(np.prod(p.shape)) * 4 for p in self._pages)
+
+    @property
+    def host_bytes(self) -> int:
+        """Approximate host residency: the narrow fields always, plus the
+        spilled wide pages while the ring is off-device."""
+        narrow = (self.action.nbytes + self.reward.nbytes
+                  + self.done.nbytes + self.cost.nbytes
+                  + self.step_left.nbytes)
+        pages = (sum(p.nbytes for p in self._pages) if self._spilled
+                 else 0)
+        return narrow + pages
+
+    def spill(self):
+        """Move the ring's wide pages to host buffers and drop the device
+        references (warm/cold tiers).  Float32 crosses the transfer
+        exactly, so a later `repage()` restores the ring bitwise; writes
+        and samples keep working against the host pages meanwhile."""
+        if self._spilled:
+            return
+        jax = _jax()
+        # np.array, not asarray: device_get may hand back a read-only
+        # view of the runtime's buffer, and spilled pages must accept
+        # host-side episode writes
+        self._pages = [np.array(jax.device_get(p), np.float32)
+                       for p in self._pages]
+        self._spilled = True
+
+    def repage(self):
+        """Commit the spilled pages back onto the ring's device (hot
+        promotion).  The ring is bitwise-identical to one that never left
+        the device — tests/test_fleet.py pins it, including episodes that
+        span pages and rings that wrapped while spilled."""
+        if not self._spilled:
+            return
+        jnp = _jax().numpy
+        self._pages = [self._place(jnp.asarray(p)) for p in self._pages]
+        self._spilled = False
 
     def _place(self, tree):
         """Commit values to the ring's device so every ring program stays
@@ -329,9 +390,13 @@ class DeviceSequenceReplay(SequenceReplay):
         return _jax().device_put(tree, self._device)
 
     def _ring_view(self, field):
-        jnp = _jax().numpy
-        packed = (self._pages[0] if len(self._pages) == 1
-                  else jnp.concatenate(self._pages))
+        if self._spilled:
+            packed = (self._pages[0] if len(self._pages) == 1
+                      else np.concatenate(self._pages))
+        else:
+            jnp = _jax().numpy
+            packed = (self._pages[0] if len(self._pages) == 1
+                      else jnp.concatenate(self._pages))
         return packed[:, _field_cols(self.obs_dim, self.lstm_hidden,
                                      field)]
 
@@ -385,26 +450,55 @@ class DeviceSequenceReplay(SequenceReplay):
         if T > self.capacity:
             raise ValueError(f"episode of {T} steps exceeds replay "
                              f"capacity {self.capacity}")
-        flat = self._padded_ring_idx(T)
         rows = self.page_rows
-        values = self._place(values)
-        live = flat[flat < self.capacity]
-        write = _replay_programs(self.obs_dim, self.lstm_hidden)["write"]
-        for p in np.unique(live // rows):
-            in_page = np.where((flat < self.capacity)
-                               & (flat // rows == p),
-                               flat % rows, rows).astype(np.int32)
-            self._pages[int(p)] = write(self._pages[int(p)], values,
-                                        in_page)
+        if self._spilled:
+            # host-side write into the spilled pages: same rows, same
+            # float32 values as the device scatter (pad rows past T-1
+            # never land there either — their ring indices drop)
+            vals = np.asarray(_jax().device_get(values),
+                              np.float32)[:T]
+            flat = self._ring_indices(T)
+            for p in np.unique(flat // rows):
+                m = (flat // rows) == p
+                self._pages[int(p)][flat[m] % rows] = vals[m]
+        else:
+            flat = self._padded_ring_idx(T)
+            values = self._place(values)
+            live = flat[flat < self.capacity]
+            write = _replay_programs(self.obs_dim,
+                                     self.lstm_hidden)["write"]
+            for p in np.unique(live // rows):
+                in_page = np.where((flat < self.capacity)
+                                   & (flat // rows == p),
+                                   flat % rows, rows).astype(np.int32)
+                self._pages[int(p)] = write(self._pages[int(p)], values,
+                                            in_page)
         self._write_narrow_and_advance(self._ring_indices(T), action,
                                        reward, done, cost)
 
     def _gather_sequences(self, sel: np.ndarray):
         L = self.seq_len
         win = (sel[..., None] + np.arange(L)) % self.capacity
-        wide = _replay_programs(self.obs_dim, self.lstm_hidden)["gather"](
-            tuple(self._pages), win.astype(np.int32),
-            sel.astype(np.int32))
+        if self._spilled:
+            # numpy gather over the host pages — same indices, same
+            # float32 values, so a spilled ring samples bitwise-identical
+            # batches (the consumer jnp.asarray's them either way)
+            packed = (self._pages[0] if len(self._pages) == 1
+                      else np.concatenate(self._pages))
+            cols = {f: _field_cols(self.obs_dim, self.lstm_hidden, f)
+                    for f in WIDE_FIELDS}
+            w, s = packed[win], packed[sel]
+            wide = {"obs": w[..., cols["obs"]],
+                    "next_obs": w[..., cols["next_obs"]],
+                    "h_a": s[..., cols["h_a"]],
+                    "c_a": s[..., cols["c_a"]],
+                    "h_q": s[..., cols["h_q"]],
+                    "c_q": s[..., cols["c_q"]]}
+        else:
+            wide = _replay_programs(self.obs_dim,
+                                    self.lstm_hidden)["gather"](
+                tuple(self._pages), win.astype(np.int32),
+                sel.astype(np.int32))
         # narrow fields gather host-side and commit to the ring's device,
         # so the learner's update program never mixes device queues
         gather = lambda arr: self._place(arr[win])

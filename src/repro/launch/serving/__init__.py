@@ -106,6 +106,8 @@ Key properties:
 """
 from repro.launch.serving.config import (ServeConfig, SwapConfig,
                                          config_from_legacy)
+from repro.launch.serving.fleet import (FleetConfig, FleetLearner,
+                                        embed_window, nearest_tenant)
 from repro.launch.serving.health import (FaultPlan, HealthConfig,
                                          HealthGuard)
 from repro.launch.serving.o2_runtime import O2Runtime, O2ServiceConfig
@@ -127,6 +129,8 @@ __all__ = [
     "DeviceSlice",
     "EDFSlotPolicy",
     "FaultPlan",
+    "FleetConfig",
+    "FleetLearner",
     "HealthConfig",
     "HealthGuard",
     "HealthStats",
@@ -148,6 +152,8 @@ __all__ = [
     "SwapStats",
     "TenantSwapStats",
     "config_from_legacy",
+    "embed_window",
+    "nearest_tenant",
     "summarize_episode",
     "TuneRequest",
     "TuningService",

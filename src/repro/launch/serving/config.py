@@ -44,8 +44,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+from repro.launch.serving.fleet import FleetConfig
 from repro.launch.serving.health import HealthConfig
 from repro.launch.serving.o2_runtime import O2ServiceConfig
+
+__all__ = ["FleetConfig", "ServeConfig", "SwapConfig",
+           "config_from_legacy", "LEGACY_KWARGS"]
 from repro.launch.serving.scheduler import SlotPolicy
 from repro.launch.serving.slo import SLOConfig
 from repro.launch.serving.topology import ServingTopology

@@ -1,0 +1,198 @@
+"""Fleet mode: the tenant axis as a batched device axis.
+
+Everything below `O2Runtime` scales the *slot* axis — pools, waves,
+annex shards.  The tenant axis was still a Python dict walk: one
+fine-tune dispatch per tenant per round, one device-resident replay
+ring and learner tree per tenant *forever*.  Thousands of tenants per
+instance (the ROADMAP's "millions of users") need both fixed:
+
+* **Stacked rounds** — `FleetLearner.round` samples each hot tenant's
+  batches from its own replay RNG in serial tenant order, packs the K
+  learner states and batch stacks onto a leading tenant axis
+  (`programs._fleet_stack_program`), and advances all K with ONE jitted
+  program (`core.o2._fleet_finetune_program`) — `lax.map` over the
+  tenant axis on CPU (bitwise-equal to K serial `offline_finetune`
+  calls, asserted in tests/test_fleet.py), `vmap` on accelerators
+  (batched kernels; see `core.o2.fleet_stack_impl` for why the two are
+  split).  The stack pads to a power of two with lane 0 repeated, so a
+  warmed 1..max_hot ladder never binds a new program as the hot-set
+  size changes.
+
+* **Hot/warm/cold tiering** — `_TenantO2` tier state drives where a
+  tenant's memory lives: *hot* tenants hold device replay pages and
+  ride the stacked round; *warm* tenants keep learner params on device
+  but spill their `DeviceSequenceReplay` pages to host buffers; *cold*
+  tenants cost zero device bytes (learner trees evicted to host or
+  dropped to the pretrained seed, monitor history trimmed, idle pools
+  torn down) and re-page on their first divergence observation.
+
+* **BALANCE-style warm start** — a new tenant's first observed window
+  is embedded (`embed_window`: normalized key-distribution quantiles +
+  read/write mix) and its learner seeds from the nearest existing
+  tenant's tuned params (`nearest_tenant`) instead of the pretrained
+  default, falling back to the default when the fleet is empty.
+
+`FleetConfig` defaults **off**: `FleetConfig()` on `O2ServiceConfig`
+reproduces the per-tenant eager path bitwise, so every existing parity
+guarantee is untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.o2 import (fleet_finetune, fleet_stack_impl,
+                           sample_update_batches)
+from repro.core.replay import _pow2_pad
+from repro.launch.serving.programs import _fleet_stack_program
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Knobs for fleet mode (an `O2ServiceConfig` sub-config)."""
+    enabled: bool = False
+    # hot-tier capacity: the stacked round's width cap.  Promoting past
+    # it demotes the idlest hot tenant to warm (its pages spill)
+    max_hot: int = 64
+    # O2 ticks a hot tenant may idle (no admissions, no retirements)
+    # before its replay pages spill to host (hot -> warm)
+    warm_after_ticks: int = 64
+    # total idle ticks before a warm tenant evicts to cold: learner
+    # trees off device, monitor history trimmed, idle pools dropped
+    cold_after_ticks: int = 256
+    # seed a brand-new tenant's learner from its nearest neighbor's
+    # tuned params (BALANCE-style transfer) instead of the pretrained
+    # default; counted in stats()["o2"]["warm_starts"]
+    warm_start: bool = True
+    # divergence/anchor history entries kept per tenant at cold
+    # eviction (the unbounded-monitor-history fix)
+    monitor_history: int = 64
+    # tenant-axis batching: "auto" (map on CPU for bitwise serial
+    # parity, vmap on accelerators), or force "map"/"vmap" —
+    # see core.o2.fleet_stack_impl
+    stack_impl: str = "auto"
+
+    def __post_init__(self):
+        if self.max_hot < 1:
+            raise ValueError(f"max_hot={self.max_hot} must be >= 1")
+        if self.warm_after_ticks < 1:
+            raise ValueError("warm_after_ticks must be >= 1")
+        if self.cold_after_ticks <= self.warm_after_ticks:
+            raise ValueError("cold_after_ticks must exceed "
+                             "warm_after_ticks")
+        if self.monitor_history < 1:
+            raise ValueError("monitor_history must be >= 1")
+        if self.stack_impl not in ("auto", "vmap", "map"):
+            raise ValueError(f"stack_impl={self.stack_impl!r} not in "
+                             f"('auto', 'vmap', 'map')")
+
+
+def embed_window(data_keys, wr_ratio: float, quantiles: int = 8):
+    """One observed window as a small workload embedding: the key
+    distribution's normalized quantile profile (location/scale removed —
+    two tenants over shifted copies of the same distribution are
+    neighbors) plus the log write/read mix.  The same summary the
+    `DivergenceMonitor` watches, so "nearest tenant" means nearest in
+    the space divergence is measured in."""
+    keys = np.asarray(data_keys, np.float64).ravel()
+    q = np.quantile(keys, np.linspace(0.0, 1.0, quantiles))
+    span = max(float(q[-1] - q[0]), 1e-9)
+    qn = (q - q[0]) / span
+    return np.concatenate(
+        [qn, [np.log1p(max(float(wr_ratio), 0.0))]]).astype(np.float32)
+
+
+def nearest_tenant(embedding: np.ndarray, donors: dict) -> str | None:
+    """L2-nearest donor among `donors` (name -> embedding), ties broken
+    by sorted name so the pick is deterministic across runs."""
+    best, best_d = None, np.inf
+    for name in sorted(donors):
+        d = float(np.sum((donors[name] - embedding) ** 2))
+        if d < best_d:
+            best, best_d = name, d
+    return best
+
+
+class FleetLearner:
+    """Stacked-round orchestration + the fleet counters `stats()["o2"]
+    ["fleet"]` renders.  Stateless across rounds beyond the counters:
+    the stack is re-formed from the surviving tenants every round, which
+    is what lets a quarantined tenant leave it without perturbing the
+    other lanes' bits (each lane's state and batches are its own)."""
+
+    def __init__(self, cfg: FleetConfig, annex=None):
+        self.cfg = cfg
+        self.annex = annex
+        self.impl = fleet_stack_impl(cfg.stack_impl)
+        self.rounds = 0         # stacked program dispatches
+        self.lanes = 0          # tenant lanes actually advanced
+        self.padded_lanes = 0   # lanes incl. pow2 padding (occupancy)
+        self.peak_stack = 0     # widest stack (pre-padding) seen
+        self.promotions = 0     # cold/warm -> hot
+        self.demotions = 0      # hot -> warm
+        self.evictions = 0      # -> cold
+
+    def round(self, items: list) -> list:
+        """One stacked fine-tune round over `items` = [(tenant, n), ...]
+        in serial tenant order.  Samples each tenant's batches from its
+        own replay RNG *before* any dispatch (the serial-RNG-order
+        parity contract), groups lanes by (net config, DDPG config,
+        round size) — a homogeneous fleet is one group, one dispatch —
+        and assigns each advanced state back to its lane's tenant.
+        Returns the (tenant, n) pairs that actually ran (tenants whose
+        replay cannot sample yet are skipped, matching the serial
+        path's no-op)."""
+        groups: dict = {}
+        for tenant, n in items:
+            batches = sample_update_batches(tenant.replay, n,
+                                            tenant.ddpg_cfg.batch_size)
+            if batches is None:
+                continue
+            key = (tenant.net_cfg, tenant.ddpg_cfg, n)
+            groups.setdefault(key, []).append((tenant, n, batches))
+        ran = []
+        for (net_cfg, ddpg_cfg, n), lanes in groups.items():
+            k = len(lanes)
+            k_pad = _pow2_pad(k)
+            outs = fleet_finetune(
+                [t.offline for t, _, _ in lanes],
+                [b for _, _, b in lanes],
+                net_cfg, ddpg_cfg, n, place_on=self.annex,
+                impl=self.impl,
+                stack_fn=lambda *trees: _fleet_stack_program(
+                    len(trees))(*trees))
+            self.rounds += 1
+            self.lanes += k
+            self.padded_lanes += k_pad
+            self.peak_stack = max(self.peak_stack, k)
+            for (tenant, n_t, _), out in zip(lanes, outs):
+                tenant.offline = out
+                ran.append((tenant, n_t))
+        return ran
+
+    def stats(self) -> dict:
+        return {
+            "impl": self.impl,
+            "rounds": self.rounds,
+            "lanes": self.lanes,
+            "peak_stack": self.peak_stack,
+            # mean useful fraction of the padded stacks dispatched
+            "occupancy": round(self.lanes / self.padded_lanes, 4)
+            if self.padded_lanes else 0.0,
+            "promotions": self.promotions,
+            "demotions": self.demotions,
+            "evictions": self.evictions,
+        }
+
+    @staticmethod
+    def empty_stats() -> dict:
+        """The `stats()["o2"]["fleet"]` shape when fleet mode is off —
+        same keys, so dashboards and the golden-keys test never branch."""
+        return {"impl": "off", "rounds": 0, "lanes": 0, "peak_stack": 0,
+                "occupancy": 0.0, "promotions": 0, "demotions": 0,
+                "evictions": 0}
+
+
+__all__ = ["FleetConfig", "FleetLearner", "embed_window",
+           "nearest_tenant"]

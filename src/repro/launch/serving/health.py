@@ -110,6 +110,11 @@ class HealthConfig:
     # windows* before it is released
     quarantine_threshold: int = 3
     quarantine_windows: int = 8
+    # fleet mode: an opening breaker also spills the tenant's replay
+    # pages to host (hot -> warm) — it cannot fine-tune during the
+    # cooloff, so holding device pages buys nothing.  Serving params are
+    # untouched either way
+    quarantine_spills: bool = True
     # default deadline for `TuningService.flush_o2` (None -> block until
     # settled, the historical contract)
     flush_deadline_s: float | None = None

@@ -30,10 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.o2 import (DivergenceMonitor, O2Config, copy_state,
+from repro.core.o2 import (DivergenceMonitor, O2Config,
+                           _fleet_finetune_program, copy_state,
                            make_replay, offline_finetune)
 from repro.core.replay import _pow2_pad
 
+from repro.launch.serving.fleet import (FleetConfig, FleetLearner,
+                                        embed_window, nearest_tenant)
 from repro.launch.serving.health import HealthConfig, HealthGuard
 from repro.launch.serving.programs import (_batched_admit_keys,
                                            _build_carry_program,
@@ -78,6 +81,14 @@ class O2ServiceConfig:
     # — scaling changes the update count and therefore the offline params,
     # so every serial-parity guarantee keeps its exact round sizes
     scale_rounds_to_annex: bool = False
+    # per-tenant replay ring capacity (rows).  The historical 8192
+    # default sizes a single-digit tenant count; a thousand-tenant fleet
+    # bounds its per-tenant host/device footprint here
+    replay_capacity: int = 8192
+    # fleet mode: stacked multi-tenant fine-tune rounds + hot/warm/cold
+    # tenant tiering (serving/fleet.py).  Default off — the per-tenant
+    # eager path, bitwise-unchanged
+    fleet: FleetConfig = FleetConfig()
 
 
 class _TenantO2:
@@ -105,21 +116,47 @@ class _TenantO2:
         self.env_cfg = tuner.cfg.env_cfg()
         self.annex = annex
         self.monitor = DivergenceMonitor(self.cfg)
+        lazy = svc_cfg.fleet.enabled
         # the ring lives on the serving side (its writers and sampling
         # readers run there, right after the tick fetch when the queue is
         # empty); only the learner state and its update program live on
-        # the annex, with sampled batches hopped across per round
+        # the annex, with sampled batches hopped across per round.  Fleet
+        # tenants construct with the ring spilled (host pages, zero
+        # device bytes) — `promote_hot` re-pages on first activity
         self.replay = make_replay(self.net_cfg, self.ddpg_cfg, self.env_cfg,
+                                  capacity=svc_cfg.replay_capacity,
                                   seed=svc_cfg.replay_seed, device=True,
-                                  place_on=ring_device)
-        # real copies (not aliases): the scanned fine-tune program donates
-        # its input state, so the tuner's pretrained tree and the online
-        # model must own their buffers
-        self.online = copy_state(tuner.state)
-        self.offline = self._place(copy_state(tuner.state))
-        # the assessment-facing snapshot: params of the latest *completed*
-        # fine-tune round (concurrent mode never blocks on a pending one)
-        self.ready_params = self._place(copy_state(tuner.state["params"]))
+                                  place_on=ring_device, spilled=lazy)
+        # the pretrained tree the learner seeds from.  Read-only — every
+        # materialization copies; the fleet warm start may rebind it to a
+        # donor tenant's tuned copy before the first promotion
+        self._seed_state = tuner.state
+        # fleet tiering state (inert off-fleet: every tenant stays "hot")
+        self.tier = "cold" if lazy else "hot"
+        self.idle_ticks = 0
+        self.embedding = None       # workload embedding (warm start)
+        self.warm_started = False
+        self.repages = 0
+        self.spills = 0
+        self._host_online = None    # cold tier's evicted online tree
+        self._host_offline = None   # cold tier's evicted learner tree
+        if lazy:
+            # zero device memory until the tenant earns it: no learner
+            # copies, no ready snapshot — `promote_hot` materializes
+            self.online = None
+            self.offline = None
+            self.ready_params = None
+        else:
+            # real copies (not aliases): the scanned fine-tune program
+            # donates its input state, so the tuner's pretrained tree and
+            # the online model must own their buffers
+            self.online = copy_state(tuner.state)
+            self.offline = self._place(copy_state(tuner.state))
+            # the assessment-facing snapshot: params of the latest
+            # *completed* fine-tune round (concurrent mode never blocks
+            # on a pending one)
+            self.ready_params = self._place(
+                copy_state(tuner.state["params"]))
         self.offline_updates = 0
         self.finetune_skipped = 0
         self._inflight = None       # marker array of the pending round
@@ -134,8 +171,10 @@ class _TenantO2:
         # the health layer's last-known-good learner state: every
         # publish/strict round that passes the param gate refreshes it,
         # and a rejected round restores from it — so one NaN gradient
-        # never wedges the tenant's learner permanently
-        self._last_good = self._place(copy_state(tuner.state))
+        # never wedges the tenant's learner permanently (None until a
+        # lazy fleet tenant materializes)
+        self._last_good = (None if lazy
+                           else self._place(copy_state(tuner.state)))
         self.rejected_params = 0
         # circuit-breaker state: consecutive bad events (rejected
         # params, rollbacks); at the guard's threshold the tenant's O2
@@ -147,6 +186,120 @@ class _TenantO2:
     @property
     def quarantined(self) -> bool:
         return self.quarantined_until is not None
+
+    # ---------------------------------------------- fleet tier machinery
+    def online_state(self):
+        """The tenant's online learner tree, materialized on demand: a
+        cold fleet tenant holds none until it earns one (from its cold
+        eviction if it tuned before, else a copy of the seed tree)."""
+        if self.online is None:
+            if self._host_online is not None:
+                self.online = copy_state(self._host_online)
+                self._host_online = None
+            else:
+                self.online = copy_state(self._seed_state)
+        return self.online
+
+    def online_params(self):
+        """Params a new pool of this tenant binds.  A cold never-tuned
+        tenant serves the seed tree directly — the pool makes its own
+        device copy, so no per-tenant online tree is materialized for a
+        tenant that may never diverge."""
+        if self.online is not None:
+            return self.online["params"]
+        if self._host_online is not None:
+            return self.online_state()["params"]
+        return self._seed_state["params"]
+
+    def promote_hot(self):
+        """Cold/warm -> hot: re-page the replay ring onto its device and
+        materialize the learner trees (from the cold-evicted host copy
+        when the tenant tuned before, else the seed).  Bitwise: the ring
+        round-trips float32 exactly, and a never-tuned tenant's learner
+        starts from the same seed copy the eager path made."""
+        if self.tier == "hot":
+            self.idle_ticks = 0
+            return
+        if self.replay.spilled:
+            self.replay.repage()
+            self.repages += 1
+        if self.offline is None:
+            src = (self._host_offline if self._host_offline is not None
+                   else self._seed_state)
+            self.offline = self._place(copy_state(src))
+            self._host_offline = None
+            self.ready_params = copy_state(self.offline["params"])
+            self._last_good = self._place(copy_state(self.offline))
+        if self.online is None:
+            self.online_state()
+        self.tier = "hot"
+        self.idle_ticks = 0
+
+    def demote_warm(self) -> bool:
+        """Hot -> warm: the replay pages spill to host; the learner trees
+        stay resident (the tenant re-enters the stacked round without a
+        re-page the moment traffic returns)."""
+        if self.tier != "hot":
+            return False
+        if not self.replay.spilled:
+            self.replay.spill()
+            self.spills += 1
+        self.tier = "warm"
+        return True
+
+    def demote_cold(self, keep_history: int):
+        """Warm -> cold: zero device bytes.  The (possibly tuned) learner
+        trees evict to host copies, the ready/last-good snapshots drop
+        (re-derived at the next promotion), and the divergence monitor's
+        unbounded history trims to its last `keep_history` entries — the
+        fix for per-tenant state growing forever once a tenant is seen."""
+        if self.tier == "cold":
+            return
+        if not self.replay.spilled:
+            self.replay.spill()
+            self.spills += 1
+
+        def to_host(tree):
+            return jax.tree.map(
+                lambda x: np.asarray(jax.device_get(x)), tree)
+
+        if self.offline is not None:
+            self._host_offline = to_host(self.offline)
+            self.offline = None
+        if self.online is not None:
+            self._host_online = to_host(self.online)
+            self.online = None
+        self.ready_params = None
+        self._last_good = None
+        self._inflight = None
+        self._round_dirty = False
+        self.monitor.trim_history(keep_history)
+        self.tier = "cold"
+
+    @staticmethod
+    def _tree_bytes(tree) -> int:
+        if tree is None:
+            return 0
+        return sum(int(np.prod(np.shape(x)))
+                   * np.dtype(getattr(x, "dtype", np.float32)).itemsize
+                   for x in jax.tree.leaves(tree))
+
+    def device_bytes(self) -> int:
+        """Approximate device residency of this tenant's O2 state (ring
+        pages + learner trees).  Zero for a cold tenant — pinned in
+        tests/test_fleet.py and gated in the fleet bench."""
+        return (self.replay.device_bytes
+                + self._tree_bytes(self.online)
+                + self._tree_bytes(self.offline)
+                + self._tree_bytes(self.ready_params)
+                + self._tree_bytes(self._last_good))
+
+    def host_bytes(self) -> int:
+        """Approximate host residency (spilled pages, narrow ring
+        fields, cold-evicted learner trees)."""
+        return (self.replay.host_bytes
+                + self._tree_bytes(self._host_online)
+                + self._tree_bytes(self._host_offline))
 
     def reject_round(self):
         """Drop an unhealthy fine-tune result: count it, restore the
@@ -335,12 +488,22 @@ class O2Runtime:
         self.annex = topology.annex.device(0)
         self.horizon_cap = horizon_cap
         self.max_assess_width = max_assess_width
+        self.fleet_cfg = svc_cfg.fleet
+        self.fleet = (FleetLearner(svc_cfg.fleet, annex=self.annex)
+                      if svc_cfg.fleet.enabled else None)
+        self.warm_starts = 0
         self.tenants: dict[str, _TenantO2] = {
             it: _TenantO2(tuner, svc_cfg, annex=self.annex,
                           ring_device=topology.ring.device(),
                           baseline_window=swap_cfg.baseline_window,
                           guard=self.health, index_type=it)
             for it, tuner in agents.items()}
+        # tier bookkeeping: tenants holding any device memory (hot/warm)
+        # — the only ones the per-tick aging walk visits, so a mostly-
+        # cold thousand-tenant fleet pays O(active), not O(tenants)
+        self._noncold: set[str] = {it for it, t in self.tenants.items()
+                                   if t.tier != "cold"}
+        self._touched: set[str] = set()     # tenants active this tick
         # at most one swap trial per tenant (verdict wins landing while
         # one is live are deferred, not queued): index_type -> _SwapTrial
         self.trials: dict[str, _SwapTrial] = {}
@@ -354,8 +517,16 @@ class O2Runtime:
         # process-wide program accounting must not move after warmup
         # (tests assert zero new binds across waves).  Binding is a
         # cheap lru insert — XLA still traces lazily per shape, exactly
-        # as the single-device annex behaved
+        # as the single-device annex behaved.  Deduped by config: a
+        # thousand-tenant fleet sharing one agent config walks the
+        # ladder once, not once per tenant
+        _seen_cfgs: set = set()
         for tenant in self.tenants.values():
+            if (tenant.net_cfg, tenant.env_cfg, tenant.et_cfg) \
+                    in _seen_cfgs:
+                continue
+            _seen_cfgs.add((tenant.net_cfg, tenant.env_cfg,
+                            tenant.et_cfg))
             env_cfg = tenant.env_cfg.with_episode_len(horizon_cap)
             # pad the top: a chunk of max_assess_width windows pads to
             # the next power of two, and that width must be warm too
@@ -368,6 +539,22 @@ class O2Runtime:
                 for k in _pow2_ladder(horizon_cap):
                     _step_program(sl, tenant.net_cfg, env_cfg,
                                   tenant.et_cfg, k)
+        if self.fleet is not None:
+            # pre-bind the stacked fine-tune ladder (pow2 stack widths up
+            # to the hot-tier cap), deduped by (configs, round size): the
+            # hot-set size sweeping 1..max_hot after warmup binds zero
+            # new programs — the fleet bench's hard invariant
+            _seen_fleet: set = set()
+            for tenant in self.tenants.values():
+                n = self._round_updates(tenant)
+                ck = (tenant.net_cfg, tenant.ddpg_cfg, n)
+                if n <= 0 or ck in _seen_fleet:
+                    continue
+                _seen_fleet.add(ck)
+                for k_pad in _pow2_ladder(_pow2_pad(svc_cfg.fleet.max_hot)):
+                    _fleet_finetune_program(tenant.net_cfg,
+                                            tenant.ddpg_cfg, n, k_pad,
+                                            self.fleet.impl)
         self._assess_noise: dict[tuple, jax.Array] = {}  # (slice,w) -> 0s
         # (index_type, slice) -> (source tree, replicated copy): the
         # broadcast onto the assess slice is paid once per params
@@ -391,7 +578,15 @@ class O2Runtime:
         observe divergence now (against the reference distribution),
         assess after the episode retires."""
         tenant = self.tenants[req.index_type]
+        if self.fleet is not None and tenant.embedding is None:
+            self._admit_fleet(tenant, req)
         div = tenant.monitor.observe(req.data_keys, req.wr_ratio)
+        if self.fleet is not None:
+            self._touched.add(req.index_type)
+            if div["diverged"] and tenant.tier != "hot":
+                # first divergence observation re-pages a cold tenant:
+                # the O2 loop is about to need its ring and learner
+                self._promote_hot(tenant)
         if tenant.quarantined and \
                 tenant.monitor.windows_seen >= tenant.quarantined_until:
             # cooloff elapsed (measured in this tenant's own observed
@@ -413,18 +608,125 @@ class O2Runtime:
             elif trial.watch_windows >= self.swap_cfg.rollback_windows:
                 self._close_trial(req.index_type)
 
+    # ------------------------------------------------------------- fleet
+    def _admit_fleet(self, tenant: _TenantO2, req):
+        """First observed window of a fleet tenant: embed the workload
+        (key-quantile profile + write mix) and, when enabled, seed the
+        learner from the L2-nearest existing tenant's tuned params
+        instead of the pretrained default (BALANCE-style transfer —
+        cold-start tuning becomes transfer from the fleet's accumulated
+        knowledge).  Falls back to the default when no other tenant has
+        been observed yet.  Counted in `stats()["o2"]["warm_starts"]`."""
+        tenant.embedding = embed_window(req.data_keys, req.wr_ratio)
+        if not self.fleet_cfg.warm_start or tenant.warm_started:
+            return
+        if tenant.monitor.windows_seen > 0 or tenant.online is not None \
+                or tenant._host_online is not None:
+            return      # an already-tuned tenant keeps its own learner
+        donors = {it: t for it, t in self.tenants.items()
+                  if t is not tenant and t.embedding is not None}
+        # prefer donors whose learner is resident (hot/warm) — a cold
+        # donor's tree works too, just from its host copy or seed
+        warm = {it: t for it, t in donors.items() if t.tier != "cold"}
+        pool_ = warm if warm else donors
+        pick = nearest_tenant(tenant.embedding,
+                              {it: t.embedding for it, t in pool_.items()})
+        if pick is None:
+            return
+        donor = self.tenants[pick]
+        src = (donor.online if donor.online is not None else
+               donor._host_online if donor._host_online is not None else
+               donor._seed_state)
+        tenant._seed_state = copy_state(src)
+        tenant.warm_started = True
+        self.warm_starts += 1
+        # admission resolves the pool before this observation lands, so
+        # any existing pool of the tenant rebinds to the donor-seeded
+        # params — a pure buffer update, zero re-traces
+        for pk, pool in self.pools.items():
+            if pk[0] == tenant.index_type:
+                pool.params = jax.device_put(
+                    tenant._seed_state["params"], pool.replicated)
+
+    def _promote_hot(self, tenant: _TenantO2):
+        """Promote a tenant into the hot tier, spilling the idlest hot
+        tenant to warm when the tier is at `max_hot` capacity."""
+        was_cold_or_warm = tenant.tier != "hot"
+        tenant.promote_hot()
+        self._noncold.add(tenant.index_type)
+        if self.fleet is None:
+            return
+        if was_cold_or_warm:
+            self.fleet.promotions += 1
+        hot = [self.tenants[it] for it in self._noncold
+               if self.tenants[it].tier == "hot"]
+        if len(hot) > self.fleet_cfg.max_hot:
+            idlest = max((t for t in hot if t is not tenant),
+                         key=lambda t: t.idle_ticks)
+            if idlest.demote_warm():
+                self.fleet.demotions += 1
+
+    def _age_tiers(self):
+        """One O2 tick of tier aging, run at the end of `tick`: every
+        hot/warm tenant that saw no activity (admission or retirement)
+        this tick ages toward warm (`warm_after_ticks`: replay pages
+        spill to host) and then cold (`cold_after_ticks`: learner trees
+        evict, idle pools drop).  Cold tenants are not walked at all."""
+        fc = self.fleet_cfg
+        for it in list(self._noncold):
+            tenant = self.tenants[it]
+            if it in self._touched:
+                tenant.idle_ticks = 0
+                continue
+            tenant.idle_ticks += 1
+            if tenant.tier == "hot" \
+                    and tenant.idle_ticks >= fc.warm_after_ticks:
+                if tenant.demote_warm():
+                    self.fleet.demotions += 1
+            if tenant.tier == "warm" \
+                    and tenant.idle_ticks >= fc.cold_after_ticks:
+                self._evict_cold(it, tenant)
+        self._touched.clear()
+
+    def _evict_cold(self, it: str, tenant: _TenantO2):
+        """Cold eviction: zero device bytes for the tenant, and its idle
+        pools (no active episodes) are torn down — `_pool_for` re-creates
+        them on demand, re-entering the same resident programs."""
+        tenant.demote_cold(self.fleet_cfg.monitor_history)
+        self.fleet.evictions += 1
+        self._noncold.discard(it)
+        for pk in [pk for pk, p in self.pools.items()
+                   if pk[0] == it and p.n_active == 0]:
+            del self.pools[pk]
+
+    def _round_updates(self, tenant: _TenantO2) -> int:
+        """One fine-tune round's update count for a tenant (the serial
+        path's exact resolution order)."""
+        n = (self.cfg.offline_updates_per_tick
+             if self.cfg.offline_updates_per_tick is not None
+             else tenant.cfg.offline_updates_per_window)
+        if self.cfg.scale_rounds_to_annex:
+            n *= self.topology.annex.width
+        return n
+
     # ----------------------------------------------------------- capture
     def ingest_retired(self, pool, slot: int, req, narrow: dict):
         """Extract the retired episode's capture rows (small gather on
         the serving mesh) into the tenant's ring — the wide fields never
         visit the host."""
         t0 = time.perf_counter()
+        tenant = self.tenants[req.index_type]
+        if self.fleet is not None:
+            self._touched.add(req.index_type)
+            if tenant.tier != "hot":
+                # a retiring episode is ring traffic: re-page before the
+                # write so the capture rows land on device pages
+                self._promote_hot(tenant)
         T = len(narrow["reward"])
         src = np.minimum(np.arange(_pow2_pad(T)), T - 1).astype(np.int32)
         values = _extract_episode_program(pool.slice)(
             pool.cap, np.int32(slot), src)
-        self.tenants[req.index_type].replay.add_episode_values(
-            values, T, **narrow)
+        tenant.replay.add_episode_values(values, T, **narrow)
         self.phase_ms["capture"] += 1e3 * (time.perf_counter() - t0)
 
     # -------------------------------------------------------------- tick
@@ -479,6 +781,8 @@ class O2Runtime:
             t0 = time.perf_counter()
             self._finetune_retired(retired, strict)
             self.phase_ms["finetune"] += 1e3 * (time.perf_counter() - t0)
+        if self.fleet is not None:
+            self._age_tiers()
 
     def _pump_assessments(self):
         """Move backlog windows into pooled assessment dispatches, widest
@@ -548,16 +852,81 @@ class O2Runtime:
             return entry
 
     def _finetune_retired(self, retired: list, strict: bool):
-        for index_type in {req.index_type for req, _ in retired}:
-            tenant = self.tenants[index_type]
-            if tenant.quarantined:
+        # deterministic first-retirement tenant order (a set of strings
+        # iterates in hash order, which varies with PYTHONHASHSEED): the
+        # fleet stack's lane order — and therefore which replay RNG draws
+        # pair with which lane — must be reproducible run to run
+        order = list(dict.fromkeys(req.index_type for req, _ in retired))
+        tenants = [self.tenants[it] for it in order
+                   if not self.tenants[it].quarantined]
+        if not tenants:
+            return
+        # getattr: tests drive this method on lightweight runtime
+        # stand-ins that don't construct the fleet learner
+        if getattr(self, "fleet", None) is not None:
+            self._fleet_finetune(tenants, strict)
+            return
+        for tenant in tenants:
+            self._guarded_finetune(tenant, self._round_updates(tenant),
+                                   strict)
+
+    def _fleet_finetune(self, tenants: list, strict: bool):
+        """One stacked fine-tune round over every tenant that retired
+        episodes this tick.  Quarantined tenants were already filtered
+        out — the stack is re-formed from scratch each round, so a
+        mid-round eviction cannot perturb the surviving lanes' bits
+        (each lane's state and batches are its own; parity pinned in
+        tests/test_fleet.py).  Per-tenant semantics match the serial
+        path lane by lane: backpressure skips, update counters, the
+        NaN-round fault site, and strict-mode gating."""
+        g = self.health
+        ready = []
+        for tenant in tenants:
+            n = self._round_updates(tenant)
+            if n <= 0:
                 continue
-            n = (self.cfg.offline_updates_per_tick
-                 if self.cfg.offline_updates_per_tick is not None
-                 else tenant.cfg.offline_updates_per_window)
-            if self.cfg.scale_rounds_to_annex:
-                n *= self.topology.annex.width
-            self._guarded_finetune(tenant, n, strict)
+            if tenant.tier != "hot":
+                # retirement promoted it in ingest; belt and braces for
+                # direct callers
+                self._promote_hot(tenant)
+            if not strict and not tenant.learner_free():
+                tenant.finetune_skipped += n
+                continue
+            ready.append((tenant, n))
+        if not ready:
+            return
+        # one watchdog-guarded dispatch for the whole stack (the same
+        # retry/backoff contract as the serial per-tenant rounds)
+        if not g.enabled:
+            ran = self.fleet.round(ready)
+        else:
+            ran = None
+            for attempt in range(g.cfg.dispatch_retries + 1):
+                try:
+                    g.raise_if_planned("finetune_fail")
+                    ran = self.fleet.round(ready)
+                except RuntimeError:
+                    if attempt < g.cfg.dispatch_retries:
+                        g.note_retry()
+                        g.sleep_backoff(attempt)
+                        continue
+                    g.note_annex_failure()
+                    return
+                g.note_annex_ok()
+                break
+        for tenant, n in ran:
+            tenant.offline_updates += n
+            tenant._inflight = tenant.offline["updates"]
+            tenant._round_dirty = True
+            if g.fire("nan_round"):
+                tenant.offline["params"] = jax.tree.map(
+                    lambda x: jnp.full_like(x, jnp.nan),
+                    tenant.offline["params"])
+            if strict and tenant._round_dirty:
+                if tenant.gate_round():
+                    tenant._round_dirty = False   # strict never publishes
+                else:
+                    self._note_bad(tenant)
 
     def _guarded_finetune(self, tenant: _TenantO2, n: int, strict: bool):
         """One learner round under the watchdog (same retry/backoff
@@ -604,6 +973,13 @@ class O2Runtime:
             tenant.quarantined_until = (tenant.monitor.windows_seen
                                         + g.cfg.quarantine_windows)
             g.quarantines += 1
+            if self.fleet is not None and g.cfg.quarantine_spills:
+                # a quarantined tenant leaves the stacked round (the
+                # stack is re-formed each round, so the others' bits are
+                # untouched) and cannot fine-tune during the cooloff —
+                # spill its ring pages rather than hold device memory
+                if tenant.demote_warm():
+                    self.fleet.demotions += 1
             trial = self.trials.get(tenant.index_type)
             if trial is not None and trial.state == "canary":
                 self._rollback_canary(tenant.index_type, trial,
@@ -1084,7 +1460,8 @@ class O2Runtime:
             self.drain(block=True, deadline_s=remaining)
         if not report["deadline_hit"]:
             for tenant in self.tenants.values():
-                jax.block_until_ready(tenant.offline["params"])
+                if tenant.offline is not None:
+                    jax.block_until_ready(tenant.offline["params"])
         report["elapsed_s"] = time.monotonic() - t0
         return report
 
@@ -1099,8 +1476,12 @@ class O2Runtime:
                 finetune_skipped=t.finetune_skipped,
                 replay_size=t.replay.size,
                 mean_swap_ms=(1e3 * float(np.mean(t.swap_times_s))
-                              if t.swap_times_s else 0.0))
+                              if t.swap_times_s else 0.0),
+                tier=t.tier)
             for it, t in self.tenants.items()}
+        tiers = {"hot": 0, "warm": 0, "cold": 0}
+        for t in self.tenants.values():
+            tiers[t.tier] += 1
         return O2Stats(
             tenants=tenants,
             # host-side time spent driving each O2 phase (dispatch +
@@ -1112,7 +1493,17 @@ class O2Runtime:
             # annex placement (the topology layer's verdict): a shared
             # annex queues learner/assessment work behind serving fetches
             annex_width=self.topology.annex.width,
-            annex_shared=self.topology.annex_shared)
+            annex_shared=self.topology.annex_shared,
+            warm_starts=self.warm_starts,
+            tenants_hot=tiers["hot"],
+            tenants_warm=tiers["warm"],
+            tenants_cold=tiers["cold"],
+            device_bytes=sum(t.device_bytes()
+                             for t in self.tenants.values()),
+            host_bytes=sum(t.host_bytes()
+                           for t in self.tenants.values()),
+            fleet=(self.fleet.stats() if self.fleet is not None
+                   else FleetLearner.empty_stats()))
 
     def stats(self) -> dict:
         return self.stats_block().as_dict()

@@ -247,6 +247,22 @@ def _mixed_params_program(slice_: DeviceSlice, slots: int):
 
 
 @lru_cache(maxsize=None)
+def _fleet_stack_program(k: int):
+    """Pack k same-structure tenant trees onto a new leading tenant axis
+    — the fleet round's stack step as one resident program per stack
+    width (the eager per-leaf `jnp.stack` would dispatch leaves × k
+    copy ops per round).  Pure data movement: lane i of the output is
+    bitwise tree i, so the stacked fine-tune's serial parity is carried
+    entirely by the per-lane math (`core.o2._fleet_finetune_program`).
+    Keyed on k alone; XLA traces lazily per tree structure (learner
+    states and batch stacks each get one executable per width)."""
+    def stack(*trees):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    return jax.jit(stack)
+
+
+@lru_cache(maxsize=None)
 def _resize_program(slice_: DeviceSlice):
     """Slot-count resize: gather a pool's device state (the episode carry
     or the capture buffers) through a new→old slot index map, sharded

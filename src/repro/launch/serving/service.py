@@ -271,7 +271,9 @@ class TuningService:
             env_cfg = tuner.cfg.env_cfg().with_episode_len(self.horizon_cap)
             # under O2, pools serve the tenant's (possibly already swapped)
             # online model rather than the agent's frozen pretrained state
-            params = (self.tenants[req.index_type].online["params"]
+            # (`online_params` — a cold fleet tenant serves its seed tree
+            # without materializing a per-tenant copy)
+            params = (self.tenants[req.index_type].online_params()
                       if self.o2.enabled else tuner.state["params"])
             # pools pin to the topology's carved slices round-robin by
             # creation order (one flat slice on hosts; one row per pool

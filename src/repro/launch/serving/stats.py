@@ -87,6 +87,7 @@ class TenantO2Stats:
     finetune_skipped: int
     replay_size: int
     mean_swap_ms: float
+    tier: str = "hot"            # fleet tier ("hot" off-fleet, always)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -103,6 +104,15 @@ class O2Stats:
     pending_missing: int
     annex_width: int
     annex_shared: bool
+    # fleet-mode counters (rendered unconditionally — zeros/"off" when
+    # fleet mode is disabled, so dashboards never branch on presence)
+    warm_starts: int = 0         # tenants seeded from a neighbor
+    tenants_hot: int = 0
+    tenants_warm: int = 0
+    tenants_cold: int = 0
+    device_bytes: int = 0        # approx O2 device residency, all tenants
+    host_bytes: int = 0          # approx spilled/evicted host residency
+    fleet: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         out = {it: t.as_dict() for it, t in self.tenants.items()}
@@ -112,6 +122,13 @@ class O2Stats:
         out["pending_missing"] = self.pending_missing
         out["annex_width"] = self.annex_width
         out["annex_shared"] = self.annex_shared
+        out["warm_starts"] = self.warm_starts
+        out["tenants_hot"] = self.tenants_hot
+        out["tenants_warm"] = self.tenants_warm
+        out["tenants_cold"] = self.tenants_cold
+        out["device_bytes"] = self.device_bytes
+        out["host_bytes"] = self.host_bytes
+        out["fleet"] = dict(self.fleet)
         return out
 
 

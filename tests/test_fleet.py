@@ -1,0 +1,325 @@
+"""Fleet mode (launch/serving/fleet.py + core.o2 stacked fine-tuning).
+
+* spill/repage round-trip — a `DeviceSequenceReplay` that spilled its
+  pages to host (and kept ingesting while spilled) re-pages to a ring
+  bitwise-identical to one that never left the device, including
+  page-spanning episodes and ring wraparound;
+* stacked-round parity — `fleet_finetune` over K tenants is bitwise
+  K serial `offline_finetune` rounds in serial RNG order, at K=1 and
+  K=3, and with a tenant evicted (quarantined) mid-round the surviving
+  lanes' bits are untouched;
+* program-cache flatness — after the pow2 ladder warms, sweeping the
+  hot-set size binds zero new stacked programs and never touches the
+  serving `_step_program` cache;
+* tiering in the service — hot tenants age to warm (pages spill) and
+  cold (zero device bytes, learner evicted, monitor history trimmed),
+  and a cold tenant re-pages on new traffic; BALANCE-style warm starts
+  are counted and the new `stats()["o2"]` fleet keys render.
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ddpg
+from repro.core.ddpg import DDPGConfig
+from repro.core.litune import LITune, LITuneConfig
+from repro.core.networks import NetConfig
+from repro.core.o2 import (O2Config, O2System, _finetune_program,
+                           _fleet_finetune_program, copy_state,
+                           fleet_finetune, fleet_stack_impl,
+                           sample_update_batches)
+from repro.core.replay import DeviceSequenceReplay, _pow2_pad
+from repro.index.workloads import sample_keys, wr_workload
+from repro.launch.serving import (FleetConfig, FleetLearner,
+                                  O2ServiceConfig, TuningService)
+from repro.launch.serving.programs import (_fleet_stack_program,
+                                           _pow2_ladder, _step_program)
+
+OBS, ACT, HID = 9, 4, 16
+NET = NetConfig(obs_dim=OBS, action_dim=ACT, lstm_hidden=HID,
+                mlp_hidden=32)
+DDPG = DDPGConfig(seq_len=3, burn_in=1, batch_size=8)
+
+
+def _episode(rng, T):
+    f32 = lambda *s: rng.standard_normal(s).astype(np.float32)  # noqa: E731
+    done = np.concatenate([np.zeros(T - 1), [1.0]]).astype(np.float32)
+    return dict(obs=f32(T, OBS), action=f32(T, ACT), reward=f32(T),
+                next_obs=f32(T, OBS), done=done,
+                cost=(rng.random(T) < 0.3).astype(np.float32),
+                actor_hidden=(f32(T, HID), f32(T, HID)),
+                critic_hidden=(f32(T, HID), f32(T, HID)))
+
+
+def _ring(cap, seed=0, spilled=False):
+    return DeviceSequenceReplay(cap, OBS, ACT, HID, seq_len=DDPG.seq_len,
+                                seed=seed, spilled=spilled)
+
+
+def _assert_trees_equal(a, b):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)), a, b)
+
+
+# ------------------------------------------------------- spill / re-page
+@pytest.mark.parametrize("cap,lens", [
+    (32, [5, 7, 9, 6, 8]),            # single page, ring wraps
+    (512, [200, 200, 200]),           # page-spanning episodes + wrap
+])
+def test_spill_repage_bitwise(cap, lens):
+    """A ring that spilled (and kept ingesting while spilled) re-pages to
+    bitwise the never-left-device ring: contents, pointers, and the
+    sampling RNG stream."""
+    ref, sub = _ring(cap), _ring(cap)
+    rng_r, rng_s = np.random.default_rng(3), np.random.default_rng(3)
+    for i, T in enumerate(lens):
+        ref.add_episode(**_episode(rng_r, T))
+        if i == 1:
+            sub.spill()                       # pages to host mid-stream
+            assert sub.device_bytes == 0
+        if i == len(lens) - 1:
+            sub.repage()                      # back before the last write
+            assert not sub.spilled
+        sub.add_episode(**_episode(rng_s, T))
+    sub.repage()                              # idempotent when on-device
+    assert (ref.ptr, ref.size) == (sub.ptr, sub.size)
+    for f in ("obs", "action", "reward", "next_obs", "done", "cost",
+              "h_a", "c_a", "h_q", "c_q", "step_left"):
+        np.testing.assert_array_equal(np.asarray(getattr(sub, f)),
+                                      np.asarray(getattr(ref, f)),
+                                      err_msg=f)
+    b_ref = ref.sample_sequence_batches(2, 4)
+    b_sub = sub.sample_sequence_batches(2, 4)
+    for k in b_ref:
+        np.testing.assert_array_equal(np.asarray(b_sub[k]),
+                                      np.asarray(b_ref[k]), err_msg=k)
+
+
+def test_spilled_construction_and_sampling():
+    """A ring constructed spilled (the cold-start path) holds zero device
+    bytes, ingests and samples on host pages, and samples bitwise the
+    same batches as an on-device twin."""
+    cold, hot = _ring(32, spilled=True), _ring(32)
+    assert cold.spilled and cold.device_bytes == 0
+    assert cold.host_bytes > hot.host_bytes   # pages counted host-side
+    rng_c, rng_h = np.random.default_rng(5), np.random.default_rng(5)
+    for _ in range(3):
+        cold.add_episode(**_episode(rng_c, 7))
+        hot.add_episode(**_episode(rng_h, 7))
+    b_c = cold.sample_sequence_batches(2, 4)
+    b_h = hot.sample_sequence_batches(2, 4)
+    for k in b_h:
+        np.testing.assert_array_equal(np.asarray(b_c[k]),
+                                      np.asarray(b_h[k]), err_msg=k)
+
+
+# --------------------------------------------------- stacked-round parity
+def _tenant(i, cap=128, n_eps=4, ep_len=12):
+    """A minimal fleet lane: its own replay RNG, its own learner state."""
+    replay = _ring(cap, seed=i)
+    rng = np.random.default_rng(40 + i)
+    for _ in range(n_eps):
+        replay.add_episode(**_episode(rng, ep_len))
+    return types.SimpleNamespace(
+        net_cfg=NET, ddpg_cfg=DDPG, replay=replay,
+        offline=ddpg.init_state(jax.random.PRNGKey(i), NET, DDPG))
+
+
+def _serial_round(tenant, n_updates):
+    """The reference: one serial `offline_finetune`-shaped round drawn
+    from this tenant's own replay RNG."""
+    batches = sample_update_batches(tenant.replay, n_updates,
+                                    tenant.ddpg_cfg.batch_size)
+    batches = jax.tree.map(jnp.asarray, batches)
+    return _finetune_program(NET, DDPG, n_updates)(
+        copy_state(tenant.offline), batches)
+
+
+@pytest.mark.parametrize("k", [1, 3])
+def test_fleet_finetune_matches_serial(k):
+    """The fleet correctness anchor: one stacked round over K tenants is
+    bitwise K serial rounds — same replay RNG draws lane by lane, same
+    learner bits out (the `map` lowering on CPU; K=1 also pins the
+    degenerate stack)."""
+    serial_ts = [_tenant(i) for i in range(k)]
+    fleet_ts = [_tenant(i) for i in range(k)]
+    serial = [_serial_round(t, 4) for t in serial_ts]
+
+    learner = FleetLearner(FleetConfig(enabled=True, max_hot=4))
+    ran = learner.round([(t, 4) for t in fleet_ts])
+    assert [t for t, _ in ran] == fleet_ts
+    for t, want in zip(fleet_ts, serial):
+        _assert_trees_equal(t.offline, want)
+    assert learner.rounds == 1 and learner.lanes == k
+    assert learner.peak_stack == k
+
+
+def test_fleet_round_mid_round_eviction_parity():
+    """A tenant leaving the stack (quarantine eviction) cannot perturb
+    the survivors: the round over {t0, t2} produces bitwise the same
+    states t0 and t2 get from their own serial rounds — each lane's
+    state and batches are its own."""
+    ts = [_tenant(i) for i in range(3)]
+    refs = [_tenant(i) for i in range(3)]
+    want = {i: _serial_round(refs[i], 4) for i in (0, 2)}
+
+    learner = FleetLearner(FleetConfig(enabled=True, max_hot=4))
+    learner.round([(ts[0], 4), (ts[2], 4)])   # t1 evicted pre-dispatch
+    _assert_trees_equal(ts[0].offline, want[0])
+    _assert_trees_equal(ts[2].offline, want[2])
+
+
+def test_fleet_program_cache_flat_across_hot_set_sweep():
+    """After the pow2 ladder warms, sweeping the hot-set size 1..4 binds
+    zero new stacked programs — and never touches the serving
+    `_step_program` cache at all (the bench's hard invariant)."""
+    impl = fleet_stack_impl("auto")
+    for k_pad in _pow2_ladder(_pow2_pad(4)):
+        _fleet_finetune_program(NET, DDPG, 4, k_pad, impl)
+        _fleet_stack_program(k_pad)
+    finetune_size = _fleet_finetune_program.cache_info().currsize
+    stack_size = _fleet_stack_program.cache_info().currsize
+    step_size = _step_program.cache_info().currsize
+
+    learner = FleetLearner(FleetConfig(enabled=True, max_hot=4))
+    for k in (1, 2, 3, 4, 2, 1):
+        learner.round([(t, 4) for t in [_tenant(i) for i in range(k)]])
+    assert _fleet_finetune_program.cache_info().currsize == finetune_size
+    assert _fleet_stack_program.cache_info().currsize == stack_size
+    assert _step_program.cache_info().currsize == step_size
+    # occupancy: 13 useful lanes over 14 padded (3 -> pad 4)
+    assert learner.lanes == 13 and learner.padded_lanes == 14
+
+
+# --------------------------------------------------- service-level fleet
+_O2 = O2Config(divergence_threshold=0.05, offline_updates_per_window=2)
+
+
+def _cfg(index_type="alex", **kw) -> LITuneConfig:
+    return LITuneConfig(index_type=index_type, episode_len=4,
+                        lstm_hidden=16, mlp_hidden=32,
+                        ddpg=DDPGConfig(seq_len=3, burn_in=1, batch_size=8),
+                        o2=_O2, **kw)
+
+
+def _windows(n, n_keys=512, seed=7):
+    dists = ["uniform", "books", "osm", "fb"]
+    wrs = [1.0, 1.0, 3.0, 0.33]
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        data = sample_keys(k, n_keys, dists[i % len(dists)])
+        wl, _ = wr_workload(jax.random.fold_in(k, 1), data,
+                            wrs[i % len(wrs)], total=n_keys, dist="mix")
+        out.append((data, wl, wrs[i % len(wrs)]))
+    return out
+
+
+def test_service_fleet_parity_with_tune_window():
+    """Fleet mode on, one tenant, strict order: the whole stream — swap
+    decisions, offline params, online params — is bitwise the serial
+    `O2System.tune_window` loop.  The lazy cold start, the promotion
+    re-page, and the K=1 stacked round all collapse to the eager path's
+    exact bits."""
+    cfg = _cfg()
+    budget = 4
+    wins = _windows(4)
+    wkeys = [jax.random.PRNGKey(50 + i) for i in range(len(wins))]
+
+    serial_tuner = LITune(cfg, seed=0)
+    o2sys = O2System(serial_tuner.state, cfg.net_cfg(), cfg.ddpg,
+                     cfg.env_cfg(), cfg.et_cfg(), cfg.o2, seed=0)
+    serial = [o2sys.tune_window(wkeys[i], d, wl, wr, max_steps=budget)
+              for i, (d, wl, wr) in enumerate(wins)]
+    assert any(r["divergence"]["diverged"] for r in serial)
+
+    service = TuningService(
+        LITune(cfg, seed=0), slots=1,
+        o2=O2ServiceConfig(enabled=True, o2=cfg.o2, strict_order=True,
+                           fleet=FleetConfig(enabled=True, max_hot=4,
+                                             warm_after_ticks=64,
+                                             cold_after_ticks=256)))
+    rids = [service.submit(d, wl, wr, budget_steps=budget, key=wkeys[i],
+                           noise_scale=0.02)
+            for i, (d, wl, wr) in enumerate(wins)]
+    results = service.run()
+    tenant = service.tenants["alex"]
+
+    for i, rid in enumerate(rids):
+        got, want = results[rid], serial[i]
+        assert got["divergence"] == want["divergence"]
+        assert got["swapped"] == want["swapped"]
+    assert tenant.swaps == o2sys.swaps
+    assert tenant.tier == "hot" and tenant.repages == 1
+    _assert_trees_equal(tenant.offline["params"], o2sys.offline["params"])
+    _assert_trees_equal(tenant.online["params"], o2sys.online["params"])
+    st = service.stats()
+    assert st["o2"]["fleet"]["rounds"] > 0
+    assert st["o2"]["fleet"]["occupancy"] == 1.0   # K=1 pads to 1
+
+
+def test_service_fleet_tiering_and_warm_start():
+    """Two tenants, tiny aging thresholds: the one that stops sending
+    traffic ages hot -> warm -> cold (zero device bytes, learner evicted
+    to host, monitor history trimmed), while the active one stays hot;
+    the late tenant's first window warm-starts from the established
+    neighbor and is counted."""
+    cfg_a, cfg_b = _cfg("a"), _cfg("b")
+    budget = 4
+    fleet = FleetConfig(enabled=True, max_hot=2, warm_after_ticks=2,
+                        cold_after_ticks=4, monitor_history=2)
+    service = TuningService(
+        {"a": LITune(cfg_a, seed=0), "b": LITune(cfg_b, seed=1)}, slots=1,
+        o2=O2ServiceConfig(enabled=True, o2=_O2, strict_order=True,
+                           fleet=fleet))
+    wins = _windows(8)
+    wkeys = [jax.random.PRNGKey(90 + i) for i in range(len(wins))]
+
+    # tenant "a" streams three windows (> monitor_history) and goes quiet
+    for i in (0, 1, 2):
+        d, wl, wr = wins[i]
+        service.submit(d, wl, wr, budget_steps=budget, index_type="a",
+                       key=wkeys[i], noise_scale=0.02)
+    service.run()
+    ta = service.tenants["a"]
+    assert ta.tier == "hot" and ta.embedding is not None
+    assert service.o2rt.warm_starts == 0       # no donors existed for "a"
+
+    # tenant "b" arrives: first window embeds + seeds from "a"; the
+    # continued stream keeps "b" hot while "a" ages out
+    for i in range(3, len(wins)):
+        d, wl, wr = wins[i]
+        service.submit(d, wl, wr, budget_steps=budget, index_type="b",
+                       key=wkeys[i], noise_scale=0.02)
+    service.run()
+    tb = service.tenants["b"]
+    assert tb.warm_started and service.o2rt.warm_starts == 1
+    assert tb.tier == "hot"
+    # "a" idled through >= cold_after_ticks service ticks: fully evicted
+    assert ta.tier == "cold"
+    assert ta.device_bytes() == 0
+    assert ta.host_bytes() > 0                 # learner evicted, not lost
+    assert len(ta.monitor.divergences) <= fleet.monitor_history
+    assert ta.monitor.history_trimmed >= 1
+
+    st = service.stats()
+    assert st["o2"]["a"]["tier"] == "cold"
+    assert st["o2"]["b"]["tier"] == "hot"
+    assert st["o2"]["tenants_hot"] == 1 and st["o2"]["tenants_cold"] == 1
+    assert st["o2"]["warm_starts"] == 1
+    assert st["o2"]["fleet"]["evictions"] >= 1
+    assert st["o2"]["device_bytes"] > 0        # "b" is resident
+
+    # new traffic re-pages the cold tenant: first divergence observation
+    # (or retirement) promotes it back to hot with its ring intact
+    d, wl, wr = wins[1]
+    service.submit(d, wl, wr, budget_steps=budget, index_type="a",
+                   key=jax.random.PRNGKey(123), noise_scale=0.02)
+    service.run()
+    assert ta.tier == "hot" and ta.repages >= 2
+    assert ta.device_bytes() > 0

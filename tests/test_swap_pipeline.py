@@ -307,10 +307,19 @@ def test_stats_golden_keys(monkeypatch):
                                    "resizes"}
     assert set(st["o2"]) == {"alex", "phase_ms", "assessments",
                              "inflight_assessments", "pending_missing",
-                             "annex_width", "annex_shared"}
+                             "annex_width", "annex_shared", "warm_starts",
+                             "tenants_hot", "tenants_warm", "tenants_cold",
+                             "device_bytes", "host_bytes", "fleet"}
     assert set(st["o2"]["alex"]) == {
         "windows", "diverged", "swaps", "offline_updates",
-        "finetune_skipped", "replay_size", "mean_swap_ms"}
+        "finetune_skipped", "replay_size", "mean_swap_ms", "tier"}
+    # fleet keys render (zeroed, impl "off") even with fleet mode off,
+    # so dashboards never branch on key presence
+    assert set(st["o2"]["fleet"]) == {
+        "impl", "rounds", "lanes", "peak_stack", "occupancy",
+        "promotions", "demotions", "evictions"}
+    assert st["o2"]["fleet"]["impl"] == "off"
+    assert st["o2"]["alex"]["tier"] == "hot"
     counter_keys = {"candidates", "immediate", "canaried", "deferred",
                     "promoted", "ci_rejected", "rolled_back_canary",
                     "rolled_back_promoted", "rolled_back"}

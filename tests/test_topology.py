@@ -189,6 +189,8 @@ def test_scale_rounds_to_annex_width():
                                    health=HealthGuard(HealthConfig()))
         rt._guarded_finetune = types.MethodType(
             O2Runtime._guarded_finetune, rt)
+        rt._round_updates = types.MethodType(
+            O2Runtime._round_updates, rt)
         req = types.SimpleNamespace(index_type="alex")
         O2Runtime._finetune_retired(rt, [(req, {})], strict=False)
         return calls
