@@ -27,6 +27,13 @@ The guarded number is picked by the artifact's ``benchmark`` field:
               stacked-fine-tune program binds across the sweep, every
               cold tenant at zero device bytes, and the K-wide stacked
               round strictly faster than K serial rounds.
+  kernel    — the fused-tick *speedup* (unfused over fused ms per
+              serving tick).  Hard invariant first: the fused program
+              (scan + capture append in one dispatch) must not run
+              slower than the unfused two-dispatch path beyond the
+              paired-measurement noise floor — fusing the tail can
+              only remove work, so a genuinely slower fused tick means
+              the fusion re-materialized something.
   chaos     — the health-layer fault battery's degraded-over-healthy
               RPS *ratio* (~1: a demoted annex costs serving nothing).
               Hard invariants first, same policy as swap_safety: zero
@@ -116,6 +123,32 @@ def fleet(doc: dict) -> float:
     return float(doc["rps_ratio"])
 
 
+# fused-vs-unfused wall time is a paired measurement on shared CI
+# hardware: the two variants run the identical scan and differ by one
+# dispatch, so a *real* fusion regression (re-materialized intermediate,
+# extra copy) shows up at 10%+ while honest runs jitter within a few
+# percent either way.  The invariant tolerates that jitter and nothing
+# more.
+_TICK_NOISE_FLOOR = 1.05
+
+
+def kernel(doc: dict) -> float:
+    """Validate the fused-tick hard invariant, then hand back the
+    unfused/fused tick-time ratio for the trend comparison.  A fused
+    program measurably slower than the scan-plus-standalone-capture
+    path it replaces is a fusion bug, not a perf regression; no
+    tolerance applies beyond the paired-measurement noise floor."""
+    t = doc["tick"]
+    fused, unfused = float(t["fused_ms"]), float(t["unfused_ms"])
+    if fused > unfused * _TICK_NOISE_FLOOR:
+        raise ValueError(
+            f"fused tick slower than unfused beyond the "
+            f"{100 * (_TICK_NOISE_FLOOR - 1):.0f}% noise floor: "
+            f"{fused}ms fused vs {unfused}ms unfused (k={t['k']}, "
+            f"slots={t['slots']})")
+    return unfused / fused
+
+
 def chaos(doc: dict) -> float:
     """Validate the fault battery's hard invariants, then hand back the
     degraded-over-healthy RPS ratio for the trend comparison.  A fault
@@ -157,6 +190,7 @@ METRICS = {
     "swap_safety": ("post-rollback probe ratio", swap_safety),
     "chaos": ("degraded/healthy serving RPS ratio", chaos),
     "fleet": ("req/s ratio across the tenant-count sweep", fleet),
+    "kernel": ("fused-tick speedup (unfused/fused tick ms)", kernel),
 }
 
 

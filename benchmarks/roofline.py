@@ -68,7 +68,10 @@ def kernel_micro(n_timing: int = 3) -> list[str]:
 
     keys = jnp.sort(jax.random.uniform(key, (8 * 256,)))
     queries = jax.random.uniform(key, (128,))
-    fn = jax.jit(lambda k, qq: batched_lookup(k, qq, tile=256, qcap=64))
+    # explicit interpret mode: the row times the Pallas kernel *body*
+    # (auto would resolve to the jnp ref on this CPU container)
+    fn = jax.jit(lambda k, qq: batched_lookup(k, qq, tile=256, qcap=64,
+                                              mode="interpret"))
     fn(keys, queries)[0].block_until_ready()
     t0 = time.perf_counter()
     for _ in range(n_timing):
@@ -88,3 +91,153 @@ def kernel_micro(n_timing: int = 3) -> list[str]:
     rows.append(csv_row("kernel_micro", "mamba_scan", "jnp_ref",
                         f"{(time.perf_counter()-t0)/n_timing*1e6:.0f}"))
     return rows
+
+def _kernel_record(name: str, shape: str, jitted, args, kwargs=None) -> dict:
+    """Lower one hot-path kernel, run the HLO through the analytic
+    roofline, and emit a record render_roofline.table() can consume
+    (mesh="kernel" keeps these rows out of the 16x16 model tables)."""
+    from repro.runtime import hlo_analysis as ha
+
+    compiled = jitted.lower(*args, **(kwargs or {})).compile()
+    analysis = ha.analyze(compiled.as_text())
+    # no 6ND notion for data-movement kernels: the HLO flops *are* the
+    # model flops, so useful_ratio pins at 1.0 and the interesting
+    # numbers are bytes, arithmetic intensity, and the dominant term
+    terms = ha.roofline(analysis, analysis.flops)
+    arg_bytes = sum(x.nbytes for x in jax.tree.leaves((args, kwargs))
+                    if hasattr(x, "nbytes"))
+    ai = (analysis.flops / analysis.bytes_accessed
+          if analysis.bytes_accessed else 0.0)
+    return {
+        "mesh": "kernel", "arch": name, "shape": shape, "status": "ok",
+        "analytic_memory": {"total": arg_bytes},
+        "arithmetic_intensity": round(ai, 4),
+        "hlo_analysis": analysis.as_dict(),
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "collective_wire_s": terms.collective_wire_s,
+            "dominant": terms.dominant,
+            "model_flops_per_dev": analysis.flops,
+            "hlo_flops_per_dev": analysis.flops,
+            "useful_ratio": terms.useful_ratio,
+            "roofline_fraction": terms.roofline_fraction,
+            "step_time_s": terms.step_time_s,
+        },
+    }
+
+
+def kernel_roofline(out: str | None = None) -> list[str]:
+    """Arithmetic-intensity records for the serving hot path behind
+    kernels/dispatch.py: the index_probe predecessor lookup, the
+    fused-tick capture append, and the fused vs unfused K-rung serving
+    tick programs.  Lowered on the host backend as a projection against
+    the same TPU-v5e roofline constants the dry-run uses; write JSONL
+    with ``out=`` and render with benchmarks/render_roofline.py."""
+    import json
+
+    from repro.core.litune import LITune, LITuneConfig
+    from repro.index.workloads import sample_keys, wr_workload
+    from repro.kernels.fused_tick.ops import fused_capture
+    from repro.kernels.fused_tick.ref import FIELD_ORDER, fused_capture_ref
+    from repro.kernels.index_probe.ops import _auto_tile, batched_lookup
+    from repro.launch.serving import (O2ServiceConfig, ServeConfig,
+                                      TuningService)
+    from repro.launch.serving.programs import _pow2_ladder, _step_program
+
+    records = []
+    key = jax.random.PRNGKey(0)
+
+    # -- index_probe: the predecessor lookup under every run_reads
+    n, q = 4096, 512
+    keys = jnp.sort(jax.random.uniform(key, (n,)))
+    queries = jax.random.uniform(jax.random.fold_in(key, 1), (q,))
+    tile = _auto_tile(n)
+    for mode in ("ref", "interpret"):        # compiled needs a real accel
+        fn = jax.jit(lambda k, qq, _m=mode: batched_lookup(
+            k, qq, tile=tile, qcap=q, mode=_m))
+        records.append(_kernel_record(
+            "index_probe", f"n{n} q{q} t{tile} {mode}", fn, (keys, queries)))
+
+    # -- fused_tick capture append (standalone dispatch = the unfused
+    #    tail; the same body fuses into the step program below)
+    k_steps, b, h = 1, 2, 8
+    dims = {"obs": 6, "next_obs": 6, "h_a": 16, "c_a": 16, "h_q": 16,
+            "c_q": 16}
+    wide = sum(dims.values())
+    new = {f: jax.random.normal(jax.random.fold_in(key, 2 + i),
+                                (k_steps, b, dims[f]), jnp.float32)
+           for i, f in enumerate(FIELD_ORDER)}
+    cap = jnp.zeros((b, h, wide), jnp.float32)
+    off = jnp.zeros((b,), jnp.int32)
+    for mode in ("ref", "interpret"):
+        records.append(_kernel_record(
+            "fused_capture", f"B{b} H{h} w{wide} {mode}", fused_capture,
+            (cap, new, off), {"mode": mode}))
+    records.append(_kernel_record(
+        "capture_write", f"B{b} H{h} w{wide} standalone",
+        jax.jit(fused_capture_ref), (cap, new, off)))
+
+    # -- the K-rung serving tick, fused vs unfused: bind the real ladder
+    #    by serving a short O2 stream, then lower both resident variants
+    budget, slots = 8, 2
+    cfg = LITuneConfig(index_type="alex", episode_len=budget,
+                       lstm_hidden=16, mlp_hidden=32)
+    svc = TuningService(LITune(cfg, seed=0), config=ServeConfig(
+        slots=slots, horizon_cap=budget, seed=0,
+        o2=O2ServiceConfig(enabled=True)))
+    for i in range(slots):
+        kk = jax.random.fold_in(key, 100 + i)
+        data = sample_keys(kk, 512, "mix")
+        wl, _ = wr_workload(jax.random.fold_in(kk, 1), data, 1.0,
+                            total=512, dist="mix")
+        svc.submit(data, wl, 1.0, budget_steps=budget)
+    svc.run()
+    svc.flush_o2()
+    pool = next(iter(svc.pools.values()))
+    k = max(_pow2_ladder(budget))
+    noise = pool.noise_dev()
+    offs = jnp.zeros((slots,), jnp.int32)
+    prog_u = _step_program(pool.slice, pool.net_cfg, pool.env_cfg,
+                           pool.et_cfg, k)
+    prog_f = _step_program(pool.slice, pool.net_cfg, pool.env_cfg,
+                           pool.et_cfg, k, capture=True)
+    records.append(_kernel_record(
+        "serving_tick", f"K{k} slots{slots} unfused_scan", prog_u,
+        (pool.params, pool.carry, noise)))
+    records.append(_kernel_record(
+        "serving_tick", f"K{k} slots{slots} fused", prog_f,
+        (pool.params, pool.carry, noise, pool.ensure_cap(), offs)))
+
+    if out:
+        with open(out, "w") as f:
+            for r in records:
+                f.write(json.dumps(r) + "\n")
+
+    rows = [csv_row("kernel_roofline", "kernel", "shape", "gflop",
+                    "mbytes_hlo", "ai_flops_per_byte", "dominant",
+                    "step_time_us")]
+    for r in records:
+        hlo = r["hlo_analysis"]
+        rows.append(csv_row(
+            "kernel_roofline", r["arch"], r["shape"].replace(" ", "_"),
+            f"{hlo['flops'] / 1e9:.4f}",
+            f"{hlo['bytes_accessed'] / 1e6:.3f}",
+            f"{r['arithmetic_intensity']:.3f}",
+            r["roofline"]["dominant"],
+            f"{r['roofline']['step_time_s'] * 1e6:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write kernel_roofline records as JSONL "
+                         "(render: python -m benchmarks.render_roofline "
+                         "PATH kernel)")
+    cli = ap.parse_args()
+    for row in kernel_roofline(out=cli.out):
+        print(row)

@@ -29,6 +29,7 @@ def main() -> None:
     benches = dict(paper_figs.ALL)
     benches["micro_steps"] = roofline.micro_steps
     benches["kernel_micro"] = roofline.kernel_micro
+    benches["kernel_roofline"] = roofline.kernel_roofline
 
     only = [s for s in args.only.split(",") if s]
     skip = set(s for s in args.skip.split(",") if s)

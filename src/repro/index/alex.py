@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.index import cost as C
 from repro.index import linear_model as lm
+from repro.kernels.index_probe.ops import predecessor_positions
 
 MAX_LEAVES = 512  # static capacity; max_fanout param stays below this
 
@@ -109,25 +110,34 @@ def build(keys: jax.Array, p: dict):
     }
 
 
-def _locate(idx: dict, q: jax.Array):
-    """Root traversal for a batch of queries. Returns (leaf, root_cost)."""
+def _locate(idx: dict, q: jax.Array, pos: jax.Array | None = None):
+    """Root traversal for a batch of queries. Returns (leaf, root_cost).
+
+    `pos` accepts precomputed predecessor positions (the read path probes
+    once through `predecessor_positions` and shares the result with the
+    local-search stage); None recomputes the searchsorted reference."""
     pred = idx["root_slope"] * q + idx["root_icpt"]
     pred = jnp.clip(pred, 0.0, idx["n_leaves"] - 1.0)
     # true leaf = leaf of the predecessor key (exact, computed on real data)
-    pos = jnp.searchsorted(idx["keys"], q, side="right") - 1
-    pos = jnp.clip(pos, 0, idx["keys"].shape[0] - 1)
+    if pos is None:
+        pos = jnp.clip(jnp.searchsorted(idx["keys"], q, side="right") - 1,
+                       0, idx["keys"].shape[0] - 1)
     true_leaf = idx["seg_of_key"][pos]
     root_err = jnp.abs(pred - true_leaf.astype(jnp.float32))
     cost = C.MODEL_EVAL_NS + C.PROBE_STEP_NS * jnp.log2(1.0 + root_err)
     return true_leaf, cost, root_err
 
 
-def run_reads(idx: dict, reads: jax.Array):
-    """Batched SEARCH. Returns (total_ns, metrics dict)."""
-    leaf, root_cost, root_err = _locate(idx, reads)
-    n = idx["keys"].shape[0]
-    pos = jnp.clip(jnp.searchsorted(idx["keys"], reads, side="right") - 1,
-                   0, n - 1)
+def run_reads(idx: dict, reads: jax.Array, kernel=None):
+    """Batched SEARCH. Returns (total_ns, metrics dict).
+
+    `kernel` (a `kernels.dispatch.KernelConfig`) gates the predecessor
+    probe: Pallas modes route it through the `index_probe` kernel, the
+    default resolves to the bitwise `searchsorted` reference on CPU.  The
+    probe runs once and feeds both the root-traversal and local-search
+    stages (historically two identical searchsorteds)."""
+    pos = predecessor_positions(idx["keys"], reads, kernel=kernel)
+    leaf, root_cost, root_err = _locate(idx, reads, pos=pos)
     cnt = jnp.maximum(idx["cnt"], 1.0)
     starts = jnp.cumsum(idx["cnt"]) - idx["cnt"]
     local_rank = pos.astype(jnp.float32) - starts[leaf]

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.index import cost as C
 from repro.index import linear_model as lm
+from repro.kernels.index_probe.ops import predecessor_positions
 
 MAX_LEAVES = 1024
 
@@ -86,12 +87,12 @@ def build(keys: jax.Array, p: dict):
     }
 
 
-def _lines_touched(idx, q, p):
-    """Cache lines touched per lookup + the search distance metric."""
+def _lines_touched(idx, q, p, kernel=None):
+    """Cache lines touched per lookup + the search distance metric.
+    `kernel` gates the predecessor probe (see `alex.run_reads`)."""
     pred_leaf = jnp.clip(idx["root_slope"] * q + idx["root_icpt"],
                          0.0, idx["n_leaves"] - 1.0)
-    n = idx["keys"].shape[0]
-    pos = jnp.clip(jnp.searchsorted(idx["keys"], q, side="right") - 1, 0, n - 1)
+    pos = predecessor_positions(idx["keys"], q, kernel=kernel)
     leaf = idx["seg_of_key"][pos]
     root_err = jnp.abs(pred_leaf - leaf.astype(jnp.float32))
     root_lines = 1.0 + jnp.log2(1.0 + root_err)   # inner-node line hops
@@ -114,8 +115,8 @@ def _lines_touched(idx, q, p):
     return ns, dist, root_err, leaf
 
 
-def run_reads(idx, reads, p):
-    ns, dist, root_err, _ = _lines_touched(idx, reads, p)
+def run_reads(idx, reads, p, kernel=None):
+    ns, dist, root_err, _ = _lines_touched(idx, reads, p, kernel=kernel)
     per_q = C.QUERY_BASE_NS + ns / jnp.maximum(p["w_read"], 0.1) \
         + idx["ood_buffer"] * C.BUFFER_CMP_NS * 0.25
     total = jnp.sum(per_q)

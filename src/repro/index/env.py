@@ -25,6 +25,7 @@ from repro.core.spaces import ParamSpace, alex_space, carmi_space
 from repro.index import alex, carmi
 from repro.index import cost as C
 from repro.index.features import STATE_DIM, state_vector, workload_stats
+from repro.kernels.dispatch import KernelConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +36,13 @@ class EnvConfig:
     runtime_budget: float = C.RUNTIME_BUDGET_NS
     omega: int = 1
     kappa: int = 2
+    # kernel execution posture (kernels/dispatch.py): gates routing the
+    # read probes through the Pallas index_probe kernel and the serving
+    # tick's fused capture.  Frozen and hashable — it rides the jit
+    # static args and serving program-cache keys, so two postures never
+    # share an executable.  The default resolves to the bitwise jnp
+    # reference on CPU and the compiled kernels on GPU/TPU
+    kernel: KernelConfig = KernelConfig()
 
     @property
     def space(self) -> ParamSpace:
@@ -61,12 +69,14 @@ def evaluate_params(cfg: EnvConfig, params_raw: dict, data_keys, workload,
     mod = _backend(cfg.index_type)
     if cfg.index_type == "alex":
         idx = mod.build(data_keys, params_raw)
-        read_ns, read_m = mod.run_reads(idx, workload["reads"])
+        read_ns, read_m = mod.run_reads(idx, workload["reads"],
+                                        kernel=cfg.kernel)
         idx, ins_ns, ins_m = mod.run_inserts(idx, workload["inserts"],
                                              params_raw)
     else:
         idx = mod.build(data_keys, params_raw)
-        read_ns, read_m = mod.run_reads(idx, workload["reads"], params_raw)
+        read_ns, read_m = mod.run_reads(idx, workload["reads"], params_raw,
+                                        kernel=cfg.kernel)
         idx, ins_ns, ins_m = mod.run_inserts(idx, workload["inserts"],
                                              params_raw)
     n_ops = workload["reads"].shape[0] + workload["inserts"].shape[0]

@@ -1,5 +1,7 @@
 """Jitted wrapper for the flash-attention kernel with layout adapters for
-the model stack ([B,S,H,D] <-> [B,H,S,D]) and GQA head repetition."""
+the model stack ([B,S,H,D] <-> [B,H,S,D]) and GQA head repetition.
+Execution mode (compiled / interpret / jnp ref) routes through
+`kernels/dispatch.py`; ``mode=None`` defers to the process default."""
 from __future__ import annotations
 
 from functools import partial
@@ -7,16 +9,17 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
-                                   "interpret", "block_q", "block_k"))
+@partial(jax.jit, static_argnames=("causal", "window", "mode",
+                                   "block_q", "block_k"))
 def mha(q, k, v, *, causal: bool = True, window: int = 0,
-        use_pallas: bool = True, interpret: bool = True,
-        block_q: int = 128, block_k: int = 128):
+        mode: str | None = None, block_q: int = 128, block_k: int = 128):
     """q [B,S,H,D], k/v [B,S,K,D] (K divides H) -> [B,S,H,D]."""
+    mode = dispatch.resolve(mode)
     h, kheads = q.shape[2], k.shape[2]
     if kheads != h:
         rep = h // kheads
@@ -25,10 +28,10 @@ def mha(q, k, v, *, causal: bool = True, window: int = 0,
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    if use_pallas:
+    if mode == "ref":
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
         out = flash_attention(qt, kt, vt, causal=causal, window=window,
                               block_q=block_q, block_k=block_k,
-                              interpret=interpret)
-    else:
-        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+                              interpret=dispatch.interpret_flag(mode))
     return out.transpose(0, 2, 1, 3)

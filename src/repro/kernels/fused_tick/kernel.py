@@ -1,0 +1,59 @@
+"""Pallas kernel: fused K-ladder tick capture append.
+
+The K-step serving tick (`core/etmdp.batched_episode_scan`) ends in a
+memory-bound tail: re-key the scan's stacked outputs into the
+transition view, pack six wide fields into one feature axis, and append
+`[K, wide]` rows into each slot's `[H, wide]` capture block at a
+per-slot dynamic offset.  Dispatched separately (the historical
+`_capture_write` program) that tail materializes the whole `[K, B,
+wide]` intermediate across a program boundary every tick; fused into
+the step program (`launch/serving/programs._step_program(capture=True)`)
+this kernel consumes the scan's outputs in place.
+
+Grid: (B,) — one program instance per slot lane, mirroring the
+`index_probe` one-tile-per-step idiom.  Blocks: each wide field arrives
+as its `[K, 1, d_f]` lane slice, the capture block as the lane's
+`[1, H, wide]` rows, the offset as a `[1]` scalar block.  The body is
+pure data movement (concat + one dynamic row-slice update), so the
+kernel is bitwise against the jnp reference (`ref.fused_capture_ref`)
+in every mode — the serving path's capture parity does not depend on
+which backend ran it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_tick.ref import FIELD_ORDER
+
+
+def _capture_kernel(obs_ref, nobs_ref, ha_ref, ca_ref, hq_ref, cq_ref,
+                    off_ref, cap_ref, out_ref):
+    fields = (obs_ref, nobs_ref, ha_ref, ca_ref, hq_ref, cq_ref)
+    packed = jnp.concatenate([f[:, 0, :] for f in fields],
+                             axis=-1)                       # [K, wide]
+    off = off_ref[0]
+    out_ref[0] = jax.lax.dynamic_update_slice(
+        cap_ref[0], packed, (off, 0))
+
+
+def fused_capture_pallas(cap, new, offsets, interpret: bool = True):
+    """cap [B, H, wide]; new: dict of [K, B, d_f] wide fields (the tick's
+    transition view); offsets [B] int32 -> updated cap."""
+    B, H, wide = cap.shape
+    K = new[FIELD_ORDER[0]].shape[0]
+    field_specs = [
+        pl.BlockSpec((K, 1, new[f].shape[2]), lambda i: (0, i, 0))
+        for f in FIELD_ORDER]
+    return pl.pallas_call(
+        _capture_kernel,
+        grid=(B,),
+        in_specs=field_specs + [
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, H, wide), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, wide), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, wide), cap.dtype),
+        interpret=interpret,
+    )(*(new[f] for f in FIELD_ORDER), offsets.astype(jnp.int32), cap)

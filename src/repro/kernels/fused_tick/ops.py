@@ -1,0 +1,36 @@
+"""Mode-gated entry points for the fused-tick capture append.
+
+`fused_capture_core` is the un-jitted composable form the serving step
+program inlines (`launch/serving/programs._step_program(capture=True)`
+traces it inside its shard_map core, so the whole tick — K-step scan +
+capture append — is one dispatched program).  `fused_capture` is the
+standalone jitted op for tests and benchmarks.  Mode routes through
+`kernels/dispatch.py`: "ref" is the jnp oracle (what CPU serving runs —
+bitwise the historical two-program path), Pallas modes run the kernel
+(bitwise too: the body is pure data movement).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import dispatch
+from repro.kernels.fused_tick.kernel import fused_capture_pallas
+from repro.kernels.fused_tick.ref import fused_capture_ref
+
+
+def fused_capture_core(cap, new, offsets, mode: str):
+    """Un-jitted core: `mode` must already be resolved (static under the
+    caller's trace)."""
+    if mode == "ref":
+        return fused_capture_ref(cap, new, offsets)
+    return fused_capture_pallas(cap, new, offsets,
+                                interpret=dispatch.interpret_flag(mode))
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def fused_capture(cap, new, offsets, *, mode: str | None = None):
+    """cap [B, H, wide]; new: dict of [K, B, d_f] transition-view fields;
+    offsets [B] -> updated cap (rows [off, off+K) per slot)."""
+    return fused_capture_core(cap, new, offsets, dispatch.resolve(mode))

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused-tick capture append.
+
+The serving tick's tail is pure data movement: pack the six wide
+transition fields (`core.replay.WIDE_FIELDS` order) of a `[K, B, ...]`
+tick stack into one `[B, K, wide]` operand and append it into each
+slot's `[H, wide]` capture rows at that slot's episode offset.  This is
+the historical `launch/serving/programs._capture_write_core` body,
+hoisted here so the Pallas kernel and the serving program share one
+reference (the kernel is bitwise against it: both are copies).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# the packing order of the capture feature axis — must match
+# core.replay.WIDE_FIELDS (replay.py slices the columns back out)
+FIELD_ORDER = ("obs", "next_obs", "h_a", "c_a", "h_q", "c_q")
+
+
+def fused_capture_ref(cap, new, offsets):
+    """cap [B, H, wide]; new: dict of [K, B, d_f] wide fields; offsets
+    [B] int32 -> cap with rows [off, off+K) of each slot replaced."""
+    packed = jnp.concatenate([new[f] for f in FIELD_ORDER],
+                             axis=-1)           # [K, B, wide]
+    packed = jnp.moveaxis(packed, 0, 1)         # [B, K, wide]
+
+    def one(b, n_, off):
+        return jax.lax.dynamic_update_slice(b, n_, (off, 0))
+
+    return jax.vmap(one)(cap, packed, offsets)

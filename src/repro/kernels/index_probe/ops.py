@@ -3,7 +3,17 @@ model-routing dispatch (query -> tile grouping) that precedes the kernel.
 
 `batched_lookup` is the end-to-end op: (sorted keys, queries) -> global
 predecessor ranks, using a linear root model + capacity-grouped tile
-dispatch + the Pallas in-VMEM bisection kernel.
+dispatch + the Pallas in-VMEM bisection kernel.  Execution mode
+(compiled / interpret / jnp ref) routes through `kernels/dispatch.py` —
+``mode=None`` defers to the process-wide resolution, so CPU callers get
+the bitwise jnp reference and accelerator callers the compiled kernel
+without any per-callsite flags.
+
+`predecessor_positions` is the env-facing wrapper the index simulators'
+``run_reads`` hot paths call: predecessor *positions* (clipped rank-1)
+with a drop-free capacity so Pallas modes are exact — numerically equal
+to ``searchsorted(side="right") - 1`` on every input
+(tests/test_kernels.py asserts the parity property-based).
 """
 from __future__ import annotations
 
@@ -12,20 +22,23 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.index_probe.kernel import probe_pallas
 from repro.kernels.index_probe.ref import probe_ref
 
 
-@partial(jax.jit, static_argnames=("tile", "qcap", "use_pallas", "interpret"))
+@partial(jax.jit, static_argnames=("tile", "qcap", "mode"))
 def batched_lookup(keys: jax.Array, queries: jax.Array, tile: int = 512,
-                   qcap: int = 0, use_pallas: bool = True,
-                   interpret: bool = True):
+                   qcap: int = 0, mode: str | None = None):
     """keys [n] sorted (n % tile == 0); queries [m].
 
     Returns (ranks [m] int32, dropped [m] bool).  `dropped` marks queries
     beyond a tile's query capacity (retried by the caller -- same contract
-    as MoE capacity dispatch).
+    as MoE capacity dispatch).  `mode` is a `kernels.dispatch` mode
+    (None/"auto" -> the process default; resolution is process-cached, so
+    the static jit key stays stable).
     """
+    mode = dispatch.resolve(mode)
     n = keys.shape[0]
     m = queries.shape[0]
     assert n % tile == 0
@@ -57,13 +70,13 @@ def batched_lookup(keys: jax.Array, queries: jax.Array, tile: int = 512,
     v_grouped = v_grouped.at[t_sorted, safe_pos].max(
         keep.astype(jnp.int32), mode="drop")
 
-    if use_pallas:
-        pos = probe_pallas(key_tiles.astype(jnp.float32),
-                           q_grouped.astype(jnp.float32), v_grouped,
-                           interpret=interpret)
-    else:
+    if mode == "ref":
         pos = probe_ref(key_tiles.astype(jnp.float32),
                         q_grouped.astype(jnp.float32), v_grouped > 0)
+    else:
+        pos = probe_pallas(key_tiles.astype(jnp.float32),
+                           q_grouped.astype(jnp.float32), v_grouped,
+                           interpret=dispatch.interpret_flag(mode))
 
     # gather back to query order: global rank = tile_start + local rank
     # (dropped entries read a clamped slot; `keep` masks them to -1 below)
@@ -73,3 +86,35 @@ def batched_lookup(keys: jax.Array, queries: jax.Array, tile: int = 512,
         jnp.where(keep, global_rank, -1))
     dropped = jnp.zeros((m,), bool).at[order].set(~keep)
     return ranks, dropped
+
+
+def _auto_tile(n: int, cap: int = 512) -> int | None:
+    """Largest power-of-two divisor of n, capped at `cap` — the key-tile
+    size the kernel grids over.  None when n has no usable pow2 divisor
+    (odd/tiny arrays fall back to the jnp reference)."""
+    t = n & -n                                  # largest pow2 divisor
+    t = min(t, cap)
+    return t if t >= 8 else None
+
+
+def predecessor_positions(keys: jax.Array, queries: jax.Array,
+                          kernel=None) -> jax.Array:
+    """Predecessor positions clip(#(keys <= q) - 1, 0, n-1) — the probe
+    at the bottom of every `run_reads` hot path.
+
+    `kernel` is a `dispatch.KernelConfig` (None -> defaults).  Pallas
+    modes route through `batched_lookup` with a drop-free capacity
+    (qcap=m: no query can overflow its tile group, so ranks are exact —
+    no retry path in the env) and are numerically equal to the
+    searchsorted reference; "ref" mode *is* the searchsorted reference.
+    """
+    n = keys.shape[0]
+    kcfg = kernel if kernel is not None else dispatch.KernelConfig()
+    mode = kcfg.resolved() if kcfg.probe_reads else "ref"
+    tile = kcfg.probe_tile or _auto_tile(n)
+    if mode == "ref" or tile is None or n % tile != 0:
+        rank = jnp.searchsorted(keys, queries, side="right")
+    else:
+        rank, _ = batched_lookup(keys, queries, tile=tile,
+                                 qcap=queries.shape[0], mode=mode)
+    return jnp.clip(rank - 1, 0, n - 1)

@@ -1,19 +1,23 @@
-"""Jitted wrapper for the selective-scan kernel."""
+"""Jitted wrapper for the selective-scan kernel.  Execution mode
+(compiled / interpret / jnp ref) routes through `kernels/dispatch.py`;
+``mode=None`` defers to the process default."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
+from repro.kernels import dispatch
 from repro.kernels.mamba_scan.kernel import selective_scan
 from repro.kernels.mamba_scan.ref import selective_scan_ref
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "interpret", "chunk",
-                                   "di_block"))
-def scan(u, dt, b_mat, c_mat, a, *, use_pallas: bool = True,
-         interpret: bool = True, chunk: int = 256, di_block: int = 256):
-    if use_pallas:
-        return selective_scan(u, dt, b_mat, c_mat, a, chunk=chunk,
-                              di_block=di_block, interpret=interpret)
-    return selective_scan_ref(u, dt, b_mat, c_mat, a)
+@partial(jax.jit, static_argnames=("mode", "chunk", "di_block"))
+def scan(u, dt, b_mat, c_mat, a, *, mode: str | None = None,
+         chunk: int = 256, di_block: int = 256):
+    mode = dispatch.resolve(mode)
+    if mode == "ref":
+        return selective_scan_ref(u, dt, b_mat, c_mat, a)
+    return selective_scan(u, dt, b_mat, c_mat, a, chunk=chunk,
+                          di_block=di_block,
+                          interpret=dispatch.interpret_flag(mode))

@@ -44,11 +44,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+from repro.kernels.dispatch import KernelConfig
 from repro.launch.serving.fleet import FleetConfig
 from repro.launch.serving.health import HealthConfig
 from repro.launch.serving.o2_runtime import O2ServiceConfig
 
-__all__ = ["FleetConfig", "ServeConfig", "SwapConfig",
+__all__ = ["FleetConfig", "KernelConfig", "ServeConfig", "SwapConfig",
            "config_from_legacy", "LEGACY_KWARGS"]
 from repro.launch.serving.scheduler import SlotPolicy
 from repro.launch.serving.slo import SLOConfig
@@ -132,6 +133,13 @@ class ServeConfig:
     # Enabled by default: the guards are read-only on healthy paths, so
     # every parity guarantee holds with them on
     health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
+    # kernel execution posture (kernels/dispatch.py): threaded into every
+    # pool's and tenant's EnvConfig, so the Pallas probe gate and the
+    # fused-tick capture follow one config for the whole service.  The
+    # default resolves to the bitwise jnp reference on CPU and the
+    # compiled kernels on accelerators; `fused_tick` (default on) fuses
+    # the capture append into the step program in every mode
+    kernel: KernelConfig = dataclasses.field(default_factory=KernelConfig)
 
     def __post_init__(self):
         if self.slots < 1:

@@ -105,7 +105,7 @@ class _TenantO2:
     def __init__(self, tuner, svc_cfg: O2ServiceConfig, annex=None,
                  ring_device=None, baseline_window: int = 32,
                  guard: HealthGuard | None = None,
-                 index_type: str | None = None):
+                 index_type: str | None = None, kernel=None):
         self.cfg = svc_cfg.o2
         self.guard = guard
         self.index_type = (index_type if index_type is not None
@@ -114,6 +114,11 @@ class _TenantO2:
         self.ddpg_cfg = tuner.cfg.ddpg
         self.et_cfg = tuner.cfg.et_cfg()
         self.env_cfg = tuner.cfg.env_cfg()
+        if kernel is not None:
+            # the service's kernel posture (ServeConfig.kernel): keeps the
+            # tenant's env config — and therefore every assessment program
+            # key — aligned with the pools it serves
+            self.env_cfg = dataclasses.replace(self.env_cfg, kernel=kernel)
         self.annex = annex
         self.monitor = DivergenceMonitor(self.cfg)
         lazy = svc_cfg.fleet.enabled
@@ -469,7 +474,7 @@ class O2Runtime:
     def __init__(self, agents: dict, svc_cfg: O2ServiceConfig, pools: dict,
                  topology: ServingTopology, horizon_cap: int,
                  max_assess_width: int, swap_cfg=None, clock=None,
-                 health_cfg: HealthConfig | None = None):
+                 health_cfg: HealthConfig | None = None, kernel=None):
         self.cfg = svc_cfg
         if swap_cfg is None:
             # lazy: config.py imports O2ServiceConfig from this module
@@ -496,7 +501,7 @@ class O2Runtime:
             it: _TenantO2(tuner, svc_cfg, annex=self.annex,
                           ring_device=topology.ring.device(),
                           baseline_window=swap_cfg.baseline_window,
-                          guard=self.health, index_type=it)
+                          guard=self.health, index_type=it, kernel=kernel)
             for it, tuner in agents.items()}
         # tier bookkeeping: tenants holding any device memory (hot/warm)
         # — the only ones the per-tick aging walk visits, so a mostly-

@@ -186,6 +186,18 @@ class _SlotPool:
         self.lane_params = None
 
     # ----------------------------------------------------------- capture
+    def ensure_cap(self):
+        """The pool's `[B, H, wide]` capture buffer, lazily allocated on
+        the pool's slice.  Shared by the fused step program (which takes
+        it as an operand) and the standalone `_capture_write` fallback."""
+        if self.cap is None:
+            self.cap = jax.device_put(
+                jnp.zeros((self.slots, self.env_cfg.episode_len,
+                           wide_dim(self.net_cfg.obs_dim,
+                                    self.net_cfg.lstm_hidden)),
+                          jnp.float32), self.sharded)
+        return self.cap
+
     def capture_tick(self, out: dict):
         """Append this tick's `[K, B, ...]` transition view into the
         capture buffers (on the serving mesh, next to their producer and
@@ -193,14 +205,9 @@ class _SlotPool:
         Called after the tick's narrow-field fetch — the serving queue is
         drained then, so the donated in-place append costs its own
         microseconds, not a wait — and before `collect` advances
-        `steps_taken`."""
-        if self.cap is None:
-            self.cap = jax.device_put(
-                jnp.zeros((self.slots, self.env_cfg.episode_len,
-                           wide_dim(self.net_cfg.obs_dim,
-                                    self.net_cfg.lstm_hidden)),
-                          jnp.float32), self.sharded)
-        self.cap = _capture_write(self.cap, transition_view(out),
+        `steps_taken`.  The fused-tick path (`KernelConfig.fused_tick`)
+        bypasses this: its step program appends in the same dispatch."""
+        self.cap = _capture_write(self.ensure_cap(), transition_view(out),
                                   self.steps_taken.astype(np.int32))
 
     # --------------------------------------------------------- lifecycle

@@ -39,9 +39,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import networks as nets
-from repro.core.etmdp import batched_episode_scan
+from repro.core.etmdp import batched_episode_scan, transition_view
 from repro.core.parallel import mapped_reset
 from repro.core.replay import donate_argnums
+from repro.kernels.fused_tick.ops import fused_capture_core
+from repro.kernels.fused_tick.ref import fused_capture_ref
 from repro.launch.serving.topology import DeviceSlice, _slice_mesh
 from repro.runtime.mesh_utils import shard_map_compat
 
@@ -76,7 +78,7 @@ def _mesh_for(device_ids: tuple):
 
 @lru_cache(maxsize=None)
 def _step_program(slice_: DeviceSlice, net_cfg, env_cfg, et_cfg, k: int,
-                  per_lane: bool = False):
+                  per_lane: bool = False, capture: bool = False):
     """K-step slot program: scan over K ticks of the bitwise-stable
     one-tick map body, lanes sharded over the slice.  The carry is
     donated — every caller rebinds it to the program's output, and the
@@ -89,31 +91,52 @@ def _step_program(slice_: DeviceSlice, net_cfg, env_cfg, et_cfg, k: int,
     a *pure buffer update* relative to this resident program.  The lane
     math is the same mapped body either way (`batched_episode_scan_lanes`
     maps params instead of closing over them), so control lanes stay
-    bitwise-equal to the shared-params program.  Both variants live in
+    bitwise-equal to the shared-params program.  All variants live in
     this one lru cache: `programs_resident` counts them together, which
     is what lets tests assert a whole canary→promote/rollback cycle
-    binds zero new programs after warmup."""
+    binds zero new programs after warmup.
+
+    `capture=True` is the fused-tick variant: the program takes the
+    pool's `[B, H, wide]` capture buffer and `[B]` pre-tick offsets as
+    extra operands and appends the tick's transition view in place
+    (`kernels/fused_tick`), so one dispatch covers scan + capture — no
+    `[K, B, wide]` intermediate crosses a program boundary per tick.
+    The append is pure data movement (bitwise the historical
+    `_capture_write` program in every kernel mode), so serving results
+    and ring contents are unchanged; the capture-tail kernel mode
+    follows `env_cfg.kernel` like the read probes inside the scan."""
     mesh = slice_.mesh()
     ax = slice_.axis
 
     if per_lane:
         from repro.core.etmdp import batched_episode_scan_lanes
 
-        def core(p, c, n):
+        def scan_core(p, c, n):
             return batched_episode_scan_lanes(p, c, n, k, net_cfg,
                                               env_cfg, et_cfg, False)
+        p_spec = P(ax)
+    else:
+        def scan_core(p, c, n):
+            return batched_episode_scan(p, c, n, k, net_cfg, env_cfg,
+                                        et_cfg, False)
+        p_spec = P()
+
+    if capture:
+        kmode = env_cfg.kernel.resolved()
+
+        def core(p, c, n, cap, off):
+            c2, out = scan_core(p, c, n)
+            cap2 = fused_capture_core(cap, transition_view(out), off,
+                                      kmode)
+            return c2, out, cap2
 
         return jax.jit(shard_map_compat(
-            core, mesh, in_specs=(P(ax), P(ax), P(ax)),
-            out_specs=(P(ax), P(None, ax))),
-            donate_argnums=donate_argnums(1))
-
-    def core(p, c, n):
-        return batched_episode_scan(p, c, n, k, net_cfg, env_cfg, et_cfg,
-                                    False)
+            core, mesh, in_specs=(p_spec, P(ax), P(ax), P(ax), P(ax)),
+            out_specs=(P(ax), P(None, ax), P(ax))),
+            donate_argnums=donate_argnums(1, 3))
 
     return jax.jit(shard_map_compat(
-        core, mesh, in_specs=(P(), P(ax), P(ax)),
+        scan_core, mesh, in_specs=(p_spec, P(ax), P(ax)),
         out_specs=(P(ax), P(None, ax))),
         donate_argnums=donate_argnums(1))
 
@@ -197,22 +220,14 @@ def _extract_episode_program(slice_: DeviceSlice):
     return jax.jit(_extract_episode_core, out_shardings=slice_.replicated())
 
 
-def _capture_write_core(cap, new, offsets):
-    """Append one tick's transition view into the `[B, H, wide]` packed
-    capture buffer at each slot's episode offset.  The six wide fields
-    pack into one feature axis inside the program (`WIDE_FIELDS` order),
-    so the whole capture path moves one operand per program.  Pure data
-    movement (offsets are array inputs): compiles once per (K, shape)
-    pair and never re-traces on admissions or swaps."""
-    packed = jnp.concatenate(
-        [new[f] for f in ("obs", "next_obs", "h_a", "c_a", "h_q", "c_q")],
-        axis=-1)                                # [K, B, wide]
-    packed = jnp.moveaxis(packed, 0, 1)         # [B, K, wide]
-
-    def one(b, n_, off):
-        return jax.lax.dynamic_update_slice(b, n_, (off, 0))
-
-    return jax.vmap(one)(cap, packed, offsets)
+# Append one tick's transition view into the `[B, H, wide]` packed
+# capture buffer at each slot's episode offset.  The body now lives in
+# `kernels/fused_tick/ref.py` (the fused step program's bitwise oracle);
+# this standalone program is the unfused fallback when a pool runs with
+# `KernelConfig(fused_tick=False)`.  Pure data movement (offsets are
+# array inputs): compiles once per (K, shape) pair and never re-traces
+# on admissions or swaps.
+_capture_write_core = fused_capture_ref
 
 
 @lru_cache(maxsize=None)

@@ -24,6 +24,7 @@ pool resizes) are carried by the layers, not re-implemented here.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 import warnings
 from collections import deque
@@ -135,7 +136,7 @@ class TuningService:
                 horizon_cap=self.horizon_cap,
                 max_assess_width=2 * self.slots,
                 swap_cfg=self.swap_cfg, clock=self.clock,
-                health_cfg=config.health)
+                health_cfg=config.health, kernel=config.kernel)
         self.scheduler = Scheduler(self.policy,
                                    strict_order=(self.o2.enabled
                                                  and self.o2.strict_order))
@@ -269,6 +270,10 @@ class TuningService:
         if pk not in self.pools:
             tuner = self.agents[req.index_type]
             env_cfg = tuner.cfg.env_cfg().with_episode_len(self.horizon_cap)
+            # the service's kernel posture rides the pool's env config:
+            # frozen dataclasses hash by value, so the default posture
+            # keys the same resident programs as the serial path
+            env_cfg = dataclasses.replace(env_cfg, kernel=self.config.kernel)
             # under O2, pools serve the tenant's (possibly already swapped)
             # online model rather than the agent's frozen pretrained state
             # (`online_params` — a cold fleet tenant serves its seed tree
@@ -312,10 +317,16 @@ class TuningService:
         return sorted(s for s in sizes if s % nd == 0)
 
     # --------------------------------------------------------- programs
+    def _fused(self, pool: _SlotPool) -> bool:
+        """Whether this pool's serving tick runs the fused-tick step
+        variant (scan + capture append in one program)."""
+        return pool.capture and self.config.kernel.fused_tick
+
     @staticmethod
     def _step_key(pk: tuple, pool: _SlotPool, k: int,
-                  per_lane: bool) -> tuple:
-        return ("step-lanes" if per_lane else "step", pk, pool.slots, k)
+                  per_lane: bool, capture: bool) -> tuple:
+        return ("step-lanes" if per_lane else "step", pk, pool.slots, k,
+                capture)
 
     def _pool_step_program(self, pk: tuple, pool: _SlotPool, k: int,
                            per_lane: bool = False):
@@ -324,14 +335,17 @@ class TuningService:
         streams — and successive service instances, and pools returning
         to a previously-served width — alternate between resident
         executables, never re-tracing.  `per_lane` selects the canary
-        variant (params carry a leading slot axis); both variants share
-        `_step_program`'s lru cache."""
-        prog_key = self._step_key(pk, pool, k, per_lane)
+        variant (params carry a leading slot axis); the fused-capture
+        variant is derived here from the pool + kernel posture so every
+        caller (pre-binds and ticks) agrees on the key.  All variants
+        share `_step_program`'s lru cache."""
+        capture = self._fused(pool)
+        prog_key = self._step_key(pk, pool, k, per_lane, capture)
         if prog_key not in self._programs:
             self.program_misses += 1
             self._programs[prog_key] = _step_program(
                 pool.slice, pool.net_cfg, pool.env_cfg, pool.et_cfg, k,
-                per_lane=per_lane)
+                per_lane=per_lane, capture=capture)
         else:
             self.program_hits += 1
         return self._programs[prog_key]
@@ -523,15 +537,26 @@ class TuningService:
             # variant with the pool's mixed params tree — same resident
             # program cache, zero re-traces (pre-bound at pool creation)
             canary = pool.lane_params is not None
+            fused = self._fused(pool)
             # a first-use bind traces/compiles inside the timed window;
             # that sample would poison the EDF feasibility estimate, so
             # only warm ticks feed it
-            warm = self._step_key(pk, pool, k, canary) in self._programs
+            warm = self._step_key(pk, pool, k, canary,
+                                  fused) in self._programs
             program = self._pool_step_program(pk, pool, k,
                                               per_lane=canary)
-            pool.carry, out = program(
-                pool.lane_params if canary else pool.params,
-                pool.carry, pool.noise_dev())
+            if fused:
+                # fused tick: the capture append rides the step dispatch
+                # (offsets are the pre-tick step counts; collect()
+                # advances them after), so no second program runs below
+                pool.carry, out, pool.cap = program(
+                    pool.lane_params if canary else pool.params,
+                    pool.carry, pool.noise_dev(), pool.ensure_cap(),
+                    pool.steps_taken.astype(np.int32))
+            else:
+                pool.carry, out = program(
+                    pool.lane_params if canary else pool.params,
+                    pool.carry, pool.noise_dev())
             # only the narrow fields the serving loop reads cross to the
             # host — the same five the frozen service transfers
             fields = ["reward", "runtime_ns", "action", "cost", "early"]
@@ -542,10 +567,10 @@ class TuningService:
                 self.scheduler.note_tick(
                     k, self.clock() - t_tick,
                     in_trial=self._in_trial(pk[0]))
-            if pool.capture:
-                # wide fields stay on device: append them to the capture
-                # buffers (the view is materialized now, so the hop is a
-                # pure copy) before collect() advances offsets
+            if pool.capture and not fused:
+                # unfused fallback (KernelConfig(fused_tick=False)): wide
+                # fields stay on device, appended by the standalone
+                # capture program before collect() advances offsets
                 t0 = time.perf_counter()
                 pool.capture_tick(out)
                 self.o2rt.phase_ms["capture"] += \

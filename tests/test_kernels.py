@@ -9,10 +9,21 @@ from _hypothesis_compat import given, settings, st
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.index_probe.kernel import probe_pallas
-from repro.kernels.index_probe.ops import batched_lookup
+from repro.kernels.index_probe.ops import (batched_lookup,
+                                           predecessor_positions)
+from repro.kernels.dispatch import KernelConfig
 from repro.kernels.index_probe.ref import probe_ref
 from repro.kernels.mamba_scan.kernel import selective_scan
 from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+# compiled Pallas rows only run where a compiled backend exists; on CPU
+# CI they skip-mark (the interpret rows execute the same kernel body)
+requires_accel = pytest.mark.skipif(
+    jax.default_backend() not in ("gpu", "tpu"),
+    reason="compiled Pallas path needs an accelerator backend")
+
+MODES = ["ref", "interpret",
+         pytest.param("compiled", marks=requires_accel)]
 
 
 # ------------------------------------------------------------ index probe
@@ -47,7 +58,8 @@ def test_batched_lookup_end_to_end(seed, tile):
     n = 8 * tile
     keys = jnp.sort(jax.random.uniform(key, (n,)))
     queries = jax.random.uniform(jax.random.fold_in(key, 1), (64,))
-    ranks, dropped = batched_lookup(keys, queries, tile=tile, qcap=64)
+    ranks, dropped = batched_lookup(keys, queries, tile=tile, qcap=64,
+                                    mode="interpret")
     want = jnp.searchsorted(keys, queries, side="right").astype(jnp.int32)
     kept = ~dropped
     np.testing.assert_array_equal(np.asarray(ranks)[np.asarray(kept)],
@@ -132,7 +144,8 @@ def test_batched_lookup_capacity_overflow_flags_dropped(rng_key):
     keys = jnp.sort(jax.random.uniform(rng_key, (8 * tile,)))
     # cram 32 queries into tile 0's key range with qcap=4 -> overflow
     queries = jnp.linspace(float(keys[1]), float(keys[tile - 2]), 32)
-    ranks, dropped = batched_lookup(keys, queries, tile=tile, qcap=4)
+    ranks, dropped = batched_lookup(keys, queries, tile=tile, qcap=4,
+                                    mode="interpret")
     ranks, dropped = np.asarray(ranks), np.asarray(dropped)
     assert dropped.sum() == 32 - 4          # exactly qcap survive
     assert np.all(ranks[dropped] == -1)
@@ -146,14 +159,73 @@ def test_batched_lookup_capacity_retry_recovers(rng_key):
     tile = 128
     keys = jnp.sort(jax.random.uniform(rng_key, (8 * tile,)))
     queries = jnp.linspace(float(keys[1]), float(keys[tile - 2]), 32)
-    _, dropped = batched_lookup(keys, queries, tile=tile, qcap=4)
+    _, dropped = batched_lookup(keys, queries, tile=tile, qcap=4,
+                                mode="interpret")
     assert bool(np.asarray(dropped).any())
     # retry the same batch with ample capacity
-    ranks2, dropped2 = batched_lookup(keys, queries, tile=tile, qcap=32)
+    ranks2, dropped2 = batched_lookup(keys, queries, tile=tile, qcap=32,
+                                      mode="interpret")
     assert not bool(np.asarray(dropped2).any())
     ref_ranks, ref_dropped = batched_lookup(keys, queries, tile=tile,
-                                            qcap=32, use_pallas=False)
+                                            qcap=32, mode="ref")
     assert not bool(np.asarray(ref_dropped).any())
     np.testing.assert_array_equal(np.asarray(ranks2), np.asarray(ref_ranks))
     want = np.asarray(jnp.searchsorted(keys, queries, side="right"))
     np.testing.assert_array_equal(np.asarray(ranks2), want)
+
+
+# ------------------------------------- tri-mode dispatch parity (ISSUE 10)
+@pytest.mark.parametrize("mode", MODES)
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([64, 128, 256]),
+       st.sampled_from(["float32", "float64"]))
+def test_batched_lookup_mode_parity(mode, seed, tile, dtype):
+    """Every execution mode agrees with searchsorted on duplicate-heavy
+    keys and out-of-range queries, across tiles and dtypes."""
+    key = jax.random.PRNGKey(seed)
+    n = 8 * tile
+    # integer-valued keys -> runs of duplicates, some spanning tiles
+    keys = jnp.sort(jax.random.randint(key, (n,), 0, n // 4)
+                    ).astype(dtype)
+    k2 = jax.random.fold_in(key, 1)
+    # queries stretched past both ends of the key range
+    queries = (jax.random.uniform(k2, (96,), jnp.float32)
+               * (n // 4) * 1.5 - (n // 8)).astype(dtype)
+    ranks, dropped = batched_lookup(keys, queries, tile=tile,
+                                    qcap=queries.shape[0], mode=mode)
+    assert not bool(np.asarray(dropped).any())   # qcap=m is drop-free
+    want = jnp.searchsorted(keys, queries, side="right").astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(ranks), np.asarray(want))
+
+
+@pytest.mark.parametrize("mode", MODES)
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([512, 768, 2048]))
+def test_predecessor_positions_mode_parity(mode, seed, n):
+    """The env-facing probe equals clip(searchsorted-1) in every mode —
+    including n=768 where the auto tile is 256, not the 512 cap."""
+    key = jax.random.PRNGKey(seed)
+    keys = jnp.sort(jax.random.randint(key, (n,), 0, n // 2)
+                    ).astype(jnp.float32)
+    q = (jax.random.uniform(jax.random.fold_in(key, 1), (64,))
+         * (n // 2) * 1.5 - (n // 8))
+    got = predecessor_positions(keys, q, kernel=KernelConfig(mode=mode))
+    want = jnp.clip(jnp.searchsorted(keys, q, side="right") - 1, 0, n - 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_predecessor_positions_ragged_falls_back(rng_key):
+    """Array lengths with no usable pow2 divisor take the searchsorted
+    fallback (still exact) instead of asserting inside batched_lookup."""
+    keys = jnp.sort(jax.random.uniform(rng_key, (1001,)))   # odd length
+    q = jax.random.uniform(jax.random.fold_in(rng_key, 1), (32,))
+    got = predecessor_positions(keys, q, kernel=KernelConfig(mode="interpret"))
+    want = jnp.clip(jnp.searchsorted(keys, q, side="right") - 1, 0, 1000)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # probe_reads=False forces the reference regardless of mode
+    got_off = predecessor_positions(
+        jnp.sort(jax.random.uniform(rng_key, (1024,))), q,
+        kernel=KernelConfig(mode="interpret", probe_reads=False))
+    keys2 = jnp.sort(jax.random.uniform(rng_key, (1024,)))
+    want2 = jnp.clip(jnp.searchsorted(keys2, q, side="right") - 1, 0, 1023)
+    np.testing.assert_array_equal(np.asarray(got_off), np.asarray(want2))
